@@ -1,0 +1,42 @@
+"""Regenerate the generated tables inside EXPERIMENTS.md from artifacts.
+
+  PYTHONPATH=src:. python benchmarks/build_experiments_tables.py
+
+Replaces the <!-- ROOFLINE-TABLE --> and <!-- DRYRUN-MULTIPOD-TABLE -->
+markers (idempotent: the generated block is fenced by marker comments).
+"""
+import os
+import re
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from benchmarks.roofline import dryrun_summary, table  # noqa: E402
+
+EXP = os.path.join(os.path.dirname(__file__), "..", "EXPERIMENTS.md")
+
+
+def replace_block(text: str, marker: str, content: str) -> str:
+    begin = f"<!-- {marker} -->"
+    end = f"<!-- /{marker} -->"
+    block = f"{begin}\n{content}\n{end}"
+    if end in text:
+        return re.sub(re.escape(begin) + r".*?" + re.escape(end), block,
+                      text, flags=re.S)
+    return text.replace(begin, block)
+
+
+def main():
+    with open(EXP) as f:
+        text = f.read()
+    text = replace_block(text, "ROOFLINE-TABLE", table("pod", "gspmd"))
+    text = replace_block(text, "DRYRUN-MULTIPOD-TABLE",
+                         dryrun_summary("multipod"))
+    with open(EXP, "w") as f:
+        f.write(text)
+    print("EXPERIMENTS.md tables regenerated")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,104 @@
+"""Shared benchmark plumbing.
+
+The paper's figures sweep {message size} x {connection count} over three
+stacks (sockets / libvma / hadroNIO). Our stacks are the TAC modes; the
+"connections" axis is the channel count (independent in-flight slice
+collectives); message sizes are kept literally (16 B / 1 KiB / 64 KiB)
+plus TPU-scale points (1 MiB / 4 MiB).
+
+Because this container is CPU-only, every benchmark reports TWO result
+kinds per point:
+
+* measured — wall-clock on the 8-virtual-device host mesh (relative
+  numbers: scaling shape, not absolute TPU performance), and
+* derived — per-op collective statistics parsed from the compiled HLO
+  (op count, bytes) + the v5e analytic time model from hlo_analysis
+  (these are hardware-grounded and feed EXPERIMENTS.md).
+
+CSV schema (benchmarks/run.py): benchmark,figure,mode,msg_bytes,channels,
+metric,value,unit,kind.
+"""
+from __future__ import annotations
+
+import csv
+import dataclasses
+import io
+import os
+import time
+from typing import Callable, Iterable
+
+import jax
+import numpy as np
+
+from repro.launch import hlo_analysis as hlo
+
+N_DEVICES = 8     # virtual host devices for measured numbers
+
+
+def ensure_devices() -> int:
+    """Must be called before jax initializes (benchmarks/run.py does)."""
+    flags = os.environ.get("XLA_FLAGS", "")
+    if "host_platform_device_count" not in flags:
+        os.environ["XLA_FLAGS"] = (
+            f"--xla_force_host_platform_device_count={N_DEVICES} " + flags)
+    return N_DEVICES
+
+
+@dataclasses.dataclass
+class Row:
+    benchmark: str
+    figure: str
+    mode: str
+    msg_bytes: int
+    channels: int
+    metric: str
+    value: float
+    unit: str
+    kind: str          # measured | derived
+
+    def as_list(self):
+        return [self.benchmark, self.figure, self.mode, self.msg_bytes,
+                self.channels, self.metric,
+                f"{self.value:.6g}", self.unit, self.kind]
+
+
+HEADER = ["benchmark", "figure", "mode", "msg_bytes", "channels", "metric",
+          "value", "unit", "kind"]
+
+
+def write_rows(rows: Iterable[Row], path: str | None):
+    out = io.StringIO()
+    w = csv.writer(out)
+    w.writerow(HEADER)
+    for r in rows:
+        w.writerow(r.as_list())
+    text = out.getvalue()
+    if path:
+        with open(path, "w") as f:
+            f.write(text)
+    return text
+
+
+def timeit(fn: Callable[[], object], *, warmup: int = 2, iters: int = 10
+           ) -> float:
+    """Median wall-clock seconds of fn() (which must block)."""
+    for _ in range(warmup):
+        fn()
+    ts = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        fn()
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts))
+
+
+def block(tree):
+    for leaf in jax.tree.leaves(tree):
+        leaf.block_until_ready()
+
+
+def derived_collective_time(stats: hlo.CollectiveStats, n_ops_latency_us:
+                            float = 3.0) -> float:
+    """v5e analytic time: per-op fixed cost + bytes over ICI bandwidth."""
+    return (stats.total_ops * n_ops_latency_us * 1e-6
+            + stats.total_bytes / hlo.ICI_BW)

@@ -1,0 +1,76 @@
+"""Figures 3/5/7 — round-trip latency vs connection count.
+
+Paper setup: ping-pong between two nodes, one thread per connection,
+message sizes 16 B / 1 KiB / 64 KiB, connections 1..16.
+
+TPU reading: one "connection" = one independent ppermute channel on the
+ring (a message to the neighbour and back = one RTT). ``channels``
+independent ping-pongs are issued in a single XLA program; the measured
+time per round trip shows how channel count degrades latency per channel
+(the paper's Fig. 3 scaling axis). Derived numbers report the per-op
+collective schedule from the compiled HLO.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from benchmarks.common import Row, block, derived_collective_time, timeit
+from repro.launch import hlo_analysis as hlo
+from repro.launch.mesh import make_mesh
+
+MSG_SIZES = [16, 1024, 64 * 1024]
+CHANNELS = [1, 2, 4, 8, 16]
+
+
+def _pingpong_fn(mesh, n_channels: int, msg_elems: int, n_dev: int):
+    perm_fwd = [(i, (i + 1) % n_dev) for i in range(n_dev)]
+    perm_bwd = [(i, (i - 1) % n_dev) for i in range(n_dev)]
+
+    def body(*xs):
+        outs = []
+        for x in xs:        # independent channels — no data deps
+            y = jax.lax.ppermute(x, "data", perm_fwd)
+            z = jax.lax.ppermute(y, "data", perm_bwd)
+            outs.append(z)
+        return tuple(outs)
+
+    f = jax.shard_map(body, mesh=mesh,
+                      in_specs=tuple([P("data", None)] * n_channels),
+                      out_specs=tuple([P("data", None)] * n_channels),
+                      check_vma=False)
+    return jax.jit(f)
+
+
+def run(mesh=None, *, msg_sizes=MSG_SIZES, channels=CHANNELS,
+        iters: int = 10):
+    if mesh is None:
+        n = len(jax.devices())
+        mesh = make_mesh((n,), ("data",))
+    n_dev = mesh.shape["data"]
+    rows = []
+    for msg in msg_sizes:
+        elems = max(1, msg // 4)
+        for ch in channels:
+            xs = tuple(jnp.zeros((n_dev, elems), jnp.float32) + i
+                       for i in range(ch))
+            fn = _pingpong_fn(mesh, ch, elems, n_dev)
+            lowered = fn.lower(*([jax.ShapeDtypeStruct((n_dev, elems),
+                                                       jnp.float32)] * ch))
+            stats = hlo.stablehlo_collective_stats(lowered.as_text())
+            t = timeit(lambda: block(fn(*xs)), iters=iters)
+            rtt_us = t * 1e6
+            rows.append(Row("latency", "fig3/5/7", "hadronio", msg, ch,
+                            "rtt", rtt_us, "us", "measured"))
+            rows.append(Row("latency", "fig3/5/7", "hadronio", msg, ch,
+                            "emitted_collective_ops", stats.total_ops,
+                            "ops", "derived"))
+            rows.append(Row("latency", "fig3/5/7", "hadronio", msg, ch,
+                            "rtt_v5e_model",
+                            derived_collective_time(stats) * 1e6 / ch,
+                            "us", "derived"))
+    return rows

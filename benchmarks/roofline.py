@@ -1,0 +1,123 @@
+"""§Roofline table generator: reads dry-run artifacts (launch/dryrun.py)
+and emits the three-term roofline per (arch x shape x mesh), dominant
+bottleneck, MODEL_FLOPS ratio, and the per-cell note (EXPERIMENTS.md)."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from benchmarks.common import Row
+
+ARTIFACTS = os.path.join(os.path.dirname(__file__), "..", "artifacts")
+
+
+def load_artifacts(pattern: str = "dryrun_*.json") -> list[dict]:
+    out = []
+    for f in sorted(glob.glob(os.path.join(ARTIFACTS, pattern))):
+        with open(f) as fh:
+            out.append(json.load(fh))
+    return out
+
+
+def run(mesh=None, **_):
+    rows = []
+    for art in load_artifacts():
+        if art.get("status") != "ok":
+            continue
+        key = f"{art['arch']}x{art['shape']}x{art['mesh']}x{art['mode']}"
+        r = art["roofline"]
+        for term in ("compute_s", "memory_s", "collective_s"):
+            rows.append(Row("roofline", key, art["mode"], 0,
+                            art["n_chips"], term, r[term], "s", "derived"))
+        ratio = art.get("useful_flops_ratio") or 0.0
+        rows.append(Row("roofline", key, art["mode"], 0, art["n_chips"],
+                        "useful_flops_ratio", ratio, "x", "derived"))
+    return rows
+
+
+def _fmt(x, digits=4):
+    if x is None:
+        return "-"
+    if x == 0:
+        return "0"
+    if x < 10 ** -digits:
+        return f"{x:.1e}"
+    return f"{x:.{digits}f}"
+
+
+def table(mesh_filter: str = "pod", mode: str = "gspmd",
+          include_skips: bool = True) -> str:
+    """Markdown §Roofline table (EXPERIMENTS.md embeds this output).
+
+    Terms per §Methodology: compute from analytic MODEL_FLOPS; memory
+    from the analytic HBM-traffic model; collective from scan-corrected
+    compiled-HLO parsing. 'useful' = MODEL_FLOPS / corrected HLO FLOPs.
+    'frac' = compute_s / max(term)s — the roofline fraction."""
+    lines = ["| arch | shape | compute s | memory s | collective s | "
+             "bottleneck | frac | useful | note |",
+             "|---|---|---|---|---|---|---|---|---|"]
+    for art in load_artifacts():
+        if art["mesh"] != mesh_filter or art["mode"] != mode:
+            continue
+        if art.get("status") == "skip":
+            if include_skips:
+                lines.append(f"| {art['arch']} | {art['shape']} | - | - | "
+                             f"- | skipped | - | - | "
+                             f"{art['reason'][:48]}... |")
+            continue
+        if art.get("status") != "ok":
+            lines.append(f"| {art['arch']} | {art['shape']} | - | - | - | "
+                         f"FAIL | - | - | {art.get('error', '')[:48]} |")
+            continue
+        r = art["roofline"]
+        ratio = art.get("useful_flops_ratio")
+        dom = max(r["compute_s"], r["memory_s"], r["collective_s"])
+        frac = r["compute_s"] / dom if dom else 0.0
+        note = ""
+        if r["bottleneck"] == "collective":
+            note = "comm-bound: cut resharding/gather traffic"
+        elif r["bottleneck"] == "memory":
+            note = "HBM-bound: fuse/cache-resident working set"
+        else:
+            note = "compute-bound: at roofline when overlapped"
+        lines.append(
+            f"| {art['arch']} | {art['shape']} | {_fmt(r['compute_s'])} | "
+            f"{_fmt(r['memory_s'])} | {_fmt(r['collective_s'])} | "
+            f"{r['bottleneck']} | {frac:.2f} | "
+            f"{_fmt(ratio, 2)} | {note} |")
+    return "\n".join(lines)
+
+
+def dryrun_summary(mesh_filter: str = "multipod") -> str:
+    """§Dry-run table: pass/fail + memory + collective schedule."""
+    lines = ["| arch | shape | status | compile s | coll ops | coll GB | "
+             "temp GB/chip |", "|---|---|---|---|---|---|---|"]
+    for art in load_artifacts():
+        if art["mesh"] != mesh_filter or art["mode"] != "gspmd":
+            continue
+        if art.get("status") == "skip":
+            lines.append(f"| {art['arch']} | {art['shape']} | skip | - | - "
+                         f"| - | - |")
+            continue
+        if art.get("status") != "ok":
+            lines.append(f"| {art['arch']} | {art['shape']} | **FAIL** | - "
+                         f"| - | - | - |")
+            continue
+        c = art["collectives"]
+        m = art["memory_analysis"]
+        lines.append(
+            f"| {art['arch']} | {art['shape']} | ok | "
+            f"{art['compile_seconds']:.0f} | {c['total_ops']} | "
+            f"{c['total_bytes']/1e9:.2f} | "
+            f"{m.get('temp_size_in_bytes', 0)/1e9:.2f} |")
+    return "\n".join(lines)
+
+
+if __name__ == "__main__":
+    import sys
+    if len(sys.argv) > 1 and sys.argv[1] == "dryrun":
+        print(dryrun_summary(sys.argv[2] if len(sys.argv) > 2
+                             else "multipod"))
+    else:
+        print(table())

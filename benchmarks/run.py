@@ -1,0 +1,51 @@
+"""Benchmark orchestrator — one function per paper table/figure.
+
+  python -m benchmarks.run                # everything, CSV to stdout
+  python -m benchmarks.run --only latency --csv bench.csv
+
+Benchmarks (see DESIGN.md §6):
+  latency     Fig. 3/5/7 — ping-pong RTT vs channels x msg size
+  throughput  Fig. 4/6/8 — aggregated-stream goodput vs channels x msg size
+  gradsync    (new) per-mode collective ops/bytes on real model grads
+  roofline    §Roofline — three-term table from the dry-run artifacts
+"""
+from benchmarks import common
+
+common.ensure_devices()        # before jax initializes
+
+import argparse                # noqa: E402
+import sys                     # noqa: E402
+import time                    # noqa: E402
+
+from benchmarks.common import write_rows   # noqa: E402
+
+BENCHES = ("latency", "throughput", "gradsync", "roofline")
+
+
+def main() -> int:
+    p = argparse.ArgumentParser(description=__doc__)
+    p.add_argument("--only", choices=BENCHES, nargs="*", default=None)
+    p.add_argument("--csv", default="", help="also write CSV here")
+    p.add_argument("--quick", action="store_true",
+                   help="fewer sweep points (CI mode)")
+    args = p.parse_args()
+
+    which = args.only or BENCHES
+    rows = []
+    for name in which:
+        t0 = time.time()
+        mod = __import__(f"benchmarks.{name}", fromlist=["run"])
+        kw = {}
+        if args.quick and name in ("latency", "throughput"):
+            kw = {"msg_sizes": [16, 1024], "channels": [1, 4], "iters": 3}
+        if args.quick and name == "gradsync":
+            kw = {"iters": 2}
+        rows.extend(mod.run(**kw))
+        print(f"# {name}: {time.time() - t0:.1f}s", file=sys.stderr)
+    text = write_rows(rows, args.csv or None)
+    print(text)
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,55 @@
+"""Quickstart: train a tiny LM with the paper's aggregated gradient sync,
+checkpoint it, and generate from it — the whole public API in ~60 lines.
+
+  PYTHONPATH=src python examples/quickstart.py
+"""
+import os
+import tempfile
+
+import jax
+import numpy as np
+
+from repro.configs.base import CommConfig, RunConfig, ShapeConfig
+from repro.configs.registry import get_config
+from repro.launch.mesh import make_mesh
+from repro.launch.train import Trainer
+from repro.serving import DecodeEngine, Request
+
+
+def main():
+    # 1. pick an assigned architecture (reduced = CPU-sized, same family)
+    cfg = get_config("qwen2-0.5b-reduced")
+    print(f"model: {cfg.name} ({cfg.param_count()/1e6:.1f}M params)")
+
+    # 2. a run config: the comm mode is the paper's technique — swap
+    #    "hadronio" for "sockets"/"vma"/"gspmd" and NOTHING else changes.
+    ckpt = tempfile.mkdtemp(prefix="quickstart_ckpt_")
+    run = RunConfig(
+        model=cfg,
+        shape=ShapeConfig("quickstart", "train", seq_len=64, global_batch=4),
+        comm=CommConfig(mode="hadronio", slice_bytes=256 * 1024,
+                        hierarchical=False),
+        lr=1e-3, total_steps=30, warmup_steps=3,
+        checkpoint_dir=ckpt, checkpoint_every=10)
+
+    # 3. train (single host; the same Trainer drives the 256-chip mesh)
+    mesh = make_mesh((len(jax.devices()),), ("data",))
+    out = Trainer(run, mesh, log_every=10).run_loop()
+    print(f"loss: {out['losses'][0]:.3f} -> {out['final_loss']:.3f}")
+    assert out["final_loss"] < out["losses"][0], "loss should decrease"
+
+    # 4. serve the trained params with batched mixed-length requests
+    params = out["state"].params
+    engine = DecodeEngine(cfg, params, max_batch=4, max_len=128)
+    results = engine.generate([
+        Request(uid=0, prompt=np.arange(5) % cfg.vocab_size, max_new=8),
+        Request(uid=1, prompt=np.arange(11) % cfg.vocab_size, max_new=8),
+    ])
+    for r in results:
+        print(f"request {r.uid}: prompt_len={r.prompt_len} -> "
+              f"{r.tokens.tolist()}")
+    print("quickstart OK")
+
+
+if __name__ == "__main__":
+    main()

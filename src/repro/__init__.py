@@ -1,0 +1,5 @@
+"""repro — hadroNIO-for-JAX: a multi-pod JAX training/serving framework
+whose communication layer implements the paper's transparent aggregated
+communication technique (see DESIGN.md)."""
+
+__version__ = "0.1.0"

@@ -1,0 +1,10 @@
+from repro.configs.base import (CommConfig, ModelConfig, MoEConfig,
+                                RunConfig, ShapeConfig, SHAPES, cells_for,
+                                cell_skip_reason, describe, reduced)
+from repro.configs.registry import ARCH_IDS, all_cells, get_config, get_shape
+
+__all__ = [
+    "ARCH_IDS", "CommConfig", "ModelConfig", "MoEConfig", "RunConfig",
+    "ShapeConfig", "SHAPES", "all_cells", "cells_for", "cell_skip_reason",
+    "describe", "get_config", "get_shape", "reduced",
+]

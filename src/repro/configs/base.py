@@ -1,0 +1,308 @@
+"""Configuration system.
+
+Every assigned architecture is a frozen dataclass instance built by one
+``src/repro/configs/<id>.py`` module. Configs are pure data: models,
+sharding, and the launcher all key off these fields. ``reduced()`` derives
+the CPU smoke-test variant of any config (same family/topology, tiny dims).
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field, replace
+from typing import Optional, Tuple
+
+# ---------------------------------------------------------------------------
+# Input shapes (assigned cells). Every arch is paired with all four; cells
+# that are inapplicable for a family are resolved by `cells_for()` below.
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class ShapeConfig:
+    name: str
+    kind: str                 # "train" | "prefill" | "decode"
+    seq_len: int
+    global_batch: int
+
+    def __post_init__(self):
+        assert self.kind in ("train", "prefill", "decode"), self.kind
+
+
+SHAPES: dict[str, ShapeConfig] = {
+    "train_4k": ShapeConfig("train_4k", "train", 4096, 256),
+    "prefill_32k": ShapeConfig("prefill_32k", "prefill", 32768, 32),
+    "decode_32k": ShapeConfig("decode_32k", "decode", 32768, 128),
+    "long_500k": ShapeConfig("long_500k", "decode", 524288, 1),
+}
+
+
+# ---------------------------------------------------------------------------
+# Model config
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class MoEConfig:
+    num_experts: int
+    top_k: int
+    # capacity factor for the one-hot dispatch path (tokens per expert =
+    # capacity_factor * tokens * top_k / num_experts). The dry-run uses the
+    # einsum dispatch which is capacity-free; this is kept for the serving
+    # batcher.
+    capacity_factor: float = 1.25
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    """Architecture hyperparameters (exact assigned numbers live in the
+    per-arch modules)."""
+
+    name: str
+    family: str               # dense | moe | ssm | hybrid | encdec | vlm
+    num_layers: int
+    d_model: int
+    num_heads: int            # 0 for attention-free families
+    num_kv_heads: int
+    d_ff: int
+    vocab_size: int
+
+    head_dim: int = 0         # 0 -> d_model // num_heads
+    qkv_bias: bool = False
+    mlp_kind: str = "swiglu"  # swiglu | gelu
+    norm_kind: str = "rmsnorm"  # rmsnorm | layernorm
+    rope_theta: float = 10_000.0
+    tie_embeddings: bool = False
+    sliding_window: int = 0   # 0 -> full attention; >0 -> SWA window
+
+    # MoE
+    moe: Optional[MoEConfig] = None
+
+    # hybrid (recurrentgemma): block pattern cycled over layers
+    block_pattern: Tuple[str, ...] = ()   # e.g. ("rglru", "rglru", "local_attn")
+    local_window: int = 2048
+    lru_width: int = 0        # 0 -> d_model
+    conv1d_width: int = 4     # temporal conv in recurrent block
+
+    # ssm (rwkv6)
+    rwkv_head_size: int = 64
+    rwkv_decay_lora: int = 64
+    rwkv_mix_lora: int = 32
+
+    # encoder-decoder (whisper): encoder depth == num_layers, plus frontend
+    # stub that feeds (batch, num_frames, d_model) embeddings.
+    encoder_layers: int = 0
+    num_frames: int = 1500
+
+    # vlm (llava): patch-embedding prefix length (anyres: 5 tiles x 576)
+    num_patches: int = 0
+
+    # numerics
+    param_dtype: str = "bfloat16"
+    compute_dtype: str = "bfloat16"
+
+    # notes for DESIGN/EXPERIMENTS provenance
+    source: str = ""
+
+    def __post_init__(self):
+        assert self.family in ("dense", "moe", "ssm", "hybrid", "encdec", "vlm")
+        if self.family == "moe":
+            assert self.moe is not None
+        if self.head_dim == 0 and self.num_heads:
+            object.__setattr__(self, "head_dim", self.d_model // self.num_heads)
+
+    # -- derived quantities -------------------------------------------------
+
+    @property
+    def attention_free(self) -> bool:
+        return self.family == "ssm"
+
+    @property
+    def sub_quadratic(self) -> bool:
+        """True if decode state is O(window) / O(1) rather than O(seq)."""
+        if self.family in ("ssm",):
+            return True
+        if self.family == "hybrid":
+            return True            # RG-LRU state + bounded local-attn window
+        return self.sliding_window > 0
+
+    def param_count(self) -> int:
+        """Analytic parameter count (used for MODEL_FLOPS and napkin math)."""
+        d, f, v, L = self.d_model, self.d_ff, self.vocab_size, self.num_layers
+        hd = self.head_dim
+        n = 0
+        # embeddings (+ untied output head)
+        n += v * d * (1 if self.tie_embeddings else 2)
+        if self.family == "ssm":
+            per = 0
+            per += 5 * d * d                      # r,k,v,g,o projections (w via lora)
+            per += d * self.rwkv_decay_lora * 2   # decay lora
+            per += 5 * (d * self.rwkv_mix_lora * 2)  # token-shift mix loras
+            per += 7 * d                          # mix biases / decay base / bonus
+            per += 2 * d * f + d * d              # channel mix k,v,r
+            per += 2 * d                          # norms
+            return n + L * per
+        att = d * (self.num_heads * hd) + d * (self.num_kv_heads * hd) * 2 \
+            + (self.num_heads * hd) * d
+        if self.qkv_bias:
+            att += self.num_heads * hd + 2 * self.num_kv_heads * hd
+        mlp = (3 if self.mlp_kind == "swiglu" else 2) * d * f
+        if self.family == "moe":
+            mlp_total = self.moe.num_experts * mlp + d * self.moe.num_experts
+        else:
+            mlp_total = mlp
+        if self.family == "hybrid":
+            lw = self.lru_width or d
+            rec = 2 * d * lw + lw * d + self.conv1d_width * lw + 3 * lw \
+                + 2 * (lw * max(lw // 8, 1))      # gates are block-diagonal LoRA-ish
+            pat = self.block_pattern or ("rglru",)
+            n_attn = sum(1 for i in range(L) if pat[i % len(pat)] == "local_attn")
+            n_rec = L - n_attn
+            return n + n_attn * (att + mlp + 2 * d) + n_rec * (rec + mlp + 2 * d)
+        per = att + mlp_total + 2 * d
+        total = n + L * per
+        if self.family == "encdec":
+            # encoder layers + decoder cross-attention
+            total += self.encoder_layers * (att + mlp + 2 * d)
+            total += L * (att + d)                # cross-attn per decoder layer
+        return total
+
+    def active_param_count(self) -> int:
+        """Active (per-token) params — differs from total only for MoE."""
+        if self.family != "moe":
+            return self.param_count()
+        d, f, L = self.d_model, self.d_ff, self.num_layers
+        mlp = 3 * d * f
+        inactive = L * (self.moe.num_experts - self.moe.top_k) * mlp
+        return self.param_count() - inactive
+
+
+@dataclass(frozen=True)
+class CommConfig:
+    """TAC — the paper's technique (see DESIGN.md §2).
+
+    mode:
+      gspmd      — pure GSPMD auto sharding; XLA owns all collectives
+                   ("the kernel network stack").
+      sockets    — explicit per-tensor psum over the DP axes
+                   (plain-sockets baseline: one op per tensor).
+      vma        — one monolithic fused psum of the whole flattened grad
+                   (libvma analogue: minimal op count, no overlap, peak mem).
+      hadronio   — gathering-write aggregation: pack into ring-buffer slices,
+                   one psum per slice (paper-faithful).
+      hadronio_rs— beyond-paper: per-slice reduce-scatter + all-gather with
+                   data-sharded (ZeRO-1) optimizer update.
+    """
+
+    mode: str = "gspmd"
+    ring_capacity_bytes: int = 256 * 1024 * 1024
+    slice_bytes: int = 4 * 1024 * 1024
+    channels: int = 4                  # in-flight slices ("connections")
+    compress: str = "none"             # none | bf16 | int8_ef
+    hierarchical: bool = True          # pod-aware two-level collectives
+
+    def __post_init__(self):
+        assert self.mode in ("gspmd", "sockets", "vma", "hadronio", "hadronio_rs")
+        assert self.compress in ("none", "bf16", "int8_ef")
+        assert self.slice_bytes > 0 and self.ring_capacity_bytes >= self.slice_bytes
+
+
+@dataclass(frozen=True)
+class RunConfig:
+    """Everything a launcher needs beyond the model itself."""
+
+    model: ModelConfig
+    shape: ShapeConfig
+    comm: CommConfig = field(default_factory=CommConfig)
+
+    # optimizer
+    lr: float = 3e-4
+    weight_decay: float = 0.1
+    beta1: float = 0.9
+    beta2: float = 0.95
+    eps: float = 1e-8
+    grad_clip: float = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 1000
+    microbatches: int = 1              # gradient accumulation
+
+    # checkpointing / fault tolerance
+    checkpoint_dir: str = ""
+    checkpoint_every: int = 100
+    keep_checkpoints: int = 3
+    async_checkpoint: bool = True
+    max_restarts: int = 100
+
+    # data
+    data_path: str = ""                # empty -> synthetic
+    data_seed: int = 0
+
+    seed: int = 0
+
+
+# ---------------------------------------------------------------------------
+# Cell applicability (DESIGN.md §5)
+# ---------------------------------------------------------------------------
+
+
+def cell_skip_reason(model: ModelConfig, shape: ShapeConfig) -> Optional[str]:
+    """Return a reason string if (model, shape) is an assigned-but-skipped
+    cell, else None. Mirrors the brief: ``long_500k`` needs sub-quadratic
+    attention; encoder-only archs have no decode step (none assigned)."""
+    if shape.name == "long_500k" and not model.sub_quadratic:
+        return ("pure full attention: 500k-token decode requires a 500k KV "
+                "cache and O(seq) attention per step — skipped per brief")
+    return None
+
+
+def cells_for(model: ModelConfig) -> list[ShapeConfig]:
+    return [s for s in SHAPES.values() if cell_skip_reason(model, s) is None]
+
+
+# ---------------------------------------------------------------------------
+# Reduced (smoke) variants — same family/topology, tiny dims.
+# ---------------------------------------------------------------------------
+
+
+def reduced(cfg: ModelConfig) -> ModelConfig:
+    """A CPU-runnable config of the same family: few layers, small width,
+    few experts, tiny vocab — exercises every code path of the family."""
+    num_heads = min(cfg.num_heads, 4) if cfg.num_heads else 0
+    num_kv = max(1, min(cfg.num_kv_heads, num_heads)) if num_heads else 0
+    kw = dict(
+        name=cfg.name + "-reduced",
+        num_layers=min(cfg.num_layers, 4 if not cfg.block_pattern else 2 * len(cfg.block_pattern)),
+        d_model=64,
+        num_heads=num_heads,
+        num_kv_heads=num_kv,
+        head_dim=16 if num_heads else 0,
+        d_ff=128,
+        vocab_size=256,
+        lru_width=64 if cfg.family == "hybrid" else 0,
+        rwkv_head_size=16,
+        rwkv_decay_lora=8,
+        rwkv_mix_lora=8,
+        encoder_layers=min(cfg.encoder_layers, 2),
+        num_frames=8,
+        num_patches=min(cfg.num_patches, 8),
+        sliding_window=min(cfg.sliding_window, 16) if cfg.sliding_window else 0,
+        local_window=16,
+        param_dtype="float32",
+        compute_dtype="float32",
+    )
+    if cfg.moe is not None:
+        # capacity_factor = num_experts makes reduced configs dropless
+        # (capacity >= tokens*k), so prefill/decode consistency is exact;
+        # full configs keep the production 1.25.
+        kw["moe"] = MoEConfig(num_experts=min(cfg.moe.num_experts, 4),
+                              top_k=min(cfg.moe.top_k, 2),
+                              capacity_factor=float(
+                                  min(cfg.moe.num_experts, 4)))
+    return replace(cfg, **kw)
+
+
+def describe(cfg: ModelConfig) -> str:
+    n = cfg.param_count()
+    a = cfg.active_param_count()
+    extra = f" (active {a/1e9:.2f}B)" if a != n else ""
+    return f"{cfg.name}: {cfg.family}, {cfg.num_layers}L d={cfg.d_model} " \
+           f"ff={cfg.d_ff} vocab={cfg.vocab_size} -> {n/1e9:.2f}B params{extra}"

@@ -1,0 +1,26 @@
+"""llava-next-mistral-7b [vlm] — 32L d_model=4096 32H (GQA kv=8) d_ff=14336
+vocab=32000 — anyres tiling. [hf:llava-hf/llava-v1.6-mistral-7b-hf; unverified]
+
+The vision frontend is a STUB per the brief: ``input_specs()`` provides
+precomputed patch embeddings (batch, num_patches, d_model) which the model
+prepends to the text-token embeddings. anyres tiling: 5 tiles x 576 patches.
+Backbone is Mistral-7B (full attention in this checkpoint lineage).
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="llava-next-mistral-7b",
+    family="vlm",
+    num_layers=32,
+    d_model=4096,
+    num_heads=32,
+    num_kv_heads=8,
+    d_ff=14336,
+    vocab_size=32000,
+    qkv_bias=False,
+    mlp_kind="swiglu",
+    norm_kind="rmsnorm",
+    rope_theta=1_000_000.0,
+    num_patches=2880,          # 5 anyres tiles x 24x24 patches
+    source="hf:llava-hf/llava-v1.6-mistral-7b-hf; unverified",
+)

@@ -1,0 +1,58 @@
+"""Architecture registry: ``--arch <id>`` resolution.
+
+Every assigned architecture (plus its reduced smoke variant) is reachable by
+name. IDs match the assignment sheet exactly.
+"""
+from __future__ import annotations
+
+import importlib
+
+from repro.configs.base import (ModelConfig, ShapeConfig, SHAPES, cells_for,
+                                cell_skip_reason, reduced, describe)
+
+# arch-id -> module name
+_ARCH_MODULES = {
+    "qwen1.5-4b": "qwen1_5_4b",
+    "starcoder2-3b": "starcoder2_3b",
+    "qwen2-0.5b": "qwen2_0_5b",
+    "qwen1.5-110b": "qwen1_5_110b",
+    "whisper-tiny": "whisper_tiny",
+    "dbrx-132b": "dbrx_132b",
+    "mixtral-8x7b": "mixtral_8x7b",
+    "llava-next-mistral-7b": "llava_next_mistral_7b",
+    "rwkv6-7b": "rwkv6_7b",
+    "recurrentgemma-9b": "recurrentgemma_9b",
+}
+
+ARCH_IDS: tuple[str, ...] = tuple(_ARCH_MODULES)
+
+
+def get_config(arch: str) -> ModelConfig:
+    """Resolve ``--arch`` ids; ``<id>-reduced`` yields the smoke variant."""
+    want_reduced = arch.endswith("-reduced")
+    base = arch[: -len("-reduced")] if want_reduced else arch
+    if base not in _ARCH_MODULES:
+        raise KeyError(
+            f"unknown arch {arch!r}; known: {', '.join(ARCH_IDS)}")
+    mod = importlib.import_module(f"repro.configs.{_ARCH_MODULES[base]}")
+    cfg: ModelConfig = mod.CONFIG
+    assert cfg.name == base, (cfg.name, base)
+    return reduced(cfg) if want_reduced else cfg
+
+
+def get_shape(name: str) -> ShapeConfig:
+    return SHAPES[name]
+
+
+def all_cells() -> list[tuple[ModelConfig, ShapeConfig, str | None]]:
+    """All 40 assigned (arch x shape) cells with skip reasons (None = runs)."""
+    out = []
+    for arch in ARCH_IDS:
+        cfg = get_config(arch)
+        for shape in SHAPES.values():
+            out.append((cfg, shape, cell_skip_reason(cfg, shape)))
+    return out
+
+
+__all__ = ["ARCH_IDS", "get_config", "get_shape", "all_cells", "cells_for",
+           "cell_skip_reason", "reduced", "describe", "SHAPES"]

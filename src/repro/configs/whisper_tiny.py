@@ -1,0 +1,26 @@
+"""whisper-tiny [audio] — 4L d_model=384 6H (GQA kv=6) d_ff=1536
+vocab=51865 — enc-dec, conv frontend (stub). [arXiv:2212.04356; unverified]
+
+The conv/mel frontend is a STUB per the brief: ``input_specs()`` provides
+precomputed frame embeddings of shape (batch, num_frames=1500, d_model).
+Whisper uses LayerNorm + GELU, learned positions (no RoPE), biases.
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="whisper-tiny",
+    family="encdec",
+    num_layers=4,              # decoder layers
+    encoder_layers=4,
+    num_frames=1500,
+    d_model=384,
+    num_heads=6,
+    num_kv_heads=6,
+    d_ff=1536,
+    vocab_size=51865,
+    qkv_bias=True,
+    mlp_kind="gelu",
+    norm_kind="layernorm",
+    rope_theta=0.0,            # 0 -> learned absolute positions
+    source="arXiv:2212.04356; unverified",
+)

@@ -1,0 +1,14 @@
+"""TAC — the paper's primary contribution (see DESIGN.md §2-3)."""
+from repro.core import aggregation, channels, compress, hierarchical, \
+    ring_buffer, selector, tac
+from repro.core.aggregation import PackPlan, as_slices, from_slices, \
+    make_plan, pack, unpack
+from repro.core.ring_buffer import SlicePlan, plan_slices
+from repro.core.tac import SyncResult, gather_updated, sync_grads
+
+__all__ = [
+    "PackPlan", "SlicePlan", "SyncResult", "aggregation", "as_slices",
+    "channels", "compress", "from_slices", "gather_updated", "hierarchical",
+    "make_plan", "pack", "plan_slices", "ring_buffer", "selector",
+    "sync_grads", "tac", "unpack",
+]

@@ -1,0 +1,91 @@
+"""Gathering-write aggregation (paper §III-C) on gradient pytrees.
+
+netty hands hadroNIO an array of buffers; hadroNIO merges as many as
+possible into one contiguous ring-buffer region so one UCX request sends
+what used to be N. Here: the gradient pytree is flattened into one
+contiguous vector ("packed" — the merge), carved into ring-buffer slices,
+and each slice becomes ONE collective. ``pack``/``unpack`` are the pure-JAX
+copy path; kernels/ring_pack.py is the Pallas DMA version of the same copy.
+
+Everything is shape-static: the plan is computed from the pytree structure
+at trace time (property-tested for roundtrip exactness).
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import CommConfig
+from repro.core.ring_buffer import SlicePlan, plan_slices
+
+PyTree = Any
+
+
+class PackPlan(NamedTuple):
+    offsets: tuple            # per-leaf (start, end) in flat element space
+    shapes: tuple             # per-leaf shapes
+    total_elems: int
+    padded_elems: int         # n_slices * slice_elems
+    slice_elems: int
+    n_slices: int
+    slice_plan: SlicePlan
+    dtype: Any
+
+
+def make_plan(tree: PyTree, comm: CommConfig, dtype=jnp.float32) -> PackPlan:
+    leaves = jax.tree.leaves(tree)
+    shapes = tuple(tuple(l.shape) for l in leaves)
+    sizes = [int(np.prod(s)) if s else 1 for s in shapes]
+    starts = np.cumsum([0] + sizes)
+    total = int(starts[-1])
+    itemsize = jnp.dtype(dtype).itemsize
+    sp = plan_slices(total * itemsize, comm)
+    # align slices so reduce-scatter shards evenly over any DP axis <= 512
+    slice_elems = max(512, sp.slice_bytes // itemsize)
+    slice_elems = -(-slice_elems // 512) * 512
+    n_slices = max(1, -(-total // slice_elems))
+    return PackPlan(
+        offsets=tuple((int(starts[i]), int(starts[i + 1]))
+                      for i in range(len(sizes))),
+        shapes=shapes,
+        total_elems=total,
+        padded_elems=n_slices * slice_elems,
+        slice_elems=slice_elems,
+        n_slices=n_slices,
+        slice_plan=sp,
+        dtype=jnp.dtype(dtype),
+    )
+
+
+def pack(tree: PyTree, plan: PackPlan) -> jax.Array:
+    """Merge all leaves into one contiguous padded vector (the gathering
+    write). Returns (padded_elems,) of plan.dtype."""
+    leaves = jax.tree.leaves(tree)
+    flat = jnp.concatenate([l.astype(plan.dtype).reshape(-1) for l in leaves])
+    pad = plan.padded_elems - plan.total_elems
+    if pad:
+        flat = jnp.pad(flat, (0, pad))
+    return flat
+
+
+def unpack(flat: jax.Array, plan: PackPlan, like: PyTree) -> PyTree:
+    """Inverse of ``pack``: carve the vector back into the pytree, casting
+    each leaf to the dtype of ``like``."""
+    leaves_like, treedef = jax.tree.flatten(like)
+    out = []
+    for (start, end), shape, ref in zip(plan.offsets, plan.shapes, leaves_like):
+        piece = jax.lax.slice_in_dim(flat, start, end, axis=0)
+        out.append(piece.reshape(shape).astype(ref.dtype))
+    return jax.tree.unflatten(treedef, out)
+
+
+def as_slices(flat: jax.Array, plan: PackPlan) -> jax.Array:
+    """(padded_elems,) -> (n_slices, slice_elems) ring-buffer view."""
+    return flat.reshape(plan.n_slices, plan.slice_elems)
+
+
+def from_slices(slices: jax.Array, plan: PackPlan) -> jax.Array:
+    return slices.reshape(plan.padded_elems)

@@ -1,0 +1,40 @@
+"""Comm channels — the worker-per-connection analogue (paper §III-B).
+
+A :class:`CommChannel` is an independent logical stream of slice
+collectives. hadroNIO gave each connection its own UCX worker so selectors
+could poll many workers; here each channel's collectives are emitted as
+independent HLO ops (no data dependencies between channels), which is the
+property the XLA latency-hiding scheduler needs to progress them
+concurrently. The microbenchmarks (benchmarks/latency.py, throughput.py)
+sweep channel count 1..16, reproducing the paper's connection-count axis.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclass(frozen=True)
+class CommChannel:
+    index: int
+    axes: tuple               # DP axis names this channel reduces over
+
+    def all_reduce(self, x: jax.Array) -> jax.Array:
+        return jax.lax.psum(x, self.axes)
+
+    def ping(self, x: jax.Array, axis: str, n_shards: int) -> jax.Array:
+        """One ring hop (the ping-pong primitive for the latency bench)."""
+        perm = [(i, (i + 1) % n_shards) for i in range(n_shards)]
+        return jax.lax.ppermute(x, axis, perm)
+
+
+def make_channels(n: int, axes: tuple) -> list[CommChannel]:
+    return [CommChannel(i, axes) for i in range(n)]
+
+
+def round_robin(n_items: int, n_channels: int) -> list[int]:
+    """Connection assignment used by the benchmarks (paper §IV-C assigns
+    connections to selectors round-robin)."""
+    return [i % n_channels for i in range(n_items)]

@@ -1,0 +1,39 @@
+"""Pod-aware two-level collectives (DESIGN.md §4, §8).
+
+Cross-pod links (DCN / optical) are scarcer than in-pod ICI, exactly like
+the paper's multi-rail transport selection in UCX. All-reduce over
+(pod, data) is decomposed as: reduce-scatter in-pod -> all-reduce
+cross-pod on 1/n_data of the bytes -> all-gather in-pod. Cross-pod traffic
+drops by the in-pod width.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def psum_hierarchical(x: jax.Array, pod_axis: str | None,
+                      data_axis: str) -> jax.Array:
+    """All-reduce over (pod_axis, data_axis), pod-aware. x: (..., S) with S
+    divisible by the data-axis size (TAC slices are padded to this)."""
+    if pod_axis is None:
+        return jax.lax.psum(x, data_axis)
+    shard = jax.lax.psum_scatter(x, data_axis, scatter_dimension=x.ndim - 1,
+                                 tiled=True)
+    shard = jax.lax.psum(shard, pod_axis)
+    return jax.lax.all_gather(shard, data_axis, axis=x.ndim - 1, tiled=True)
+
+
+def psum_scatter_hierarchical(x: jax.Array, pod_axis: str | None,
+                              data_axis: str) -> jax.Array:
+    """Reduce-scatter over data (+ cross-pod all-reduce of the shard)."""
+    shard = jax.lax.psum_scatter(x, data_axis, scatter_dimension=x.ndim - 1,
+                                 tiled=True)
+    if pod_axis is not None:
+        shard = jax.lax.psum(shard, pod_axis)
+    return shard
+
+
+def all_gather_data(x: jax.Array, axes) -> jax.Array:
+    """All-gather over one axis name or a tuple of axis names."""
+    return jax.lax.all_gather(x, axes, axis=x.ndim - 1, tiled=True)

@@ -1,0 +1,40 @@
+"""Ring-buffer slice planning — the TPU reading of hadroNIO's 8 MiB ring
+buffer with 64 KiB slices (paper §V-B).
+
+The flattened gradient stream is treated as a virtual ring buffer:
+``slice_bytes`` is the aggregation granularity (one collective per slice),
+``capacity_bytes`` bounds the number of slices in flight (unrolled,
+independent collectives the XLA latency-hiding scheduler can overlap —
+the "worker per connection" analogue). If the payload needs more slices
+than the capacity admits, the slice size is grown (recorded in the plan)
+— the paper's ring would instead block the writer, which has no analogue
+in a statically scheduled HLO program.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+from repro.configs.base import CommConfig
+
+
+@dataclass(frozen=True)
+class SlicePlan:
+    total_bytes: int          # payload bytes (one sync dtype)
+    slice_bytes: int          # effective slice size after capacity clamp
+    n_slices: int
+    requested_slice_bytes: int
+    clamped: bool             # True if capacity forced slice growth
+
+
+def plan_slices(total_bytes: int, comm: CommConfig) -> SlicePlan:
+    req = comm.slice_bytes
+    max_inflight = max(1, comm.ring_capacity_bytes // req)
+    n = max(1, -(-total_bytes // req))
+    clamped = n > max_inflight
+    if clamped:
+        n = max_inflight
+        eff = -(-total_bytes // n)
+    else:
+        eff = req
+    return SlicePlan(total_bytes=total_bytes, slice_bytes=eff, n_slices=n,
+                     requested_slice_bytes=req, clamped=clamped)

@@ -1,0 +1,40 @@
+"""Slice scheduling — the selector analogue (paper §III-B).
+
+hadroNIO's selector polls one worker per connection; completion order is
+whatever the NIC delivers. The XLA analogue: collectives become *ready* in
+gradient-production order, and the only scheduling lever we own is the
+emission structure — which ops are independent, and in which order they
+are emitted. This module decides both:
+
+* ``emission_order``: reverse-layer order (grads for the last layer are
+  produced first in backward), so early slices' collectives can overlap
+  the remaining backward compute — DDP-style bucketing, expressed to XLA
+  by emitting those psums before the loss epilogue.
+* ``barrier``: ``optimization_barrier`` pinning, used by the benchmarks to
+  force (or forbid) overlap when measuring — the paper's warmup barrier.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+
+PyTree = Any
+
+
+def emission_order(n_slices: int, reverse: bool = True) -> list[int]:
+    order = list(range(n_slices))
+    return order[::-1] if reverse else order
+
+
+def barrier(*trees: PyTree):
+    """Pin ordering between pytrees (measurement fences in benchmarks)."""
+    flat = [jax.tree.leaves(t) for t in trees]
+    out = jax.lax.optimization_barrier(tuple(x for xs in flat for x in xs))
+    res = []
+    i = 0
+    for t in trees:
+        leaves, treedef = jax.tree.flatten(t)
+        res.append(jax.tree.unflatten(treedef, list(out[i:i + len(leaves)])))
+        i += len(leaves)
+    return res if len(res) > 1 else res[0]

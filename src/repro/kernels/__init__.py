@@ -1,0 +1,11 @@
+"""Pallas TPU kernels for the perf-critical compute layers, each validated
+in interpret mode against the pure-jnp oracle in kernels/ref.py:
+
+* ring_pack        — fused EF-add + cast + slice (the gathering-write copy)
+* flash_attention  — blockwise online-softmax attention (32k prefill)
+* rwkv6_scan       — chunked WKV6 recurrence (history matmul + local loop)
+* rglru            — RG-LRU linear recurrence (VMEM-streamed scan)
+"""
+from repro.kernels import ops, ref
+
+__all__ = ["ops", "ref"]

@@ -1,0 +1,141 @@
+"""Jit'd public wrappers around the Pallas kernels.
+
+Each wrapper: pads inputs to kernel block multiples, dispatches
+``interpret=True`` automatically off-TPU (the CPU container validates the
+kernel bodies in interpret mode; on TPU the same code compiles to Mosaic),
+and slices padding off the outputs. Signatures mirror the jnp oracles in
+kernels/ref.py one-to-one — tests sweep shapes/dtypes across both.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import flash_attention as _fa
+from repro.kernels import rglru as _rg
+from repro.kernels import ring_pack as _rp
+from repro.kernels import rwkv6_scan as _wk
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def _pad_axis(x, axis, mult, value=0.0):
+    n = x.shape[axis]
+    target = -(-n // mult) * mult
+    if target == n:
+        return x
+    pad = [(0, 0)] * x.ndim
+    pad[axis] = (0, target - n)
+    return jnp.pad(x, pad, constant_values=value)
+
+
+# ---------------------------------------------------------------------------
+# ring pack
+# ---------------------------------------------------------------------------
+
+
+@functools.partial(jax.jit, static_argnames=("n_slices", "slice_elems",
+                                             "wire_dtype", "with_ef"))
+def pack_slices(flat: jax.Array, ef, *, n_slices: int, slice_elems: int,
+                wire_dtype="bfloat16", with_ef: bool = True):
+    """Fused (add-EF, cast, slice) — see ring_pack.py. flat must already be
+    padded to n_slices*slice_elems (aggregation.pack guarantees it)."""
+    return _rp.pack_slices_kernel(
+        flat, ef, n_slices, slice_elems, jnp.dtype(wire_dtype),
+        interpret=_interpret(), with_ef=with_ef)
+
+
+@functools.partial(jax.jit, static_argnames=("out_dtype",))
+def unpack_slices(wire: jax.Array, out_dtype="float32"):
+    return _rp.unpack_slices_kernel(wire, jnp.dtype(out_dtype),
+                                    interpret=_interpret())
+
+
+# ---------------------------------------------------------------------------
+# flash attention
+# ---------------------------------------------------------------------------
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window", "bq", "bk"))
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                    causal: bool = True, window: int = 0,
+                    bq: int = _fa.DEFAULT_BQ, bk: int = _fa.DEFAULT_BK):
+    """q/k/v: (B, S, H, Dh) with k/v already GQA-expanded to H heads.
+    Returns (B, S, H, Dh). Self-attention positions 0..S-1."""
+    b, s, h, dh = q.shape
+    bq_eff = min(bq, s) if s % min(bq, s) == 0 else min(bq, s)
+
+    def to_bh(x):
+        return x.transpose(0, 2, 1, 3).reshape(b * h, s, dh)
+
+    qb, kb, vb = to_bh(q), to_bh(k), to_bh(v)
+    blk = min(max(bq, bk), max(s, 1))
+    qb = _pad_axis(qb, 1, blk)
+    kb = _pad_axis(kb, 1, blk)
+    vb = _pad_axis(vb, 1, blk)
+    out = _fa.flash_attention_kernel(
+        qb, kb, vb, causal=causal, window=window, s_valid=s,
+        bq=min(bq, qb.shape[1]), bk=min(bk, kb.shape[1]),
+        interpret=_interpret())
+    out = out[:, :s]
+    return out.reshape(b, h, s, dh).transpose(0, 2, 1, 3)
+
+
+# ---------------------------------------------------------------------------
+# WKV6
+# ---------------------------------------------------------------------------
+
+
+@functools.partial(jax.jit, static_argnames=("chunk",))
+def wkv6(r: jax.Array, k: jax.Array, v: jax.Array, w: jax.Array,
+         u: jax.Array, s0: jax.Array, *, chunk: int = _wk.DEFAULT_CHUNK):
+    """r/k/v/w: (B, T, H, hs); u: (H, hs); s0: (B, H, hs, hs). All f32
+    math. Returns (y (B,T,H,hs), s_final (B,H,hs,hs)) — matches
+    models.rwkv6._wkv_scan."""
+    b, t, h, hs = r.shape
+    c = min(chunk, max(t, 1))
+
+    def to_bh(x):
+        return x.transpose(0, 2, 1, 3).reshape(b * h, t, hs).astype(
+            jnp.float32)
+
+    rb, kb, vb = to_bh(r), to_bh(k), to_bh(v)
+    wb = to_bh(w)
+    # pad: w=1 (log 0, state frozen), k=v=r=0 (no output contribution)
+    rb = _pad_axis(rb, 1, c)
+    kb = _pad_axis(kb, 1, c)
+    vb = _pad_axis(vb, 1, c)
+    wb = _pad_axis(wb, 1, c, value=1.0)
+    s0b = s0.reshape(b * h, hs, hs).astype(jnp.float32)
+    y, s_f = _wk.wkv6_kernel(rb, kb, vb, wb, u.astype(jnp.float32), s0b,
+                             chunk=c, interpret=_interpret())
+    y = y[:, :t].reshape(b, h, t, hs).transpose(0, 2, 1, 3)
+    return y, s_f.reshape(b, h, hs, hs)
+
+
+# ---------------------------------------------------------------------------
+# RG-LRU
+# ---------------------------------------------------------------------------
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "wblock"))
+def rglru(a: jax.Array, b: jax.Array, h0: jax.Array, *,
+          chunk: int = _rg.DEFAULT_CHUNK, wblock: int = _rg.DEFAULT_WBLOCK):
+    """Linear recurrence h_t = a_t h_{t-1} + b_t. a/b: (B, T, W) f32;
+    h0: (B, W). Returns (h_seq, h_final) — matches models.hybrid._rglru's
+    scan core."""
+    bsz, t, w = a.shape
+    c = min(chunk, max(t, 1))
+    wb = min(wblock, w)
+    a2 = _pad_axis(a.astype(jnp.float32), 1, c, value=1.0)
+    b2 = _pad_axis(b.astype(jnp.float32), 1, c, value=0.0)
+    a2 = _pad_axis(a2, 2, wb)
+    b2 = _pad_axis(b2, 2, wb)
+    h02 = _pad_axis(h0.astype(jnp.float32), 1, wb)
+    y, hf = _rg.rglru_kernel(a2, b2, h02, chunk=c, wblock=wb,
+                             interpret=_interpret())
+    return y[:, :t, :w], hf[:, :w]

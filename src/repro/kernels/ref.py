@@ -1,0 +1,66 @@
+"""Pure-jnp oracles for every Pallas kernel (signature-identical to
+kernels/ops.py). Tests sweep shapes/dtypes across both and
+assert_allclose; the model code uses these same formulations, so a kernel
+validated here is validated against the training path."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention as att
+
+
+# -- ring pack ---------------------------------------------------------------
+
+
+def pack_slices(flat: jax.Array, ef, *, n_slices: int, slice_elems: int,
+                wire_dtype="bfloat16", with_ef: bool = True):
+    x = flat.reshape(n_slices, slice_elems).astype(jnp.float32)
+    if not with_ef:
+        return x.astype(jnp.dtype(wire_dtype)), None
+    if ef is None:
+        ef = jnp.zeros_like(x)
+    y = x + ef
+    wire = y.astype(jnp.dtype(wire_dtype))
+    return wire, y - wire.astype(jnp.float32)
+
+
+def unpack_slices(wire: jax.Array, out_dtype="float32"):
+    return wire.astype(jnp.dtype(out_dtype)).reshape(-1)
+
+
+# -- flash attention ---------------------------------------------------------
+
+
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                    causal: bool = True, window: int = 0, **_):
+    s = q.shape[1]
+    pos = jnp.arange(s)
+    return att.attend_direct(q, k, v, pos, pos, causal=causal,
+                             window=window)
+
+
+# -- WKV6 --------------------------------------------------------------------
+
+
+def wkv6(r, k, v, w, u, s0, **_):
+    from repro.models.rwkv6 import _wkv_scan
+    f32 = lambda x: x.astype(jnp.float32)
+    return _wkv_scan(f32(r), f32(k), f32(v), f32(w), f32(u), f32(s0))
+
+
+# -- RG-LRU ------------------------------------------------------------------
+
+
+def rglru(a, b, h0, **_):
+    a = a.astype(jnp.float32)
+    b = b.astype(jnp.float32)
+    b = b.at[:, 0].add(a[:, 0] * h0.astype(jnp.float32))
+
+    def combine(c1, c2):
+        a1, b1 = c1
+        a2, b2 = c2
+        return a1 * a2, a2 * b1 + b2
+
+    _, hs = jax.lax.associative_scan(combine, (a, b), axis=1)
+    return hs, hs[:, -1]

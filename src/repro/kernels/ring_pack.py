@@ -1,0 +1,95 @@
+"""Ring-buffer pack kernel — the paper's gathering-write copy path on TPU.
+
+hadroNIO's hot spot is the memcpy of many small buffers into one
+contiguous ring-buffer region (paper §III-C). The TPU reading: the packed
+flat gradient must be (a) carved into ring slices, (b) cast to the wire
+dtype and (c) error-feedback-corrected — three elementwise passes that
+naive jnp code issues as separate HBM round trips. This kernel fuses them
+into ONE HBM read + one write per element, tiled through VMEM.
+
+    wire[i]   = cast(flat[i] + ef[i], wire_dtype)
+    new_ef[i] = (flat[i] + ef[i]) - f32(wire[i])
+
+Block layout: the flat buffer is viewed as (n_slices, slice_elems); grid =
+(n_slices, slice_elems // LANE_BLOCK); each program moves one (1, 8·128·k)
+tile HBM->VMEM->HBM. slice_elems is 512-aligned by the plan (aggregation
+.make_plan), so tiles are always lane-aligned.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+LANE_BLOCK = 8 * 128 * 4          # 4096 f32 = 16 KiB per tile per buffer
+
+
+def _pack_kernel(flat_ref, ef_ref, wire_ref, new_ef_ref):
+    x = flat_ref[...].astype(jnp.float32)
+    if ef_ref is not None:
+        x = x + ef_ref[...]
+    w = x.astype(wire_ref.dtype)
+    wire_ref[...] = w
+    if new_ef_ref is not None:
+        new_ef_ref[...] = x - w.astype(jnp.float32)
+
+
+def _unpack_kernel(wire_ref, out_ref):
+    out_ref[...] = wire_ref[...].astype(out_ref.dtype)
+
+
+def pack_slices_kernel(flat: jax.Array, ef, n_slices: int,
+                       slice_elems: int, wire_dtype,
+                       *, block: int = LANE_BLOCK, interpret: bool = False,
+                       with_ef: bool = True):
+    """flat: (n_slices * slice_elems,) f32. Returns (wire (n, S) of
+    wire_dtype, new_ef (n, S) f32 or None)."""
+    assert flat.shape == (n_slices * slice_elems,), flat.shape
+    blk = min(block, slice_elems)
+    assert slice_elems % blk == 0, (slice_elems, blk)
+    grid = (n_slices, slice_elems // blk)
+    x2 = flat.reshape(n_slices, slice_elems)
+    spec = pl.BlockSpec((1, blk), lambda i, j: (i, j))
+
+    if with_ef:
+        if ef is None:
+            ef = jnp.zeros((n_slices, slice_elems), jnp.float32)
+        kernel = _pack_kernel
+        in_specs = [spec, spec]
+        args = (x2, ef)
+        out_shape = (jax.ShapeDtypeStruct((n_slices, slice_elems),
+                                          jnp.dtype(wire_dtype)),
+                     jax.ShapeDtypeStruct((n_slices, slice_elems),
+                                          jnp.float32))
+        out_specs = (spec, spec)
+        wire, new_ef = pl.pallas_call(
+            kernel, grid=grid, in_specs=in_specs, out_specs=out_specs,
+            out_shape=out_shape, interpret=interpret)(*args)
+        return wire, new_ef
+
+    def kernel_no_ef(flat_ref, wire_ref):
+        _pack_kernel(flat_ref, None, wire_ref, None)
+
+    wire = pl.pallas_call(
+        kernel_no_ef, grid=grid, in_specs=[spec], out_specs=spec,
+        out_shape=jax.ShapeDtypeStruct((n_slices, slice_elems),
+                                       jnp.dtype(wire_dtype)),
+        interpret=interpret)(x2)
+    return wire, None
+
+
+def unpack_slices_kernel(wire: jax.Array, out_dtype=jnp.float32,
+                         *, block: int = LANE_BLOCK,
+                         interpret: bool = False) -> jax.Array:
+    """(n, S) wire -> (n * S,) of out_dtype (one fused cast+copy pass)."""
+    n, s = wire.shape
+    blk = min(block, s)
+    assert s % blk == 0, (s, blk)
+    spec = pl.BlockSpec((1, blk), lambda i, j: (i, j))
+    out = pl.pallas_call(
+        _unpack_kernel, grid=(n, s // blk), in_specs=[spec], out_specs=spec,
+        out_shape=jax.ShapeDtypeStruct((n, s), jnp.dtype(out_dtype)),
+        interpret=interpret)(wire)
+    return out.reshape(n * s)

@@ -1,0 +1,96 @@
+"""Elastic scaling: continue a run on a different device count / mesh.
+
+Checkpoints are mesh-agnostic (full host arrays per leaf — see
+checkpoint/store.py), so elasticity reduces to: build the new mesh, derive
+the new shardings from the same logical rules, restore, continue. The two
+things that must be re-derived on a scale change:
+
+* ``CommConfig``-dependent state — the TAC ``hadronio_rs`` mode keeps
+  *flat, ring-sharded* optimizer moments whose shard length depends on the
+  device count. ``reshard_tac_opt`` re-slices them for the new ring (the
+  global flat vector is an invariant).
+* data order — the pipeline is addressed by (step, global index), so a
+  different host count reads the same global batch (DataConfig.host_*).
+
+Straggler/eviction policy (documented for the 1000-node deployment): a
+persistently slow host is evicted by the cluster manager; the survivors
+restart from LATEST via this module onto the shrunken mesh. Synchronous
+SGD semantics are preserved exactly — only wall-clock is lost.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import numpy as np
+
+from repro.configs.base import RunConfig
+from repro.checkpoint import CheckpointStore
+from repro.launch import steps as steps_mod
+from repro.launch.mesh import make_mesh
+from repro.optim import adamw
+
+
+def reshard_tac_opt(flat_mu: np.ndarray, flat_nu: np.ndarray,
+                    old_shards: int, new_shards: int, n_slices: int):
+    """Re-slice hadronio_rs flat moment shards for a new ring size.
+
+    Saved checkpoints hold the *global* stacked shards (old_shards,
+    shard_len). The global flat layout is (n_slices, padded/n_slices)
+    sliced per-shard chunk-wise; rebuild it, then re-slice.
+    Returns (new_mu, new_nu) of shape (new_shards, new_shard_len).
+    """
+    def reslice(stacked: np.ndarray) -> np.ndarray:
+        old = stacked.reshape(old_shards, n_slices, -1)      # (O, n, c_o)
+        # global slice view: (n, slice_elems) with chunks in ring order
+        glob = np.stack([np.concatenate(
+            [old[i, s] for i in range(old_shards)]) for s in range(n_slices)])
+        assert glob.shape[1] % new_shards == 0
+        c_n = glob.shape[1] // new_shards
+        return np.stack([glob[:, i * c_n:(i + 1) * c_n].reshape(-1)
+                         for i in range(new_shards)])
+
+    return reslice(flat_mu), reslice(flat_nu)
+
+
+def make_on_mismatch(run: RunConfig):
+    """Shape-mismatch resolver for elastic restores. Only the TAC
+    ``hadronio_rs`` mode has ring-sized state (flat moment shards + error
+    feedback); everything else restores shape-identically."""
+    if run.comm.mode != "hadronio_rs" and run.comm.compress == "none":
+        return None
+    from repro.core import aggregation as agg
+    from repro.models import api
+    plan = agg.make_plan(api.abstract(run.model), run.comm)
+
+    def on_mismatch(name: str, arr: np.ndarray, ref) -> np.ndarray:
+        want = tuple(ref.shape)
+        if arr.ndim == 2 and len(want) == 2 and \
+                arr.size == int(np.prod(want)):
+            out, _ = reshard_tac_opt(arr, arr, arr.shape[0], want[0],
+                                     plan.n_slices)
+            return out
+        raise ValueError(f"{name}: cannot reshard {arr.shape}->{want}")
+
+    return on_mismatch
+
+
+def restore_elastic(store: CheckpointStore, run: RunConfig, mesh,
+                    step: Optional[int] = None):
+    """Restore the latest (or given) checkpoint onto ``mesh`` — the mesh
+    may have a different shape/size than the one that saved. Returns
+    (state, step)."""
+    s = store.latest_step() if step is None else step
+    if s is None:
+        raise FileNotFoundError(f"no checkpoint under {store.dir}")
+    n_shards = int(np.prod(list(mesh.shape.values())))
+    with jax.set_mesh(mesh):
+        _, state_sh, _ = steps_mod.make_train_step(run, mesh)
+        if run.comm.mode == "gspmd":
+            like = steps_mod.abstract_train_state(run)
+        else:
+            like = steps_mod.abstract_tac_state(run, n_shards,
+                                                mesh.shape.get("pod", 1))
+        state = store.restore(s, like, state_sh,
+                              on_mismatch=make_on_mismatch(run))
+    return state, s

@@ -1,0 +1,306 @@
+"""Compiled-HLO analysis: collective bytes/op-counts + roofline terms.
+
+``cost_analysis()`` gives FLOPs and HBM bytes but not collective traffic;
+per the brief we parse the compiled HLO text and sum operand sizes of every
+all-gather / all-reduce / reduce-scatter / all-to-all / collective-permute.
+The same parser feeds the dry-run artifacts, the roofline table and the
+gradsync benchmark (per-mode op counts — the paper's "number of send
+calls" axis).
+
+Hardware model (TPU v5e, per brief): 197 TFLOP/s bf16 per chip,
+819 GB/s HBM, ~50 GB/s/link ICI.
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+
+import numpy as np
+
+PEAK_FLOPS = 197e12          # bf16 per chip
+HBM_BW = 819e9               # bytes/s per chip
+ICI_BW = 50e9                # bytes/s per link (per chip, one direction)
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "f8e4m3fn": 1,
+    "f8e5m2": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16, "token": 0, "opaque": 0,
+}
+
+COLLECTIVE_KINDS = ("all-gather", "all-reduce", "reduce-scatter",
+                    "all-to-all", "collective-permute")
+
+# e.g. "bf16[16,512,128]{2,1,0}" or "f32[]"
+_SHAPE_RE = re.compile(r"([a-z]\d*[a-z]*\d*(?:e\d+m\d+(?:fn)?)?)\[([\d,]*)\]")
+# "%name = TYPE[...] op-name(", with optional leading spaces / ROOT
+_INSTR_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?[%\w.\-]+\s*=\s*(\(?.+?\)?)\s+"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start|-done)?\(")
+
+
+def shape_bytes(shape_str: str) -> int:
+    """Total bytes of one 'dtype[dims]' (tuples handled by caller)."""
+    total = 0
+    for m in _SHAPE_RE.finditer(shape_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            n = int(np.prod([int(d) for d in dims.split(",")]))
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+@dataclass
+class CollectiveStats:
+    counts: dict = field(default_factory=dict)     # kind -> op count
+    bytes_: dict = field(default_factory=dict)     # kind -> operand bytes
+
+    @property
+    def total_ops(self) -> int:
+        return sum(self.counts.values())
+
+    @property
+    def total_bytes(self) -> int:
+        return sum(self.bytes_.values())
+
+    def as_dict(self) -> dict:
+        return {"counts": dict(self.counts), "bytes": dict(self.bytes_),
+                "total_ops": self.total_ops, "total_bytes": self.total_bytes}
+
+
+# StableHLO (pre-optimization, ``lowered.as_text()``): the schedule the
+# program EMITS, before XLA's combiner — the paper's "number of send
+# calls" axis. e.g. "stablehlo.all_reduce"..."-> tensor<16x512xbf16>"
+_MLIR_OP_RE = re.compile(
+    r"stablehlo\.(all_reduce|all_gather|reduce_scatter|all_to_all|"
+    r"collective_permute)")
+_MLIR_TYPE_RE = re.compile(r"tensor<([0-9x]*)x?([a-z]\w*)>")
+_MLIR_DTYPE_BYTES = {
+    "i1": 1, "i8": 1, "ui8": 1, "i16": 2, "ui16": 2, "bf16": 2, "f16": 2,
+    "i32": 4, "ui32": 4, "f32": 4, "i64": 8, "ui64": 8, "f64": 8,
+}
+
+
+def _mlir_result_bytes(tail: str) -> int:
+    b = 0
+    for tm in _MLIR_TYPE_RE.finditer(tail):
+        dims, dt = tm.group(1), tm.group(2)
+        if dt not in _MLIR_DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split("x"):
+            if d:
+                n *= int(d)
+        b += n * _MLIR_DTYPE_BYTES[dt]
+    return b
+
+
+def stablehlo_collective_stats(mlir_text: str) -> CollectiveStats:
+    """Collective op counts/bytes from pre-optimization StableHLO (one
+    entry per emitted collective; result-type bytes). Region-form ops
+    (all_reduce / reduce_scatter carry a reduction body) put their type
+    signature on the region-closing ``}) : (...) -> ...`` line, so a
+    pending-op stack matches types to ops."""
+    st = CollectiveStats()
+    pending: list[str] = []
+    for line in mlir_text.splitlines():
+        m = _MLIR_OP_RE.search(line)
+        if m:
+            kind = m.group(1).replace("_", "-")
+            st.counts[kind] = st.counts.get(kind, 0) + 1
+            if "->" in line and "tensor<" in line.rsplit("->", 1)[-1]:
+                b = _mlir_result_bytes(line.rsplit("->", 1)[-1])
+                st.bytes_[kind] = st.bytes_.get(kind, 0) + b
+            else:
+                pending.append(kind)
+            continue
+        stripped = line.lstrip()
+        if pending and stripped.startswith("})") and "->" in line:
+            kind = pending.pop()
+            b = _mlir_result_bytes(line.rsplit("->", 1)[-1])
+            st.bytes_[kind] = st.bytes_.get(kind, 0) + b
+    return st
+
+
+def collective_stats(hlo_text: str) -> CollectiveStats:
+    """Sum operand sizes (the result shape of -start/plain collective ops,
+    which for these ops equals the transferred payload up to the gather
+    factor) per collective kind.
+
+    ``-done`` ops are skipped (the payload was counted at ``-start``).
+    """
+    st = CollectiveStats()
+    for line in hlo_text.splitlines():
+        if "-done(" in line:
+            continue
+        m = _INSTR_RE.match(line)
+        if not m:
+            continue
+        shape_str, kind = m.group(1), m.group(2)
+        b = shape_bytes(shape_str)
+        st.counts[kind] = st.counts.get(kind, 0) + 1
+        st.bytes_[kind] = st.bytes_.get(kind, 0) + b
+    return st
+
+
+def flops_and_bytes(compiled) -> dict:
+    """FLOPs / HBM-byte estimates from compiled.cost_analysis()."""
+    try:
+        ca = compiled.cost_analysis()
+    except Exception:
+        return {}
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0] if ca else {}
+    out = {}
+    for k in ("flops", "bytes accessed", "transcendentals",
+              "bytes accessed output", "optimal_seconds"):
+        if k in ca:
+            out[k.replace(" ", "_")] = float(ca[k])
+    return out
+
+
+def memory_stats(compiled) -> dict:
+    try:
+        ma = compiled.memory_analysis()
+    except Exception:
+        return {}
+    if ma is None:
+        return {}
+    out = {}
+    for k in ("argument_size_in_bytes", "output_size_in_bytes",
+              "temp_size_in_bytes", "generated_code_size_in_bytes",
+              "alias_size_in_bytes", "host_temp_size_in_bytes"):
+        v = getattr(ma, k, None)
+        if v is not None:
+            out[k] = int(v)
+    return out
+
+
+def roofline_terms(*, flops: float, hbm_bytes: float,
+                   collective_bytes: float, n_chips: int,
+                   flops_are_global: bool = True,
+                   hbm_is_global: bool | None = None) -> dict:
+    """The three roofline terms, in seconds (brief §Roofline).
+
+    collective term uses per-chip link bandwidth; collective_bytes from the
+    SPMD module is already per-chip traffic. ``hbm_is_global`` defaults to
+    ``flops_are_global`` (HLO numbers are per-chip together; the analytic
+    model passes flops globally but bytes per-chip).
+    """
+    if hbm_is_global is None:
+        hbm_is_global = flops_are_global
+    compute_s = flops / ((n_chips if flops_are_global else 1) * PEAK_FLOPS)
+    memory_s = hbm_bytes / ((n_chips if hbm_is_global else 1) * HBM_BW)
+    collective_s = collective_bytes / ICI_BW
+    terms = {"compute_s": compute_s, "memory_s": memory_s,
+             "collective_s": collective_s}
+    terms["bottleneck"] = max(terms, key=lambda k: terms[k]).replace("_s", "")
+    return terms
+
+
+def analytic_hbm_bytes(cfg, shape, n_chips: int, *, tp: int = 16,
+                       dp: int = 16) -> float:
+    """Analytic per-chip HBM traffic per step (bytes) — the roofline
+    memory-term numerator. HLO ``bytes accessed`` is unusable for this:
+    it counts every operand of every HLO op pre-fusion AND counts loop
+    bodies once, so it both over- and under-counts. The model below is a
+    streaming lower bound (weights + activations + logits + optimizer /
+    cache traffic), documented in EXPERIMENTS.md §Methodology.
+    """
+    p_bytes = cfg.param_count() * 2                    # bf16
+    p_active = cfg.active_param_count() * 2
+    d, L, V = cfg.d_model, cfg.num_layers, cfg.vocab_size
+    tokens = shape.global_batch * shape.seq_len
+    tokens_chip = tokens / n_chips                     # batch/dp x seq/tp(SP)
+    tokens_row = tokens / dp                           # per data-shard row
+
+    if shape.kind == "train":
+        # weights: fwd read + remat re-read + bwd read of the TP shard
+        w = 3.0 * p_bytes / tp
+        # activations: residual+attn+mlp streams, ~6 passes of (tok, d)
+        act = 6.0 * tokens_chip * d * 2 * L
+        # logits: f32 write + read (CE) + bwd of the vocab/model shard
+        logits = 3.0 * tokens_row * (V / tp) * 4
+        # optimizer: grads f32 rw + two moments rw + param rw, sharded
+        opt = (4 + 16 + 4) * (cfg.param_count() / n_chips)
+        return w + act + logits + opt
+    if shape.kind == "prefill":
+        w = 1.0 * p_active / tp
+        act = 4.0 * tokens_chip * d * 2 * L
+        kv = 2.0 * tokens_chip * cfg.num_kv_heads * cfg.head_dim * 2 * L \
+            if cfg.num_heads else 2.0 * tokens_chip * d * 2
+        return w + act + kv
+    # decode: every active weight shard read once; cache read + write
+    w = 1.0 * p_active / tp
+    eff = min(shape.seq_len, cfg.sliding_window) if cfg.sliding_window \
+        else shape.seq_len
+    if cfg.family == "ssm":
+        hs = cfg.rwkv_head_size
+        cache = (d // hs) * hs * hs * 4 * L * shape.global_batch
+    elif cfg.family == "hybrid":
+        lw = cfg.lru_width or d
+        n_attn = sum(1 for i in range(L) if cfg.block_pattern[
+            i % len(cfg.block_pattern)] == "local_attn")
+        cache = (shape.global_batch
+                 * (cfg.local_window * cfg.num_kv_heads * cfg.head_dim * 2
+                    * n_attn + lw * 4 * (L - n_attn)))
+    else:
+        cache = (shape.global_batch * eff * cfg.num_kv_heads
+                 * cfg.head_dim * 2 * 2 * L)
+        if cfg.family == "encdec":
+            cache += (shape.global_batch * cfg.num_frames
+                      * cfg.num_kv_heads * cfg.head_dim * 2 * 2 * L)
+    return w + 1.5 * cache / n_chips     # read whole cache + write 1 slot
+
+
+def model_flops(cfg, shape, n_tokens: int | None = None) -> float:
+    """MODEL_FLOPS per the brief: 6·N·D (dense) / 6·N_active·D (MoE) for a
+    train step, with two standard refinements so the "useful compute" ratio
+    is honest: the token-embedding table does no matmul FLOPs (it is a
+    lookup — only the LM head's V·d matmul counts, and it is already in N),
+    and causal attention contributes 12·L·H·dh·S_eff per token (S_eff =
+    effective mean KV span) on top of the parameter matmuls.
+    """
+    n_active = cfg.active_param_count()
+    # remove the lookup-only embedding table from the matmul-param count
+    n_matmul = n_active - cfg.vocab_size * cfg.d_model
+    if n_tokens is None:
+        n_tokens = shape.global_batch * shape.seq_len
+
+    def attn_span(kv_len: float) -> float:
+        if cfg.sliding_window:
+            return min(kv_len, float(cfg.sliding_window))
+        return kv_len
+
+    # attention score+value FLOPs per token per attention layer (fwd):
+    # 2·(H·dh)·span for QK^T plus 2·(H·dh)·span for PV.
+    h_dim = cfg.num_heads * cfg.head_dim if cfg.num_heads else 0
+    if cfg.family == "hybrid" and cfg.block_pattern:
+        n_attn = sum(1 for i in range(cfg.num_layers)
+                     if cfg.block_pattern[i % len(cfg.block_pattern)]
+                     == "local_attn")
+        window = cfg.local_window
+    elif cfg.family == "ssm":
+        n_attn, window = 0, 0
+    else:
+        n_attn, window = cfg.num_layers, cfg.sliding_window
+
+    def attn_flops_fwd(seq: float, causal_mean: bool) -> float:
+        span = seq / 2 if causal_mean else seq
+        if window:
+            span = min(span, float(window))
+        return 4.0 * h_dim * span * n_attn
+
+    if shape.kind == "train":
+        per_tok = 2.0 * n_matmul + attn_flops_fwd(shape.seq_len, True)
+        return 3.0 * per_tok * n_tokens          # fwd + bwd = 3x fwd
+    if shape.kind == "prefill":
+        per_tok = 2.0 * n_matmul + attn_flops_fwd(shape.seq_len, True)
+        return per_tok * n_tokens
+    # decode: one token per sequence; attention spans the whole cache
+    per_tok = 2.0 * n_matmul + attn_flops_fwd(shape.seq_len, False)
+    return per_tok * shape.global_batch

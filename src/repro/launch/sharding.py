@@ -1,0 +1,207 @@
+"""Logical-axis -> mesh-axis sharding rules with divisibility fallback.
+
+Parameters carry logical axes on their ParamSpecs; activations name their
+axes at ``shard_fn`` call sites. The rules below map logical names to mesh
+axes; a dim that is not divisible by the target axis size falls back to
+replicated (recorded — the roofline notes surface these fallbacks, e.g.
+qwen1.5-4b's 20 heads on a 16-way model axis).
+
+Parallelism coverage (DESIGN.md §4): TP = heads/mlp/vocab/experts/lru over
+``model``; FSDP = embed dims over ``data``; DP = batch over (pod, data);
+SP = seq over ``model``; EP = experts over ``model``.
+"""
+from __future__ import annotations
+
+from typing import Any, Optional
+
+import jax
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.models.common import ParamSpec
+
+PyTree = Any
+
+# logical axis -> candidate mesh axes, tried in order
+PARAM_RULES: dict[str, tuple] = {
+    "vocab": ("model",),
+    "heads": ("model",),
+    "kv_heads": ("model",),
+    "mlp": ("model",),
+    "experts": ("model",),
+    "lru": ("model",),
+    "lru_blocks": ("model",),
+    "embed": ("data",),       # FSDP
+    "frames": (),
+    "seq": (),
+    "layers": (),
+}
+
+ACT_RULES: dict[str, tuple] = {
+    "batch": (("pod", "data"),),
+    "seq": ("model",),
+    "seq_model": ("model",),    # decode KV length (flash-decoding layout)
+    "heads": ("model",),
+    "kv_heads": ("model",),
+    "mlp": ("model",),
+    "vocab": ("model",),
+    "lru": ("model",),
+    "experts": ("model",),
+    "expert_cap": ("data",),
+    "seq_kv": ("data",),
+}
+
+
+def _mesh_axes_size(mesh, axes) -> int:
+    if isinstance(axes, str):
+        axes = (axes,)
+    n = 1
+    for a in axes:
+        n *= mesh.shape[a] if a in mesh.axis_names else 0
+    return n
+
+
+def _resolve(mesh, rules: dict, logical: Optional[str], dim: int,
+             used: set, *, fsdp: bool = True):
+    """Pick a mesh axis (or axis tuple) for one dim, or None."""
+    if logical is None or logical not in rules:
+        return None
+    if logical == "embed" and not fsdp:
+        return None
+    for cand in rules[logical]:
+        names = (cand,) if isinstance(cand, str) else tuple(cand)
+        # drop axes not present in this mesh (e.g. 'pod' on single pod)
+        names = tuple(a for a in names if a in mesh.axis_names)
+        if not names:
+            continue
+        size = int(np.prod([mesh.shape[a] for a in names]))
+        if size <= 1 or dim % size != 0:
+            continue
+        if any(a in used for a in names):
+            continue
+        used.update(names)
+        return names if len(names) > 1 else names[0]
+    return None
+
+
+def spec_partition(mesh, spec: ParamSpec, *, fsdp: bool = True) -> P:
+    used: set = set()
+    parts = [_resolve(mesh, PARAM_RULES, ax, dim, used, fsdp=fsdp)
+             for dim, ax in zip(spec.shape, spec.axes)]
+    return P(*parts)
+
+
+def param_shardings(mesh, specs: PyTree, *, fsdp: bool = True) -> PyTree:
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, spec_partition(mesh, s, fsdp=fsdp)),
+        specs, is_leaf=lambda x: isinstance(x, ParamSpec))
+
+
+def make_shard_fn(mesh, *, manual_axes: tuple = (),
+                  sp_explicit: bool | None = None):
+    """Activation-constraint function threaded through model code.
+
+    ``manual_axes``: axes already manual (inside a partial-manual
+    shard_map) — constraints must not mention them.
+
+    ``sp_explicit`` (default from env ``REPRO_SP_EXPLICIT``): Megatron-SP
+    transition pinning — the ``seq_gather`` logical axis becomes an
+    explicit *replicated* constraint, so each block performs exactly one
+    seq->replicated all-gather before its projections and one
+    reduce-scatter at the residual (instead of GSPMD's per-einsum
+    resharding). §Perf iteration A1.
+    """
+    if mesh is None:
+        from repro.models.layers import no_shard
+        return no_shard
+    if sp_explicit is None:
+        import os
+        sp_explicit = os.environ.get("REPRO_SP_EXPLICIT", "") == "1"
+
+    import os
+    no_sp = os.environ.get("REPRO_NO_SP", "") == "1"
+
+    def shard_fn(x, logical):
+        if "seq_gather" in logical:
+            if not sp_explicit:
+                return x
+            used: set = set(manual_axes)
+            parts = [
+                _resolve(mesh, ACT_RULES, "batch", x.shape[i], used)
+                if ax == "batch" else None
+                for i, ax in enumerate(logical)]
+            return jax.lax.with_sharding_constraint(
+                x, NamedSharding(mesh, P(*parts)))
+        used = set(manual_axes)
+        parts = []
+        force = False
+        for dim, ax in zip(x.shape, logical):
+            if ax == "rep":               # explicit replication pin
+                force = True
+                parts.append(None)
+                continue
+            if no_sp and ax == "seq":     # §Perf A2: TP-AR, no seq shard
+                parts.append(None)
+                continue
+            r = _resolve(mesh, ACT_RULES, ax, dim, used)
+            parts.append(r)
+        if not force and all(p is None for p in parts):
+            return x
+        return jax.lax.with_sharding_constraint(
+            x, NamedSharding(mesh, P(*parts)))
+
+    return shard_fn
+
+
+def batch_sharding(mesh, tree: PyTree) -> PyTree:
+    """Input batch: leading dim over the DP axes when divisible."""
+    dp = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    size = int(np.prod([mesh.shape[a] for a in dp])) if dp else 1
+
+    def one(x):
+        shape = x.shape
+        if shape and size > 1 and shape[0] % size == 0:
+            return NamedSharding(mesh, P(dp if len(dp) > 1 else dp[0]))
+        return NamedSharding(mesh, P())
+
+    return jax.tree.map(one, tree)
+
+
+def cache_shardings(mesh, cache_tree: PyTree) -> PyTree:
+    """KV caches / recurrent states: batch over DP when divisible; else
+    the longest remaining dim over 'data' (long_500k: batch 1, shard the
+    cache length instead). The model axis takes the kv-heads dim when it
+    divides, else the sequence/length dim — a 110B decode_32k cache is
+    687 GB and MUST shard over both axes (tests/test_sharding.py).
+    Leading 'layers' dims are never sharded."""
+    dp = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    size = int(np.prod([mesh.shape[a] for a in dp])) if dp else 1
+    model = mesh.shape.get("model", 1)
+
+    def one(x):
+        # heuristic: dims are (layers?, batch, length/state..., heads, dh)
+        parts: list = [None] * len(x.shape)
+        # batch is dim 1 under a leading layers dim (ndim >= 3), else 0
+        bdim = 1 if len(x.shape) >= 3 else 0
+        if size > 1 and x.shape[bdim] % size == 0:
+            parts[bdim] = dp if len(dp) > 1 else dp[0]
+        elif "data" in mesh.axis_names and len(x.shape) > bdim + 1:
+            # shard the longest non-batch dim over data
+            rest = [(d, i) for i, d in enumerate(x.shape) if i > bdim]
+            if rest:
+                d, i = max(rest)
+                if d % mesh.shape["data"] == 0:
+                    parts[i] = "data"
+        if model > 1:
+            candidates = []
+            if len(x.shape) >= 4:
+                candidates.append(len(x.shape) - 2)   # kv-heads
+            if len(x.shape) >= 3:
+                candidates.append(bdim + 1)           # seq / length / heads
+            for i in candidates:
+                if parts[i] is None and x.shape[i] % model == 0:
+                    parts[i] = "model"
+                    break
+        return NamedSharding(mesh, P(*parts))
+
+    return jax.tree.map(one, cache_tree)

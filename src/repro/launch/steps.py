@@ -1,0 +1,422 @@
+"""Step builders: the executable units the launcher / dry-run lower.
+
+Two train-step families (DESIGN.md §4):
+
+* ``gspmd`` — the production 2D-sharded step. Parameters follow the
+  logical-axis rules (FSDP over ``data``, TP over ``model``), activations
+  carry SP constraints, XLA owns every collective. This is the substrate
+  every architecture (including the 110B/132B cells) runs on, and the
+  baseline the roofline table is derived from.
+
+* TAC modes (``sockets`` / ``vma`` / ``hadronio`` / ``hadronio_rs``) — the
+  paper's regime: data-parallel peers exchanging gradient traffic, with the
+  synchronization strategy swapped behind a fixed API (the transparency
+  claim). The step runs inside a fully-manual ``shard_map`` over every mesh
+  axis (one flattened DP ring — each device is one netty "connection");
+  model compute is purely local, gradient sync is the explicit per-slice
+  collective schedule of :mod:`repro.core.tac`.
+
+Serve steps (prefill / decode) always run under GSPMD — inference has no
+gradient traffic, which is the paper's scope; the cache/batch sharding
+rules live in launch/sharding.py.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig, RunConfig, ShapeConfig
+from repro.core import aggregation as agg
+from repro.core import tac
+from repro.models import api
+from repro.models.common import abstract_params, param_bytes
+from repro.models.layers import no_shard
+from repro.optim import adamw
+from repro.launch.sharding import (batch_sharding, cache_shardings,
+                                   make_shard_fn, param_shardings)
+
+PyTree = Any
+
+
+class TrainState(NamedTuple):
+    params: PyTree
+    opt: adamw.AdamState          # tree moments (gspmd/ddp) or flat shards (_rs)
+    step: jax.Array
+    ef: Optional[jax.Array] = None   # error-feedback (TAC compression)
+
+
+# ---------------------------------------------------------------------------
+# Shared pieces
+# ---------------------------------------------------------------------------
+
+
+def _loss_fn(cfg: ModelConfig, shard_fn):
+    def f(params, batch):
+        l, aux = api.loss(params, batch, cfg, shard_fn)
+        return l, aux
+    return f
+
+
+def _microbatches(batch: PyTree, n: int) -> PyTree:
+    """(B, ...) -> (n, B/n, ...) for gradient accumulation."""
+    def split(x):
+        b = x.shape[0]
+        assert b % n == 0, (b, n)
+        return x.reshape(n, b // n, *x.shape[1:])
+    return jax.tree.map(split, batch)
+
+
+def _accumulate_grads(loss_fn, params, batch, n_micro: int):
+    """Mean loss/grads over ``n_micro`` sequential microbatches."""
+    if n_micro == 1:
+        (l, aux), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+            params, batch)
+        return l, aux, grads
+    micro = _microbatches(batch, n_micro)
+
+    def body(carry, mb):
+        acc, lsum = carry
+        (l, _aux), g = jax.value_and_grad(loss_fn, has_aux=True)(params, mb)
+        acc = jax.tree.map(lambda a, b: a + b.astype(jnp.float32), acc, g)
+        return (acc, lsum + l), None
+
+    zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+    (gacc, lsum), _ = jax.lax.scan(body, (zeros, jnp.zeros((), jnp.float32)),
+                                   micro)
+    inv = 1.0 / n_micro
+    grads = jax.tree.map(lambda g: g * inv, gacc)
+    return lsum * inv, {}, grads
+
+
+# ---------------------------------------------------------------------------
+# GSPMD production step (2D sharded: FSDP + TP + SP)
+# ---------------------------------------------------------------------------
+
+
+def init_train_state(rng: jax.Array, run: RunConfig) -> TrainState:
+    params = api.init(rng, run.model)
+    return TrainState(params=params, opt=adamw.init(params),
+                      step=jnp.zeros((), jnp.int32))
+
+
+def abstract_train_state(run: RunConfig) -> TrainState:
+    """ShapeDtypeStruct state for the dry-run (no allocation)."""
+    params = api.abstract(run.model)
+    f32 = lambda p: jax.ShapeDtypeStruct(p.shape, jnp.float32)
+    return TrainState(
+        params=params,
+        opt=adamw.AdamState(mu=jax.tree.map(f32, params),
+                            nu=jax.tree.map(f32, params),
+                            count=jax.ShapeDtypeStruct((), jnp.int32)),
+        step=jax.ShapeDtypeStruct((), jnp.int32))
+
+
+def train_state_shardings(mesh, run: RunConfig, *, fsdp: bool = True):
+    """NamedSharding tree matching :func:`abstract_train_state`."""
+    specs = api.specs(run.model)
+    ps = param_shardings(mesh, specs, fsdp=fsdp)
+    scalar = NamedSharding(mesh, P())
+    return TrainState(params=ps,
+                      opt=adamw.AdamState(mu=ps, nu=ps, count=scalar),
+                      step=scalar)
+
+
+def make_train_step_gspmd(run: RunConfig, mesh):
+    """Returns (step_fn, state_shardings, batch_shardings_fn).
+
+    ``step_fn(state, batch) -> (state, metrics)`` — jit with the returned
+    shardings; XLA/GSPMD owns all collectives (the "kernel network stack"
+    baseline at 2D scale).
+    """
+    cfg = run.model
+    shard_fn = make_shard_fn(mesh)
+    loss_fn = _loss_fn(cfg, shard_fn)
+
+    def step_fn(state: TrainState, batch: dict):
+        l, aux, grads = _accumulate_grads(loss_fn, state.params, batch,
+                                          run.microbatches)
+        new_params, new_opt, metrics = adamw.update(
+            grads, state.opt, state.params, run)
+        metrics = dict(metrics, loss=l)
+        return TrainState(new_params, new_opt, state.step + 1), metrics
+
+    return step_fn, train_state_shardings(mesh, run), batch_sharding
+
+
+# ---------------------------------------------------------------------------
+# TAC step (paper's technique): fully-manual DP ring over every mesh axis
+# ---------------------------------------------------------------------------
+
+
+def tac_scatter_size(n_shards: int, pod_size: int, comm) -> int:
+    """ZeRO-1 scatter-group size: with hierarchical (pod-aware)
+    collectives the reduce-scatter runs IN-POD, so shards are 1/in-pod
+    sized and replicated across pods (hierarchical ZeRO)."""
+    if comm.hierarchical and pod_size > 1:
+        assert n_shards % pod_size == 0
+        return n_shards // pod_size
+    return n_shards
+
+
+def abstract_tac_state(run: RunConfig, n_shards: int,
+                       pod_size: int = 1) -> TrainState:
+    """State for the TAC step. ``hadronio_rs`` keeps flat ZeRO-1 moment
+    shards of length padded_elems / scatter_size; other modes keep tree
+    moments. ``n_shards`` is the TOTAL ring size; ``pod_size`` > 1 makes
+    the scatter group in-pod (see tac_scatter_size)."""
+    params = api.abstract(run.model)
+    f32 = lambda p: jax.ShapeDtypeStruct(p.shape, jnp.float32)
+    ef = None
+    if run.comm.compress in ("bf16", "int8_ef"):
+        # per-peer residual: global shape carries the ring dim
+        plan = agg.make_plan(params, run.comm)
+        ef = jax.ShapeDtypeStruct((n_shards, plan.n_slices, plan.slice_elems),
+                                  jnp.float32)
+    if run.comm.mode == "hadronio_rs":
+        # flat ZeRO-1 moment shards; the leading ring dim makes each peer's
+        # shard explicit (global (n_shards, len), local (1, len))
+        plan = agg.make_plan(params, run.comm)
+        eff = tac_scatter_size(n_shards, pod_size, run.comm)
+        assert plan.padded_elems % eff == 0
+        shard = jax.ShapeDtypeStruct(
+            (n_shards, plan.padded_elems // eff), jnp.float32)
+        opt = adamw.AdamState(mu=shard, nu=shard,
+                              count=jax.ShapeDtypeStruct((), jnp.int32))
+    else:
+        opt = adamw.AdamState(mu=jax.tree.map(f32, params),
+                              nu=jax.tree.map(f32, params),
+                              count=jax.ShapeDtypeStruct((), jnp.int32))
+    return TrainState(params=params, opt=opt,
+                      step=jax.ShapeDtypeStruct((), jnp.int32), ef=ef)
+
+
+def init_tac_state(rng: jax.Array, run: RunConfig, n_shards: int,
+                   pod_size: int = 1) -> TrainState:
+    sds = abstract_tac_state(run, n_shards, pod_size)
+    params = api.init(rng, run.model)
+    zeros = lambda s: jnp.zeros(s.shape, s.dtype)
+    return TrainState(params=params,
+                      opt=adamw.AdamState(jax.tree.map(zeros, sds.opt.mu),
+                                          jax.tree.map(zeros, sds.opt.nu),
+                                          jnp.zeros((), jnp.int32)),
+                      step=jnp.zeros((), jnp.int32),
+                      ef=None if sds.ef is None else zeros(sds.ef))
+
+
+def _decay_mask_flat(plan: agg.PackPlan) -> np.ndarray:
+    """Per-element weight-decay mask in packed-flat layout (decay only
+    params with ndim >= 2, matching adamw.update)."""
+    mask = np.zeros((plan.padded_elems,), np.float32)
+    for (start, end), shape in zip(plan.offsets, plan.shapes):
+        if len(shape) >= 2:
+            mask[start:end] = 1.0
+    return mask
+
+
+def _decay_mask_traced(plan: agg.PackPlan) -> jax.Array:
+    """Same mask built from fills inside the trace — avoids embedding a
+    params-sized host constant in the jaxpr (a 110B model's mask is
+    ~2 GB; ranges of 2D leaves are contiguous, so a handful of
+    dynamic-update-slices suffice)."""
+    mask = jnp.zeros((plan.padded_elems,), jnp.float32)
+    run_start = None
+    runs = []
+    for (start, end), shape in zip(plan.offsets, plan.shapes):
+        if len(shape) >= 2:
+            if run_start is None:
+                run_start = start
+            run_end = end
+        else:
+            if run_start is not None:
+                runs.append((run_start, run_end))
+                run_start = None
+    if run_start is not None:
+        runs.append((run_start, run_end))
+    for s, e in runs:
+        mask = jax.lax.dynamic_update_slice_in_dim(
+            mask, jnp.ones((e - s,), jnp.float32), s, axis=0)
+    return mask
+
+
+def _flat_adamw_update(flat_p, flat_g, mu, nu, count, decay_mask, run):
+    """AdamW on flat vectors (the ZeRO-1 shard path). All f32."""
+    b1, b2 = run.beta1, run.beta2
+    lr = adamw.schedule(run, count)
+    c1 = 1.0 - b1 ** count.astype(jnp.float32)
+    c2 = 1.0 - b2 ** count.astype(jnp.float32)
+    mu = b1 * mu + (1 - b1) * flat_g
+    nu = b2 * nu + (1 - b2) * jnp.square(flat_g)
+    step = (mu / c1) / (jnp.sqrt(nu / c2) + run.eps)
+    step = step + run.weight_decay * decay_mask * flat_p
+    return flat_p - lr * step, mu, nu
+
+
+def make_train_step_tac(run: RunConfig, mesh):
+    """Returns (step_fn, state_shardings, batch_shardings_fn).
+
+    Fully-manual shard_map over every mesh axis: one flattened DP ring of
+    ``n_shards`` peers ("connections"). Params replicated; batch sharded on
+    dim 0; gradient sync is the explicit TAC schedule. ``hadronio_rs``
+    additionally shards the optimizer moments (ZeRO-1) as flat slices.
+    """
+    cfg = run.model
+    comm = run.comm
+    axes = tuple(mesh.axis_names)
+    n_shards = int(np.prod([mesh.shape[a] for a in axes]))
+    pod_size = mesh.shape.get("pod", 1)
+    pod_axis = "pod" if pod_size > 1 else None
+    data_axes = tuple(a for a in axes if a != "pod") if pod_axis else axes
+    eff_shards = tac_scatter_size(n_shards, pod_size, comm)
+    loss_fn = _loss_fn(cfg, no_shard)   # manual region: compute is local
+
+    plan = None
+    if comm.mode == "hadronio_rs":
+        plan = agg.make_plan(api.abstract(cfg), comm)
+        assert plan.padded_elems % eff_shards == 0, \
+            (plan.padded_elems, eff_shards)
+
+    def body(state: TrainState, batch: dict):
+        # local loss scaled so psum'd grads are the global-mean grads
+        def scaled_loss(p, b):
+            l, aux = loss_fn(p, b)
+            return l / n_shards, aux
+
+        l, _aux, grads = _accumulate_grads(scaled_loss, state.params, batch,
+                                           run.microbatches)
+        loss = jax.lax.psum(l, axes)
+
+        ef = None if state.ef is None else state.ef[0]   # local residual
+        res = tac.sync_grads(grads, comm, data_axis=data_axes,
+                             pod_axis=pod_axis, ef=ef)
+        new_ef = None if res.ef is None else res.ef[None]
+
+        if comm.mode == "hadronio_rs":
+            # ZeRO-1: update this peer's flat param/moment shard, then
+            # all-gather the updated parameter slices (per slice). With
+            # hierarchical collectives the shard index is in-pod.
+            flat_p = agg.pack(state.params, res.plan)
+            nsl = res.plan.n_slices
+            my = jax.lax.axis_index(res.gather_axes)
+            psl = flat_p.reshape(nsl, eff_shards, -1)[:, my].reshape(-1)
+            gsh = res.flat_shard
+            # grad clip on the global flat grad norm (shards replicate
+            # across pods in hierarchical mode: normalize the psum)
+            gn2 = jax.lax.psum(jnp.sum(jnp.square(gsh)), axes)
+            gn2 = gn2 / (n_shards // eff_shards)
+            gnorm = jnp.sqrt(gn2)
+            scale = jnp.minimum(1.0, run.grad_clip / jnp.maximum(gnorm, 1e-12))
+            gsh = gsh * scale
+            dm = _decay_mask_traced(res.plan).reshape(nsl, eff_shards,
+                                                      -1)[:, my]
+            count = state.opt.count + 1
+            new_psl, new_mu, new_nu = _flat_adamw_update(
+                psl, gsh, state.opt.mu[0], state.opt.nu[0], count,
+                dm.reshape(-1), run)
+            new_params = tac.gather_updated(
+                new_psl.astype(jnp.float32), res.plan, state.params, comm,
+                gather_axes=res.gather_axes)
+            new_opt = adamw.AdamState(new_mu[None], new_nu[None], count)
+            metrics = {"loss": loss, "grad_norm": gnorm,
+                       "lr": adamw.schedule(run, count)}
+            return TrainState(new_params, new_opt, state.step + 1,
+                              new_ef), metrics
+
+        new_params, new_opt, metrics = adamw.update(
+            res.grads, state.opt, state.params, run)
+        metrics = dict(metrics, loss=loss)
+        return TrainState(new_params, new_opt, state.step + 1,
+                          new_ef), metrics
+
+    # ---- shard_map plumbing -------------------------------------------
+    state_sds = abstract_tac_state(run, n_shards, pod_size)
+    replicated = P()
+    batch_spec = P(axes)          # dim 0 over the flattened ring
+
+    if comm.mode == "hadronio_rs":
+        opt_specs = adamw.AdamState(mu=batch_spec, nu=batch_spec,
+                                    count=replicated)
+    else:
+        opt_specs = jax.tree.map(lambda _: replicated, state_sds.opt)
+    state_specs = TrainState(
+        params=jax.tree.map(lambda _: replicated, state_sds.params),
+        opt=opt_specs,
+        step=replicated,
+        ef=None if state_sds.ef is None else batch_spec)
+    batch_specs_fn = lambda b: jax.tree.map(lambda _: batch_spec, b)
+
+    def step_fn(state: TrainState, batch: dict):
+        bspecs = batch_specs_fn(batch)
+        out = jax.shard_map(
+            body, mesh=mesh,
+            in_specs=(state_specs, bspecs),
+            out_specs=(state_specs,
+                       {"loss": replicated, "grad_norm": replicated,
+                        "lr": replicated}),
+            check_vma=False)(state, batch)
+        return out
+
+    def shardings(b=None):
+        ns = lambda spec: NamedSharding(mesh, spec)
+        ss = jax.tree.map(ns, state_specs)
+        return ss
+
+    def batch_shardings(mesh_, batch_tree):
+        return jax.tree.map(lambda _: NamedSharding(mesh_, batch_spec),
+                            batch_tree)
+
+    return step_fn, shardings(), batch_shardings
+
+
+def make_train_step(run: RunConfig, mesh):
+    """Dispatch on ``run.comm.mode`` (the transparent boundary: callers
+    never change)."""
+    if run.comm.mode == "gspmd":
+        return make_train_step_gspmd(run, mesh)
+    return make_train_step_tac(run, mesh)
+
+
+# ---------------------------------------------------------------------------
+# Serve steps (GSPMD)
+# ---------------------------------------------------------------------------
+
+
+def make_prefill_step(run: RunConfig, mesh):
+    cfg = run.model
+    shard_fn = make_shard_fn(mesh)
+
+    def prefill_fn(params, batch):
+        return api.prefill(params, batch, cfg, shard_fn)
+
+    return prefill_fn
+
+
+def make_decode_step(run: RunConfig, mesh):
+    """``serve_step``: one new token against a KV cache of seq_len."""
+    cfg = run.model
+    shard_fn = make_shard_fn(mesh)
+
+    def decode_fn(params, cache, batch):
+        logits, new_cache = api.decode_step(params, cache, batch, cfg,
+                                            shard_fn)
+        return logits, new_cache
+
+    return decode_fn
+
+
+def serve_specs(run: RunConfig, shape: ShapeConfig, mesh):
+    """(abstract params, abstract cache, inputs, shardings) for decode
+    cells. The cache length is the cell's seq_len (sliding-window archs
+    cap at the window — that is the sub-quadratic property)."""
+    cfg = run.model
+    params = api.abstract(cfg)
+    cache = api.cache_specs(cfg, shape.global_batch, shape.seq_len)
+    inputs = api.input_specs(cfg, shape)
+    pshard = param_shardings(mesh, api.specs(cfg), fsdp=True)
+    cshard = cache_shardings(mesh, cache)
+    ishard = batch_sharding(mesh, inputs)
+    return params, cache, inputs, pshard, cshard, ishard

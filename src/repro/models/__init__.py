@@ -1,0 +1,6 @@
+from repro.models import api
+from repro.models.api import (abstract, cache_specs, decode_step, init,
+                              init_cache, input_specs, loss, prefill, specs)
+
+__all__ = ["api", "abstract", "cache_specs", "decode_step", "init",
+           "init_cache", "input_specs", "loss", "prefill", "specs"]

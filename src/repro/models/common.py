@@ -1,0 +1,114 @@
+"""Parameter-spec system shared by all model families.
+
+Models declare their parameters as a pytree of :class:`ParamSpec` (shape +
+*logical axes* + initializer). The launch layer maps logical axes to mesh
+axes (launch/sharding.py); ``init_params`` materializes the tree. Keeping
+specs separate from arrays lets the dry-run build shardings without ever
+allocating full-size parameters.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+from typing import Any, Callable, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+PyTree = Any
+
+# Logical axis vocabulary (see launch/sharding.py for the mesh mapping):
+#   layers   — stacked-scan leading dim (never sharded)
+#   vocab    — vocabulary dim (TP)
+#   embed    — d_model dim (FSDP over data)
+#   heads    — fused q-heads dim H*Dh (TP when divisible)
+#   kv_heads — fused kv-heads dim (TP when divisible)
+#   mlp      — d_ff dim (TP)
+#   experts  — MoE expert dim (EP)
+#   lru      — RG-LRU width (TP)
+#   frames/seq — positional tables (not sharded)
+
+
+@dataclass(frozen=True)
+class ParamSpec:
+    shape: Tuple[int, ...]
+    axes: Tuple[Optional[str], ...]
+    init: str = "normal"          # normal | zeros | ones
+    scale: float = 1.0            # stddev = 0.02 * scale for "normal"
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.axes), (self.shape, self.axes)
+        assert self.init in ("normal", "zeros", "ones")
+
+
+def stacked(spec: ParamSpec, layers: int) -> ParamSpec:
+    """Add a leading ``layers`` dim for scan-over-layers stacking."""
+    return ParamSpec((layers,) + spec.shape, ("layers",) + spec.axes,
+                     spec.init, spec.scale)
+
+
+def tree_paths(tree: PyTree) -> list[tuple[str, Any]]:
+    """Flatten a nested-dict tree into (dotted_path, leaf) pairs."""
+    out: list[tuple[str, Any]] = []
+
+    def rec(prefix: str, node: Any):
+        if isinstance(node, dict):
+            for k in sorted(node):
+                rec(f"{prefix}.{k}" if prefix else str(k), node[k])
+        else:
+            out.append((prefix, node))
+
+    rec("", tree)
+    return out
+
+
+def init_params(rng: jax.Array, specs: PyTree, dtype: str) -> PyTree:
+    """Materialize a ParamSpec tree. Keys are folded from the dotted path so
+    init is order-independent (property-tested)."""
+    jdt = jnp.dtype(dtype)
+
+    def leaf(path: str, spec: ParamSpec) -> jax.Array:
+        if spec.init == "zeros":
+            return jnp.zeros(spec.shape, jdt)
+        if spec.init == "ones":
+            return jnp.ones(spec.shape, jdt)
+        key = jax.random.fold_in(rng, _path_hash(path))
+        x = jax.random.normal(key, spec.shape, jnp.float32) * (0.02 * spec.scale)
+        return x.astype(jdt)
+
+    return _map_with_path(leaf, specs)
+
+
+def abstract_params(specs: PyTree, dtype: str) -> PyTree:
+    """ShapeDtypeStruct tree for the dry-run (no allocation)."""
+    jdt = jnp.dtype(dtype)
+    return jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct(s.shape, jdt),
+        specs, is_leaf=lambda x: isinstance(x, ParamSpec))
+
+
+def _path_hash(path: str) -> int:
+    h = 2166136261
+    for ch in path.encode():
+        h = ((h ^ ch) * 16777619) & 0x7FFFFFFF
+    return h
+
+
+def _map_with_path(fn: Callable[[str, Any], Any], tree: PyTree,
+                   prefix: str = "") -> PyTree:
+    if isinstance(tree, dict):
+        return {k: _map_with_path(fn, v, f"{prefix}.{k}" if prefix else str(k))
+                for k, v in tree.items()}
+    return fn(prefix, tree)
+
+
+def param_bytes(specs: PyTree, dtype: str) -> int:
+    n = 0
+    for _, s in tree_paths(specs):
+        n += int(np.prod(s.shape)) * jnp.dtype(dtype).itemsize
+    return n
+
+
+def cast_compute(x: jax.Array, cfg) -> jax.Array:
+    return x.astype(jnp.dtype(cfg.compute_dtype))

@@ -1,0 +1,263 @@
+"""RecurrentGemma-style hybrid stack (arXiv:2402.19427): RG-LRU recurrent
+blocks + local (windowed) attention, cycled by ``cfg.block_pattern``
+(assigned 1 attention : 2 recurrent). Every temporal block is followed by a
+gated MLP, per the Griffin residual structure.
+
+RG-LRU: r_t = sigmoid(Wa y_t + ba); i_t = sigmoid(Wx y_t + bx)
+        a_t = exp(-c * softplus(Lambda) * r_t)           (c = 8)
+        h_t = a_t h_{t-1} + sqrt(1 - a_t^2) * (i_t * y_t)
+Train/prefill evaluate the recurrence with ``lax.associative_scan``
+(parallel prefix — the TPU-friendly form; the Pallas kernel in
+kernels/rglru.py is the fused production path). Decode is the single-step
+update, so decode state is O(lru_width) — long_500k runs.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import attention as att
+from repro.models import transformer as tfm
+from repro.models.common import ParamSpec, stacked
+from repro.models.layers import (ShardFn, apply_mlp, apply_norm, mlp_specs,
+                                 no_shard, norm_specs)
+
+RGLRU_C = 8.0
+
+
+def _lru_blocks(cfg: ModelConfig) -> tuple[int, int]:
+    lw = cfg.lru_width or cfg.d_model
+    nb = max(1, cfg.num_heads)
+    assert lw % nb == 0, (lw, nb)
+    return nb, lw // nb
+
+
+def recurrent_block_specs(cfg: ModelConfig) -> dict:
+    d = cfg.d_model
+    lw = cfg.lru_width or cfg.d_model
+    nb, bs = _lru_blocks(cfg)
+    ds = tfm.depth_scale(cfg)
+    return {
+        "ln1": norm_specs(d, cfg.norm_kind),
+        "ln2": norm_specs(d, cfg.norm_kind),
+        "w_in": ParamSpec((d, lw), ("embed", "lru")),
+        "w_gate": ParamSpec((d, lw), ("embed", "lru")),
+        "conv_w": ParamSpec((cfg.conv1d_width, lw), (None, "lru")),
+        "conv_b": ParamSpec((lw,), ("lru",), init="zeros"),
+        "wa": ParamSpec((nb, bs, bs), ("lru_blocks", None, None)),
+        "ba": ParamSpec((lw,), ("lru",), init="zeros"),
+        "wx": ParamSpec((nb, bs, bs), ("lru_blocks", None, None)),
+        "bx": ParamSpec((lw,), ("lru",), init="zeros"),
+        "lam": ParamSpec((lw,), ("lru",), init="ones"),
+        "w_out": ParamSpec((lw, d), ("lru", "embed"), scale=ds),
+        "mlp": mlp_specs(d, cfg.d_ff, cfg.mlp_kind, ds),
+    }
+
+
+def _causal_conv1d(x: jax.Array, w: jax.Array, b: jax.Array,
+                   prev: Optional[jax.Array]):
+    """Depthwise causal conv. x: (B,T,C); w: (cw,C); prev: (B,cw-1,C) state.
+    Returns (y, new_prev)."""
+    cw = w.shape[0]
+    if prev is None:
+        prev = jnp.zeros((x.shape[0], cw - 1, x.shape[2]), x.dtype)
+    xp = jnp.concatenate([prev, x], axis=1)
+    y = b.astype(x.dtype)[None, None, :] + sum(
+        xp[:, i:i + x.shape[1]] * w[i].astype(x.dtype) for i in range(cw))
+    return y, xp[:, -(cw - 1):, :]
+
+
+def _rglru(y: jax.Array, p: dict, h0: jax.Array, nb: int, bs: int):
+    """y: (B,T,lru) f32. h0: (B,lru) f32. Returns (h_seq (B,T,lru), h_last)."""
+    b, t, lw = y.shape
+    yb = y.reshape(b, t, nb, bs)
+    r = jax.nn.sigmoid(jnp.einsum("btni,nij->btnj", yb,
+                                  p["wa"].astype(jnp.float32)).reshape(b, t, lw)
+                       + p["ba"].astype(jnp.float32))
+    i = jax.nn.sigmoid(jnp.einsum("btni,nij->btnj", yb,
+                                  p["wx"].astype(jnp.float32)).reshape(b, t, lw)
+                       + p["bx"].astype(jnp.float32))
+    log_a = -RGLRU_C * jax.nn.softplus(p["lam"].astype(jnp.float32)) * r
+    a = jnp.exp(log_a)
+    gated = jnp.sqrt(jnp.maximum(1.0 - jnp.square(a), 1e-12)) * (i * y)
+
+    if t == 1:
+        h = a[:, 0] * h0 + gated[:, 0]
+        return h[:, None], h
+    # h_t = a_t h_{t-1} + b_t  via associative scan; fold h0 into b_1.
+    gated = gated.at[:, 0].add(a[:, 0] * h0)
+
+    def combine(c1, c2):
+        a1, b1 = c1
+        a2, b2 = c2
+        return a1 * a2, a2 * b1 + b2
+
+    _, hs = jax.lax.associative_scan(combine, (a, gated), axis=1)
+    return hs, hs[:, -1]
+
+
+def apply_recurrent_block(p: dict, x: jax.Array, cfg: ModelConfig, *,
+                          shard_fn: ShardFn, state: dict):
+    """state: {"h": (B,lru) f32, "conv": (B,cw-1,lru)}."""
+    nb, bs = _lru_blocks(cfg)
+    dt = x.dtype
+    xin = apply_norm(p["ln1"], x, cfg.norm_kind)
+    y = jnp.einsum("btd,dl->btl", xin, p["w_in"].astype(dt))
+    gate = jnp.einsum("btd,dl->btl", xin, p["w_gate"].astype(dt))
+    y = shard_fn(y, ("batch", None, "lru"))
+    y, new_conv = _causal_conv1d(y, p["conv_w"], p["conv_b"], state["conv"])
+    hs, h_last = _rglru(y.astype(jnp.float32), p,
+                        state["h"].astype(jnp.float32), nb, bs)
+    out = hs.astype(dt) * jax.nn.gelu(gate)
+    out = jnp.einsum("btl,ld->btd", out, p["w_out"].astype(dt))
+    x = x + out
+    x = shard_fn(x, ("batch", "seq", None))
+
+    h2 = apply_norm(p["ln2"], x, cfg.norm_kind)
+    x = x + apply_mlp(p["mlp"], h2, cfg.mlp_kind, shard_fn)
+    x = shard_fn(x, ("batch", "seq", None))
+    return x, {"h": h_last, "conv": new_conv}
+
+
+# ---------------------------------------------------------------------------
+# Pattern stack: scan over groups of len(block_pattern); remainder unrolled.
+# ---------------------------------------------------------------------------
+
+
+def _group_layout(cfg: ModelConfig) -> tuple[int, tuple[str, ...]]:
+    pat = cfg.block_pattern
+    n_groups = cfg.num_layers // len(pat)
+    tail = tuple(pat[i % len(pat)]
+                 for i in range(n_groups * len(pat), cfg.num_layers))
+    return n_groups, tail
+
+
+def hybrid_stack_specs(cfg: ModelConfig) -> dict:
+    pat = cfg.block_pattern
+    n_groups, tail = _group_layout(cfg)
+
+    def one(kind: str) -> dict:
+        if kind == "rglru":
+            return recurrent_block_specs(cfg)
+        return tfm.block_specs(cfg, "dense")
+
+    group = {f"b{i}_{k}": one(k) for i, k in enumerate(pat)}
+    specs = {"groups": jax.tree.map(lambda s: stacked(s, n_groups), group,
+                                    is_leaf=lambda x: isinstance(x, ParamSpec))}
+    for i, k in enumerate(tail):
+        specs[f"tail{i}_{k}"] = one(k)
+    return specs
+
+
+def _cache_entry_specs(cfg: ModelConfig, kind: str, batch: int, dtype):
+    if kind == "rglru":
+        lw = cfg.lru_width or cfg.d_model
+        return {
+            "h": jax.ShapeDtypeStruct((batch, lw), jnp.float32),
+            "conv": jax.ShapeDtypeStruct((batch, cfg.conv1d_width - 1, lw),
+                                         jnp.dtype(dtype)),
+        }
+    w = cfg.local_window
+    return {
+        "k": jax.ShapeDtypeStruct((batch, w, cfg.num_kv_heads, cfg.head_dim),
+                                  jnp.dtype(dtype)),
+        "v": jax.ShapeDtypeStruct((batch, w, cfg.num_kv_heads, cfg.head_dim),
+                                  jnp.dtype(dtype)),
+    }
+
+
+def hybrid_cache_specs(cfg: ModelConfig, batch: int, dtype) -> dict:
+    pat = cfg.block_pattern
+    n_groups, tail = _group_layout(cfg)
+    group = {f"b{i}_{k}": _cache_entry_specs(cfg, k, batch, dtype)
+             for i, k in enumerate(pat)}
+    out = {"groups": jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct((n_groups,) + s.shape, s.dtype), group)}
+    for i, k in enumerate(tail):
+        out[f"tail{i}_{k}"] = _cache_entry_specs(cfg, k, batch, dtype)
+    return out
+
+
+def init_hybrid_cache(cfg: ModelConfig, batch: int, dtype) -> dict:
+    return jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype),
+                        hybrid_cache_specs(cfg, batch, dtype))
+
+
+def _apply_kind(p, x, cfg, kind, mode, shard_fn, cache, pos, q_positions):
+    if kind == "rglru":
+        if cache is None:
+            b = x.shape[0]
+            lw = cfg.lru_width or cfg.d_model
+            cache = {"h": jnp.zeros((b, lw), jnp.float32),
+                     "conv": jnp.zeros((b, cfg.conv1d_width - 1, lw), x.dtype)}
+        x, new = apply_recurrent_block(p, x, cfg, shard_fn=shard_fn,
+                                       state=cache)
+        if mode == "train":
+            new = None
+        return x, new, jnp.zeros((), jnp.float32)
+    # local attention block
+    ck = cache["k"] if cache else None
+    cv = cache["v"] if cache else None
+    x, nk, nv, aux = tfm.apply_block(
+        p, x, cfg, kind="dense", mode=mode, shard_fn=shard_fn,
+        window=cfg.local_window, cache_k=ck, cache_v=cv, pos=pos,
+        q_positions=q_positions)
+    if mode == "train":
+        return x, None, aux
+    # prefill caches arrive already in rolling window layout (apply_block)
+    return x, {"k": nk, "v": nv}, aux
+
+
+def apply_hybrid_stack(params: dict, x: jax.Array, cfg: ModelConfig, *,
+                       mode: str, shard_fn: ShardFn = no_shard,
+                       cache: Optional[dict] = None,
+                       pos: Optional[jax.Array] = None,
+                       q_positions: Optional[jax.Array] = None):
+    pat = cfg.block_pattern
+    n_groups, tail = _group_layout(cfg)
+    use_cache = mode != "train"
+    if use_cache and cache is None:
+        cache = init_hybrid_cache(cfg, x.shape[0], x.dtype)
+
+    def group_body(carry, xs):
+        x = carry
+        aux = jnp.zeros((), jnp.float32)
+        if use_cache:
+            p, c = xs
+        else:
+            p, c = xs, {}
+        new_c = {}
+        for i, k in enumerate(pat):
+            key = f"b{i}_{k}"
+            x, nc, a = _apply_kind(p[key], x, cfg, k, mode, shard_fn,
+                                   c.get(key) if use_cache else None,
+                                   pos, q_positions)
+            aux = aux + a
+            if use_cache:
+                new_c[key] = nc
+        return x, (new_c, aux) if use_cache else aux
+
+    from repro.models.unroll import scan_or_unroll
+    body = jax.checkpoint(group_body) if mode == "train" else group_body
+    if use_cache:
+        x, (gcache, auxs) = scan_or_unroll(
+            body, x, (params["groups"], cache["groups"]), n_groups)
+    else:
+        x, auxs = scan_or_unroll(body, x, params["groups"], n_groups)
+        gcache = None
+    aux = jnp.sum(auxs)
+
+    new_cache = {"groups": gcache} if use_cache else None
+    for i, k in enumerate(tail):
+        key = f"tail{i}_{k}"
+        x, nc, a = _apply_kind(params[key], x, cfg, k, mode, shard_fn,
+                               cache.get(key) if use_cache else None,
+                               pos, q_positions)
+        aux = aux + a
+        if use_cache:
+            new_cache[key] = nc
+    return x, new_cache, aux

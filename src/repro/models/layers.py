@@ -1,0 +1,142 @@
+"""Shared layers: norms, RoPE, embeddings, MLPs, activation-sharding hooks.
+
+All functions are pure; parameters arrive as dict subtrees produced from the
+matching ``*_specs`` helpers. Activation sharding constraints are injected
+via the ``shard_fn`` threaded through model code (identity on a single
+device; launch/sharding.py supplies the mesh-aware version).
+"""
+from __future__ import annotations
+
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import ParamSpec
+
+ShardFn = Callable[[jax.Array, tuple], jax.Array]
+
+
+def no_shard(x: jax.Array, logical_axes: tuple) -> jax.Array:
+    return x
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+
+def norm_specs(d: int, kind: str) -> dict:
+    if kind == "rmsnorm":
+        return {"scale": ParamSpec((d,), ("embed",), init="ones")}
+    return {"scale": ParamSpec((d,), ("embed",), init="ones"),
+            "bias": ParamSpec((d,), ("embed",), init="zeros")}
+
+
+def apply_norm(p: dict, x: jax.Array, kind: str, eps: float = 1e-6) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    if kind == "rmsnorm":
+        var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+        y = xf * jax.lax.rsqrt(var + eps)
+        return (y * p["scale"].astype(jnp.float32)).astype(x.dtype)
+    mean = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    y = (xf - mean) * jax.lax.rsqrt(var + eps)
+    y = y * p["scale"].astype(jnp.float32) + p["bias"].astype(jnp.float32)
+    return y.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Rotary position embeddings
+# ---------------------------------------------------------------------------
+
+
+def rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (..., S, H, Dh); positions: broadcastable to (..., S)."""
+    if theta <= 0:
+        return x
+    dh = x.shape[-1]
+    half = dh // 2
+    freq = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions[..., :, None].astype(jnp.float32) * freq  # (..., S, half)
+    cos = jnp.cos(ang)[..., :, None, :]                       # (..., S, 1, half)
+    sin = jnp.sin(ang)[..., :, None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    xf1, xf2 = x1.astype(jnp.float32), x2.astype(jnp.float32)
+    out = jnp.concatenate([xf1 * cos - xf2 * sin,
+                           xf2 * cos + xf1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Embeddings / LM head
+# ---------------------------------------------------------------------------
+
+
+def embedding_specs(vocab: int, d: int, tie: bool) -> dict:
+    out = {"tok": ParamSpec((vocab, d), ("vocab", "embed"))}
+    if not tie:
+        out["out"] = ParamSpec((d, vocab), ("embed", "vocab"))
+    return out
+
+
+def embed_tokens(p: dict, tokens: jax.Array, dtype) -> jax.Array:
+    return jnp.take(p["tok"], tokens, axis=0).astype(dtype)
+
+
+def lm_logits(p: dict, x: jax.Array, shard_fn: ShardFn = no_shard) -> jax.Array:
+    w = p.get("out")
+    if w is None:
+        w = p["tok"].T
+    logits = jnp.einsum("bsd,dv->bsv", x, w.astype(x.dtype))
+    return shard_fn(logits, ("batch", None, "vocab"))
+
+
+def cross_entropy(logits: jax.Array, labels: jax.Array,
+                  mask: Optional[jax.Array] = None) -> jax.Array:
+    """Token-mean cross entropy, fp32 reductions, fused-friendly."""
+    lf = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(lf, axis=-1)
+    gold = jnp.take_along_axis(lf, labels[..., None], axis=-1)[..., 0]
+    nll = lse - gold
+    if mask is not None:
+        m = mask.astype(jnp.float32)
+        return jnp.sum(nll * m) / jnp.maximum(jnp.sum(m), 1.0)
+    return jnp.mean(nll)
+
+
+# ---------------------------------------------------------------------------
+# MLPs
+# ---------------------------------------------------------------------------
+
+
+def mlp_specs(d: int, f: int, kind: str, depth_scale: float) -> dict:
+    if kind == "swiglu":
+        return {
+            "wi": ParamSpec((d, f), ("embed", "mlp")),
+            "wg": ParamSpec((d, f), ("embed", "mlp")),
+            "wo": ParamSpec((f, d), ("mlp", "embed"), scale=depth_scale),
+        }
+    return {
+        "wi": ParamSpec((d, f), ("embed", "mlp")),
+        "bi": ParamSpec((f,), ("mlp",), init="zeros"),
+        "wo": ParamSpec((f, d), ("mlp", "embed"), scale=depth_scale),
+        "bo": ParamSpec((d,), ("embed",), init="zeros"),
+    }
+
+
+def apply_mlp(p: dict, x: jax.Array, kind: str,
+              shard_fn: ShardFn = no_shard) -> jax.Array:
+    if kind == "swiglu":
+        h = jnp.einsum("bsd,df->bsf", x, p["wi"].astype(x.dtype))
+        g = jnp.einsum("bsd,df->bsf", x, p["wg"].astype(x.dtype))
+        h = jax.nn.silu(g) * h
+    else:
+        h = jnp.einsum("bsd,df->bsf", x, p["wi"].astype(x.dtype))
+        h = h + p["bi"].astype(x.dtype)
+        h = jax.nn.gelu(h)
+    h = shard_fn(h, ("batch", None, "mlp"))
+    out = jnp.einsum("bsf,fd->bsd", h, p["wo"].astype(x.dtype))
+    if "bo" in p:
+        out = out + p["bo"].astype(x.dtype)
+    return out

@@ -1,0 +1,121 @@
+"""Token-choice top-k MoE with grouped (per-batch-row) sort dispatch.
+
+Dispatch is computed independently per batch row (the GShard "group"
+trick, G = batch): every (token, choice) gets a rank within its expert
+*within its row* via a sort + change-point cummax (O(S·k log S·k), fully
+vectorized over rows); ranks >= per-row capacity drop (scatter
+``mode="drop"`` / gather ``mode="fill"`` keep it branch-free).
+
+Why grouped: scatter indices become row-local, so under GSPMD the
+dispatch buffer shards cleanly as (batch -> data, experts -> model) and
+expert compute ("begd,edf") is LOCAL to each (data, model) shard pair —
+no token ever crosses the data axis. The earlier global-flat dispatch
+made GSPMD replicate the whole buffer ("involuntary full
+rematerialization"): 939 s collective on dbrx train_4k vs this layout —
+see EXPERIMENTS.md §Perf cell D. Expert FLOPs remain the true *active*
+FLOPs (E x C x d x f with C ~= S*k/E), keeping the roofline honest.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.common import ParamSpec
+from repro.models.layers import ShardFn, no_shard
+
+
+def moe_specs(cfg: ModelConfig) -> dict:
+    d, f, e = cfg.d_model, cfg.d_ff, cfg.moe.num_experts
+    return {
+        "router": ParamSpec((d, e), ("embed", None)),
+        "wi": ParamSpec((e, d, f), ("experts", "embed", "mlp")),
+        "wg": ParamSpec((e, d, f), ("experts", "embed", "mlp")),
+        "wo": ParamSpec((e, f, d), ("experts", "mlp", "embed")),
+    }
+
+
+def capacity(tokens_per_group: int, cfg: ModelConfig) -> int:
+    m = cfg.moe
+    c = int(tokens_per_group * m.top_k / m.num_experts * m.capacity_factor)
+    return max(16, -(-c // 16) * 16)      # sublane-aligned multiple
+
+
+def _ranks_within_expert(eids: jax.Array) -> jax.Array:
+    """eids: (B, N) expert ids. Returns (B, N) rank of each entry among
+    same-expert entries of its row (stable order). Sort + change-point
+    cummax — no segment_sum, vectorizes over rows."""
+    b, n = eids.shape
+    order = jnp.argsort(eids, axis=-1, stable=True)              # (B, N)
+    sorted_e = jnp.take_along_axis(eids, order, axis=-1)
+    idx = jnp.arange(n)
+    change = jnp.concatenate(
+        [jnp.ones((b, 1), bool), sorted_e[:, 1:] != sorted_e[:, :-1]],
+        axis=-1)
+    start = jnp.where(change, idx, 0)
+    running_start = jax.lax.cummax(start, axis=1)
+    rank_sorted = idx - running_start                            # (B, N)
+    ranks = jnp.zeros_like(eids)
+    brow = jnp.arange(b)[:, None]
+    ranks = ranks.at[brow, order].set(rank_sorted)
+    return ranks
+
+
+def apply_moe(p: dict, x: jax.Array, cfg: ModelConfig,
+              shard_fn: ShardFn = no_shard):
+    """x: (B, S, D) -> (out, aux_loss). Dispatch is per-row (grouped)."""
+    m = cfg.moe
+    b, s, d = x.shape
+    k, e = m.top_k, m.num_experts
+    c = capacity(s, cfg)
+    dt = x.dtype
+
+    # --- route (per token) ---
+    logits = jnp.einsum("bsd,de->bse", x, p["router"].astype(dt))
+    logits = logits.astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)
+    weights, idx = jax.lax.top_k(probs, k)                       # (B,S,k)
+    weights = weights / jnp.sum(weights, axis=-1, keepdims=True)
+
+    # --- per-row rank within expert ---
+    eids = idx.reshape(b, s * k)                                 # (B, S*k)
+    ranks = _ranks_within_expert(eids)
+
+    # --- dispatch: (B, E, C, D) buffer, over-capacity drops. vmap over
+    # rows so the scatter carries operand-batching dims — GSPMD then
+    # shards it over batch instead of replicating (§Perf cell D) ---
+    tok_of = jnp.repeat(jnp.arange(s), k)                        # (S*k,)
+    src = x[:, tok_of]                                           # (B,S*k,D)
+
+    def scatter_row(src_r, eids_r, ranks_r):
+        return jnp.zeros((e, c, d), dt).at[eids_r, ranks_r].set(
+            src_r, mode="drop")
+
+    buf = jax.vmap(scatter_row)(src, eids, ranks)
+    buf = shard_fn(buf, ("batch", "experts", None, None))
+
+    # --- expert compute (grouped swiglu; local per (data, model) shard) ---
+    h = jnp.einsum("becd,edf->becf", buf, p["wi"].astype(dt))
+    g = jnp.einsum("becd,edf->becf", buf, p["wg"].astype(dt))
+    h = jax.nn.silu(g) * h
+    h = shard_fn(h, ("batch", "experts", None, "mlp"))
+    out_buf = jnp.einsum("becf,efd->becd", h, p["wo"].astype(dt))
+    out_buf = shard_fn(out_buf, ("batch", "experts", None, None))
+
+    # --- combine: gather per-assignment outputs, weighted sum over k ---
+    def gather_row(buf_r, eids_r, ranks_r):
+        return buf_r.at[eids_r, ranks_r].get(mode="fill", fill_value=0)
+
+    gathered = jax.vmap(gather_row)(out_buf, eids, ranks)
+    gathered = gathered.reshape(b, s, k, d)
+    out = jnp.einsum("bskd,bsk->bsd", gathered, weights.astype(dt))
+    out = shard_fn(out, ("batch", "seq", None))
+
+    # --- aux losses: load balance (Switch) + router z-loss ---
+    me = jnp.mean(probs, axis=(0, 1))                            # (e,)
+    oh = jax.nn.one_hot(eids, e, dtype=jnp.float32)              # (B,S*k,E)
+    frac = jnp.mean(oh, axis=(0, 1))
+    lb = e * jnp.sum(me * frac)
+    z = jnp.mean(jnp.square(jax.nn.logsumexp(logits, axis=-1)))
+    aux = 0.01 * lb + 1e-3 * z
+    return out, aux

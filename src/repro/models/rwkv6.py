@@ -1,0 +1,188 @@
+"""RWKV-6 "Finch" (arXiv:2404.05892): attention-free time mix with
+data-dependent decay + squared-ReLU channel mix.
+
+Recurrence (per head, head_size hs): state S in R^{hs x hs},
+    S_t = diag(w_t) S_{t-1} + k_t (x) v_t
+    y_t = r_t . (S_{t-1} + diag(u) k_t (x) v_t)
+with w_t = exp(-exp(w0 + lora_w(x_t))) in (0,1) — the data-dependent decay.
+
+Train/prefill use a ``lax.scan`` over time (compact HLO; the Pallas chunked
+kernel in kernels/rwkv6_scan.py is the TPU production path and is validated
+against this module). Decode is the single-step update — O(1) in sequence
+length, which is why all long-context cells run for this family.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.common import ParamSpec, stacked
+from repro.models.layers import ShardFn, apply_norm, no_shard, norm_specs
+
+N_MIX = 5  # r, k, v, g, w token-shift interpolations
+
+
+def rwkv_block_specs(cfg: ModelConfig) -> dict:
+    d, f = cfg.d_model, cfg.d_ff
+    lw, lm = cfg.rwkv_decay_lora, cfg.rwkv_mix_lora
+    return {
+        "ln1": norm_specs(d, "layernorm"),
+        "ln2": norm_specs(d, "layernorm"),
+        "tm": {
+            "mu_x": ParamSpec((d,), ("embed",), init="zeros"),
+            "mu": ParamSpec((N_MIX, d), (None, "embed"), init="zeros"),
+            "mix_a": ParamSpec((d, N_MIX * lm), ("embed", None)),
+            "mix_b": ParamSpec((N_MIX, lm, d), (None, None, "embed")),
+            "w0": ParamSpec((d,), ("embed",), init="zeros"),
+            "w_a": ParamSpec((d, lw), ("embed", None)),
+            "w_b": ParamSpec((lw, d), (None, "embed")),
+            "u": ParamSpec((d,), ("embed",), init="zeros"),
+            "wr": ParamSpec((d, d), ("embed", "heads")),
+            "wk": ParamSpec((d, d), ("embed", "heads")),
+            "wv": ParamSpec((d, d), ("embed", "heads")),
+            "wg": ParamSpec((d, d), ("embed", "heads")),
+            "wo": ParamSpec((d, d), ("heads", "embed")),
+            "ln_x": norm_specs(d, "layernorm"),
+        },
+        "cm": {
+            "mu_k": ParamSpec((d,), ("embed",), init="zeros"),
+            "mu_r": ParamSpec((d,), ("embed",), init="zeros"),
+            "wk": ParamSpec((d, f), ("embed", "mlp")),
+            "wv": ParamSpec((f, d), ("mlp", "embed")),
+            "wr": ParamSpec((d, d), ("embed", "heads")),
+        },
+    }
+
+
+def rwkv_stack_specs(cfg: ModelConfig) -> dict:
+    one = rwkv_block_specs(cfg)
+    return jax.tree.map(lambda s: stacked(s, cfg.num_layers), one,
+                        is_leaf=lambda x: isinstance(x, ParamSpec))
+
+
+def _shift(x: jax.Array, prev: jax.Array) -> jax.Array:
+    """Token shift: x_{t-1}, with ``prev`` (B,1,D) for position -1."""
+    return jnp.concatenate([prev, x[:, :-1]], axis=1)
+
+
+def _ddlerp(p: dict, x: jax.Array, xx: jax.Array):
+    """Data-dependent interpolations for the 5 branches. Returns (B,T,5,D)."""
+    dt = x.dtype
+    base = x + xx * p["mu_x"].astype(dt)
+    lo = jnp.tanh(jnp.einsum("btd,dm->btm", base, p["mix_a"].astype(dt)))
+    lo = lo.reshape(*lo.shape[:-1], N_MIX, -1)
+    delta = jnp.einsum("btnm,nmd->btnd", lo, p["mix_b"].astype(dt))
+    mix = p["mu"].astype(dt) + delta                      # (B,T,5,D)
+    return x[:, :, None, :] + xx[:, :, None, :] * mix
+
+
+def _wkv_scan(r, k, v, w, u, state):
+    """r,k,v: (B,T,H,hs); w: (B,T,H,hs) decay in (0,1); u: (H,hs).
+    state: (B,H,hs,hs). Returns (out (B,T,H,hs), new_state). f32 math."""
+    def step(s, inp):
+        rt, kt, vt, wt = inp                              # (B,H,hs)
+        kv = kt[..., :, None] * vt[..., None, :]          # (B,H,hs,hs)
+        y = jnp.einsum("bhi,bhij->bhj", rt, s + u[None, :, :, None] * kv)
+        s = wt[..., :, None] * s + kv
+        return s, y
+
+    seq = jax.tree.map(lambda a: jnp.moveaxis(a, 1, 0), (r, k, v, w))
+    state, ys = jax.lax.scan(step, state, seq)
+    return jnp.moveaxis(ys, 0, 1), state
+
+
+def apply_rwkv_block(p: dict, x: jax.Array, cfg: ModelConfig, *,
+                     shard_fn: ShardFn, state: dict):
+    """state: {"wkv": (B,H,hs,hs) f32, "tm_x": (B,1,D), "cm_x": (B,1,D)}.
+    Works for any T (train/prefill: T=S; decode: T=1)."""
+    b, t, d = x.shape
+    hs = cfg.rwkv_head_size
+    h = d // hs
+    dt = x.dtype
+
+    # ---- time mix ----
+    xin = apply_norm(p["ln1"], x, "layernorm")
+    xprev = _shift(xin, state["tm_x"].astype(dt))
+    xx = xprev - xin
+    xb = _ddlerp(p["tm"], xin, xx)                         # (B,T,5,D)
+    xr, xk, xv, xg, xw = [xb[:, :, i] for i in range(N_MIX)]
+    r = jnp.einsum("btd,dk->btk", xr, p["tm"]["wr"].astype(dt))
+    k = jnp.einsum("btd,dk->btk", xk, p["tm"]["wk"].astype(dt))
+    v = jnp.einsum("btd,dk->btk", xv, p["tm"]["wv"].astype(dt))
+    g = jax.nn.silu(jnp.einsum("btd,dk->btk", xg, p["tm"]["wg"].astype(dt)))
+    wl = jnp.tanh(jnp.einsum("btd,dl->btl", xw, p["tm"]["w_a"].astype(dt)))
+    wlog = p["tm"]["w0"].astype(jnp.float32) + \
+        jnp.einsum("btl,ld->btd", wl, p["tm"]["w_b"].astype(dt)).astype(jnp.float32)
+    w = jnp.exp(-jnp.exp(wlog))                            # (B,T,D) in (0,1)
+
+    shp = (b, t, h, hs)
+    rh = shard_fn(r.reshape(shp).astype(jnp.float32), ("batch", None, "heads", None))
+    kh = shard_fn(k.reshape(shp).astype(jnp.float32), ("batch", None, "heads", None))
+    vh = shard_fn(v.reshape(shp).astype(jnp.float32), ("batch", None, "heads", None))
+    wh = shard_fn(w.reshape(shp), ("batch", None, "heads", None))
+    u = p["tm"]["u"].astype(jnp.float32).reshape(h, hs)
+    y, new_wkv = _wkv_scan(rh, kh, vh, wh, u, state["wkv"].astype(jnp.float32))
+
+    y = apply_norm(p["tm"]["ln_x"], y.reshape(b, t, d).astype(dt),
+                   "layernorm", eps=1e-5)
+    y = y * g
+    y = jnp.einsum("btk,kd->btd", y, p["tm"]["wo"].astype(dt))
+    x = x + y
+    x = shard_fn(x, ("batch", "seq", None))
+    new_tm_x = xin[:, -1:, :]
+
+    # ---- channel mix ----
+    xin = apply_norm(p["ln2"], x, "layernorm")
+    xprev = _shift(xin, state["cm_x"].astype(dt))
+    xx = xprev - xin
+    xk_ = xin + xx * p["cm"]["mu_k"].astype(dt)
+    xr_ = xin + xx * p["cm"]["mu_r"].astype(dt)
+    kk = jnp.einsum("btd,df->btf", xk_, p["cm"]["wk"].astype(dt))
+    kk = jnp.square(jax.nn.relu(kk))
+    kk = shard_fn(kk, ("batch", None, "mlp"))
+    vv = jnp.einsum("btf,fd->btd", kk, p["cm"]["wv"].astype(dt))
+    rr = jax.nn.sigmoid(jnp.einsum("btd,dk->btk", xr_, p["cm"]["wr"].astype(dt)))
+    x = x + rr * vv
+    x = shard_fn(x, ("batch", "seq", None))
+    new_state = {"wkv": new_wkv, "tm_x": new_tm_x, "cm_x": xin[:, -1:, :]}
+    return x, new_state
+
+
+def init_state_specs(cfg: ModelConfig, batch: int, dtype) -> dict:
+    d = cfg.d_model
+    hs = cfg.rwkv_head_size
+    h = d // hs
+    L = cfg.num_layers
+    return {
+        "wkv": jax.ShapeDtypeStruct((L, batch, h, hs, hs), jnp.float32),
+        "tm_x": jax.ShapeDtypeStruct((L, batch, 1, d), jnp.dtype(dtype)),
+        "cm_x": jax.ShapeDtypeStruct((L, batch, 1, d), jnp.dtype(dtype)),
+    }
+
+
+def init_state(cfg: ModelConfig, batch: int, dtype) -> dict:
+    return jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype),
+                        init_state_specs(cfg, batch, dtype))
+
+
+def apply_rwkv_stack(params: dict, x: jax.Array, cfg: ModelConfig, *,
+                     mode: str, shard_fn: ShardFn = no_shard,
+                     state: dict = None):
+    """Scan blocks over layers, threading per-layer state (always present —
+    zeros in train mode; state doubles as the decode cache)."""
+    b = x.shape[0]
+    if state is None:
+        state = init_state(cfg, b, x.dtype)
+
+    def body(carry, xs):
+        x = carry
+        p, st = xs
+        x, new_st = apply_rwkv_block(p, x, cfg, shard_fn=shard_fn, state=st)
+        return x, new_st
+
+    if mode == "train":
+        body = jax.checkpoint(body)
+    from repro.models.unroll import scan_or_unroll
+    x, new_state = scan_or_unroll(body, x, (params, state), cfg.num_layers)
+    return x, new_state

@@ -1,0 +1,53 @@
+"""Layer-loop unrolling switch.
+
+XLA's ``cost_analysis`` counts a while-loop body ONCE regardless of trip
+count (verified: scan(n=1|2|8) of a matmul all report identical FLOPs),
+so every scanned-over-layers model under-reports FLOPs / bytes /
+collective traffic by ~L x in the dry-run. The dry-run therefore lowers
+two small UNROLLED variants (1 and 2 layer groups) under this switch and
+extrapolates per-layer costs to the assigned depth — see
+launch/dryrun.py and EXPERIMENTS.md §Methodology.
+
+Training/serving code never sets this: scan keeps the HLO (and compile
+time) small, which is the production-correct choice.
+"""
+from __future__ import annotations
+
+import contextlib
+
+_UNROLL = False
+
+
+def unroll_enabled() -> bool:
+    return _UNROLL
+
+
+@contextlib.contextmanager
+def unrolled_layers():
+    global _UNROLL
+    prev = _UNROLL
+    _UNROLL = True
+    try:
+        yield
+    finally:
+        _UNROLL = prev
+
+
+def scan_or_unroll(body, init, xs, length: int):
+    """lax.scan(body, init, xs) or an equivalent Python loop when
+    unrolling is on. ``xs`` is a pytree stacked on dim 0 (length L)."""
+    import jax
+
+    if not _UNROLL:
+        return jax.lax.scan(body, init, xs)
+    carry = init
+    ys = []
+    for i in range(length):
+        x_i = jax.tree.map(lambda a: a[i], xs)
+        carry, y = body(carry, x_i)
+        ys.append(y)
+    if ys and ys[0] is not None:
+        stacked = jax.tree.map(lambda *zs: jax.numpy.stack(zs), *ys)
+    else:
+        stacked = None
+    return carry, stacked

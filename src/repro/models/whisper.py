@@ -1,0 +1,157 @@
+"""Whisper-style encoder-decoder backbone (arXiv:2212.04356).
+
+The conv/mel frontend is a STUB per the brief: inputs are precomputed frame
+embeddings (B, num_frames, d_model). Learned absolute positions (no RoPE),
+LayerNorm + GELU, biases — per the Whisper architecture. The few layers are
+unrolled (no scan; HLO stays small at 4+4).
+
+Decode cells run ``serve_step`` on the decoder: rolling self-attention KV
+cache of length seq_len plus precomputed cross-attention K/V.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import attention as att
+from repro.models import transformer as tfm
+from repro.models.common import ParamSpec
+from repro.models.layers import (ShardFn, apply_mlp, apply_norm,
+                                 embedding_specs, embed_tokens, lm_logits,
+                                 mlp_specs, no_shard, norm_specs)
+
+WHISPER_MAX_POS = 32768   # sized for the decode_32k cell (mechanical)
+
+
+def _enc_block_specs(cfg: ModelConfig) -> dict:
+    ds = tfm.depth_scale(cfg)
+    return {
+        "ln1": norm_specs(cfg.d_model, "layernorm"),
+        "ln2": norm_specs(cfg.d_model, "layernorm"),
+        "attn": att.attention_specs(cfg.d_model, cfg.num_heads,
+                                    cfg.num_kv_heads, cfg.head_dim,
+                                    cfg.qkv_bias, ds),
+        "mlp": mlp_specs(cfg.d_model, cfg.d_ff, "gelu", ds),
+    }
+
+
+def _dec_block_specs(cfg: ModelConfig) -> dict:
+    s = _enc_block_specs(cfg)
+    s["ln_x"] = norm_specs(cfg.d_model, "layernorm")
+    s["xattn"] = att.attention_specs(cfg.d_model, cfg.num_heads,
+                                     cfg.num_kv_heads, cfg.head_dim,
+                                     cfg.qkv_bias, tfm.depth_scale(cfg))
+    return s
+
+
+def whisper_specs(cfg: ModelConfig) -> dict:
+    specs: dict = {
+        "embed": embedding_specs(cfg.vocab_size, cfg.d_model,
+                                 cfg.tie_embeddings),
+        "pos_enc": ParamSpec((cfg.num_frames, cfg.d_model), ("frames", "embed")),
+        "pos_dec": ParamSpec((WHISPER_MAX_POS, cfg.d_model), ("seq", "embed")),
+        "ln_enc": norm_specs(cfg.d_model, "layernorm"),
+        "ln_dec": norm_specs(cfg.d_model, "layernorm"),
+    }
+    for i in range(cfg.encoder_layers):
+        specs[f"enc{i}"] = _enc_block_specs(cfg)
+    for i in range(cfg.num_layers):
+        specs[f"dec{i}"] = _dec_block_specs(cfg)
+    return specs
+
+
+def _self_attn(p, x, cfg, *, causal, positions, shard_fn,
+               cache_k=None, cache_v=None, pos=None, window=0):
+    q, k, v = att.project_qkv(p, x, x, positions, positions, 0.0, shard_fn)
+    if cache_k is not None:
+        out, nk, nv = att.decode_attend(q, cache_k, cache_v, k, v, pos,
+                                        num_heads=cfg.num_heads,
+                                        window=window, shard_fn=shard_fn)
+        return att.out_project(p, out, shard_fn), nk, nv
+    kx = att.expand_kv(k, cfg.num_heads)
+    vx = att.expand_kv(v, cfg.num_heads)
+    out = att.attend_chunked(q, kx, vx, causal=causal, window=0)
+    return att.out_project(p, out, shard_fn), k, v
+
+
+def _cross_attn(p, x, cfg, *, enc_k, enc_v, shard_fn):
+    """enc_k/v: (B,F,KV,Dh) precomputed from encoder output."""
+    b, s, _ = x.shape
+    dtp = x.dtype
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"].astype(dtp))
+    if "bq" in p:
+        q = q + p["bq"].astype(dtp)
+    kx = att.expand_kv(enc_k, cfg.num_heads)
+    vx = att.expand_kv(enc_v, cfg.num_heads)
+    qpos = jnp.arange(s)
+    kpos = jnp.arange(enc_k.shape[1])
+    out = att.attend_direct(q, kx, vx, qpos, kpos, causal=False)
+    return att.out_project(p, out, shard_fn)
+
+
+def encode(params: dict, frames: jax.Array, cfg: ModelConfig,
+           shard_fn: ShardFn = no_shard) -> jax.Array:
+    x = frames + params["pos_enc"].astype(frames.dtype)[None, :frames.shape[1]]
+    pos = jnp.arange(frames.shape[1])
+    for i in range(cfg.encoder_layers):
+        p = params[f"enc{i}"]
+        h = apply_norm(p["ln1"], x, "layernorm")
+        a, _, _ = _self_attn(p["attn"], h, cfg, causal=False, positions=pos,
+                             shard_fn=shard_fn)
+        x = x + a
+        h = apply_norm(p["ln2"], x, "layernorm")
+        x = x + apply_mlp(p["mlp"], h, "gelu", shard_fn)
+    return apply_norm(params["ln_enc"], x, "layernorm")
+
+
+def _cross_kv(params: dict, enc_out: jax.Array, cfg: ModelConfig):
+    """Precompute per-decoder-layer cross K/V: (L,B,F,KV,Dh) pair."""
+    ks, vs = [], []
+    dt = enc_out.dtype
+    for i in range(cfg.num_layers):
+        p = params[f"dec{i}"]["xattn"]
+        k = jnp.einsum("bsd,dhk->bshk", enc_out, p["wk"].astype(dt))
+        v = jnp.einsum("bsd,dhk->bshk", enc_out, p["wv"].astype(dt))
+        if "bk" in p:
+            k = k + p["bk"].astype(dt)
+            v = v + p["bv"].astype(dt)
+        ks.append(k)
+        vs.append(v)
+    return jnp.stack(ks), jnp.stack(vs)
+
+
+def decode_stack(params: dict, x: jax.Array, cfg: ModelConfig, *,
+                 mode: str, cross_k, cross_v, shard_fn: ShardFn,
+                 cache: Optional[dict] = None, pos=None):
+    """x: embedded decoder input (B,S,D). cross_k/v: (L,B,F,KV,Dh)."""
+    new_k, new_v = [], []
+    for i in range(cfg.num_layers):
+        p = params[f"dec{i}"]
+        h = apply_norm(p["ln1"], x, "layernorm")
+        if mode == "decode":
+            base = pos[..., None] if jnp.ndim(pos) else pos
+            positions = base + jnp.zeros((1,), jnp.int32)
+            a, nk, nv = _self_attn(p["attn"], h, cfg, causal=True,
+                                   positions=positions, shard_fn=shard_fn,
+                                   cache_k=cache["k"][i], cache_v=cache["v"][i],
+                                   pos=pos)
+        else:
+            positions = jnp.arange(x.shape[1])
+            a, nk, nv = _self_attn(p["attn"], h, cfg, causal=True,
+                                   positions=positions, shard_fn=shard_fn)
+        x = x + a
+        h = apply_norm(p["ln_x"], x, "layernorm")
+        x = x + _cross_attn(p["xattn"], h, cfg, enc_k=cross_k[i],
+                            enc_v=cross_v[i], shard_fn=shard_fn)
+        h = apply_norm(p["ln2"], x, "layernorm")
+        x = x + apply_mlp(p["mlp"], h, "gelu", shard_fn)
+        if mode != "train":
+            new_k.append(nk)
+            new_v.append(nv)
+    x = apply_norm(params["ln_dec"], x, "layernorm")
+    if mode == "train":
+        return x, None
+    return x, {"k": jnp.stack(new_k), "v": jnp.stack(new_v)}

@@ -1,0 +1,90 @@
+"""AdamW with decoupled weight decay, global-norm clipping and a linear
+warmup + cosine decay schedule. Pure pytree functions (no optax dependency)
+so the same code drives both the pytree path and TAC's packed-flat ZeRO
+path (arrays are arrays).
+
+Moments are fp32 regardless of parameter dtype; the update is computed in
+fp32 and cast back.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import RunConfig
+
+PyTree = Any
+
+
+class AdamState(NamedTuple):
+    mu: PyTree     # first moment (fp32)
+    nu: PyTree     # second moment (fp32)
+    count: jax.Array
+
+
+def init(params: PyTree) -> AdamState:
+    zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+    return AdamState(mu=jax.tree.map(zeros, params),
+                     nu=jax.tree.map(zeros, params),
+                     count=jnp.zeros((), jnp.int32))
+
+
+def schedule(cfg: RunConfig, step: jax.Array) -> jax.Array:
+    warm = jnp.minimum(step.astype(jnp.float32) / max(cfg.warmup_steps, 1), 1.0)
+    prog = jnp.clip((step - cfg.warmup_steps) /
+                    max(cfg.total_steps - cfg.warmup_steps, 1), 0.0, 1.0)
+    cos = 0.5 * (1.0 + jnp.cos(math.pi * prog))
+    return cfg.lr * warm * (0.1 + 0.9 * cos)
+
+
+def global_norm(tree: PyTree) -> jax.Array:
+    leaves = [jnp.sum(jnp.square(x.astype(jnp.float32)))
+              for x in jax.tree.leaves(tree)]
+    return jnp.sqrt(jnp.sum(jnp.stack(leaves)))
+
+
+def clip_by_global_norm(grads: PyTree, max_norm: float):
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-12))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale), grads), norm
+
+
+def update(grads: PyTree, state: AdamState, params: PyTree,
+           cfg: RunConfig) -> tuple[PyTree, AdamState, dict]:
+    """Returns (new_params, new_state, metrics). ``grads`` may be any dtype;
+    math is fp32. Weight decay is decoupled and skipped for 1-D params
+    (norm scales / biases), matching standard LLM practice."""
+    grads, gnorm = clip_by_global_norm(grads, cfg.grad_clip)
+    count = state.count + 1
+    lr = schedule(cfg, count)
+    b1, b2 = cfg.beta1, cfg.beta2
+    c1 = 1.0 - b1 ** count.astype(jnp.float32)
+    c2 = 1.0 - b2 ** count.astype(jnp.float32)
+
+    def upd(g, m, v, p):
+        m = b1 * m + (1 - b1) * g
+        v = b2 * v + (1 - b2) * jnp.square(g)
+        mh = m / c1
+        vh = v / c2
+        step = mh / (jnp.sqrt(vh) + cfg.eps)
+        pf = p.astype(jnp.float32)
+        if p.ndim >= 2:
+            step = step + cfg.weight_decay * pf
+        return (pf - lr * step).astype(p.dtype), m, v
+
+    flat_g, treedef = jax.tree.flatten(grads)
+    flat_m = jax.tree.leaves(state.mu)
+    flat_v = jax.tree.leaves(state.nu)
+    flat_p = jax.tree.leaves(params)
+    new_p, new_m, new_v = [], [], []
+    for g, m, v, p in zip(flat_g, flat_m, flat_v, flat_p):
+        a, b, c = upd(g, m, v, p)
+        new_p.append(a)
+        new_m.append(b)
+        new_v.append(c)
+    mk = lambda xs: jax.tree.unflatten(treedef, xs)
+    return mk(new_p), AdamState(mk(new_m), mk(new_v), count), \
+        {"grad_norm": gnorm, "lr": lr}

@@ -1,0 +1,3 @@
+from repro.serving.engine import DecodeEngine, Request, Result
+
+__all__ = ["DecodeEngine", "Request", "Result"]

@@ -1,0 +1,173 @@
+"""Batched decode engine: KV-cache manager + request batcher + sampler.
+
+The netty analogy carries over (DESIGN.md §2): requests are connections,
+the engine's fixed-size decode batch is the worker pool, and admission is
+round-robin like the paper's benchmark assigns connections to selectors.
+
+Mechanics:
+
+* Attention-family archs: prompts are **right-padded** to the bucket
+  length and tracked with per-request ``pos`` vectors — pad slots are
+  never attended (validity mask ``j <= pos``) and the first generated
+  token overwrites the first pad slot, so mixed-length batches are exact.
+* Recurrent archs (ssm / hybrid): the recurrence would absorb pad tokens,
+  so the batcher groups requests into *equal-length* buckets (exact, no
+  pads) — noted limitation vs. paged attention, acceptable at this scope.
+* Sampling: greedy or temperature; stop on ``eos_id`` or ``max_new``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import defaultdict
+from typing import Any, Callable, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig, RunConfig
+from repro.models import api
+from repro.models.layers import no_shard
+
+PyTree = Any
+
+
+@dataclasses.dataclass
+class Request:
+    uid: int
+    prompt: np.ndarray            # (len,) int32
+    max_new: int = 32
+    temperature: float = 0.0      # 0 -> greedy
+
+    def __post_init__(self):
+        self.prompt = np.asarray(self.prompt, np.int32)
+
+
+@dataclasses.dataclass
+class Result:
+    uid: int
+    tokens: np.ndarray            # generated tokens (<= max_new)
+    prompt_len: int
+    steps: int
+
+
+class DecodeEngine:
+    """Synchronous batched engine around prefill/decode_step.
+
+    ``max_batch`` bounds the decode batch; ``max_len`` bounds prompt+gen
+    length (the KV-cache allocation).
+    """
+
+    def __init__(self, cfg: ModelConfig, params: PyTree, *,
+                 max_batch: int = 8, max_len: int = 256,
+                 eos_id: Optional[int] = None, shard_fn=no_shard,
+                 rng: Optional[jax.Array] = None):
+        self.cfg = cfg
+        self.params = params
+        self.max_batch = max_batch
+        self.max_len = max_len
+        self.eos_id = eos_id
+        self.shard_fn = shard_fn
+        self.rng = rng if rng is not None else jax.random.PRNGKey(0)
+        self._recurrent = cfg.family in ("ssm", "hybrid")
+
+        self._prefill = jax.jit(
+            lambda p, b: api.prefill(p, b, cfg, shard_fn))
+        self._decode = jax.jit(
+            lambda p, c, b: api.decode_step(p, c, b, cfg, shard_fn))
+
+    # -- batching ------------------------------------------------------
+
+    def _buckets(self, reqs: Sequence[Request]) -> list[list[Request]]:
+        """Split requests into decode batches (round-robin admission).
+        Recurrent archs additionally bucket by exact prompt length."""
+        groups = defaultdict(list)
+        for r in reqs:
+            key = len(r.prompt) if self._recurrent else 0
+            groups[key].append(r)
+        out = []
+        for _, rs in sorted(groups.items()):
+            for i in range(0, len(rs), self.max_batch):
+                out.append(rs[i:i + self.max_batch])
+        return out
+
+    # -- sampling ------------------------------------------------------
+
+    def _sample(self, logits: jax.Array, temps: np.ndarray) -> jax.Array:
+        self.rng, k = jax.random.split(self.rng)
+        greedy = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        t = jnp.asarray(np.maximum(temps, 1e-6), jnp.float32)
+        sampled = jax.random.categorical(k, logits / t[:, None], axis=-1)
+        return jnp.where(jnp.asarray(temps) > 0.0,
+                         sampled.astype(jnp.int32), greedy)
+
+    # -- main entry ----------------------------------------------------
+
+    def generate(self, reqs: Sequence[Request]) -> list[Result]:
+        results: list[Result] = []
+        for bucket in self._buckets(reqs):
+            results.extend(self._run_bucket(bucket))
+        results.sort(key=lambda r: r.uid)
+        return results
+
+    def _run_bucket(self, bucket: list[Request]) -> list[Result]:
+        b = len(bucket)
+        lens = np.array([len(r.prompt) for r in bucket], np.int32)
+        pad_to = int(lens.max())
+        assert pad_to + max(r.max_new for r in bucket) <= self.max_len, \
+            "prompt + max_new exceeds engine max_len"
+        toks = np.zeros((b, pad_to), np.int32)
+        for i, r in enumerate(bucket):
+            toks[i, : lens[i]] = r.prompt
+
+        batch = {"tokens": jnp.asarray(toks)}
+        if not self._recurrent:
+            batch["last_pos"] = jnp.asarray(lens - 1)
+        if self.cfg.family == "vlm":
+            batch["patches"] = jnp.zeros(
+                (b, self.cfg.num_patches, self.cfg.d_model),
+                jnp.dtype(self.cfg.compute_dtype))
+        if self.cfg.family == "encdec":
+            batch["frames"] = jnp.zeros(
+                (b, self.cfg.num_frames, self.cfg.d_model),
+                jnp.dtype(self.cfg.compute_dtype))
+
+        logits, cache = self._prefill(self.params, batch)
+        cache = self._grow_cache(cache, b)
+
+        temps = np.array([r.temperature for r in bucket], np.float32)
+        max_new = max(r.max_new for r in bucket)
+        pos = jnp.asarray(lens)           # next write slot per request
+        out = np.full((b, max_new), -1, np.int64)
+        done = np.zeros((b,), bool)
+        tok = self._sample(logits, temps)
+        steps = 0
+        for t in range(max_new):
+            tok_np = np.asarray(tok)
+            for i, r in enumerate(bucket):
+                if not done[i] and t < r.max_new:
+                    out[i, t] = tok_np[i]
+                    if self.eos_id is not None and tok_np[i] == self.eos_id:
+                        done[i] = True
+                elif t >= r.max_new:
+                    done[i] = True
+            steps += 1
+            if done.all() or t == max_new - 1:
+                break
+            dec = {"token": tok, "pos": pos}
+            logits, cache = self._decode(self.params, cache, dec)
+            tok = self._sample(logits, temps)
+            pos = pos + 1
+
+        results = []
+        for i, r in enumerate(bucket):
+            gen = out[i][out[i] >= 0][: r.max_new]
+            results.append(Result(uid=r.uid, tokens=gen.astype(np.int64),
+                                  prompt_len=int(lens[i]), steps=steps))
+        return results
+
+    # -- cache management ----------------------------------------------
+
+    def _grow_cache(self, cache: PyTree, b: int) -> PyTree:
+        """Prefill caches are prompt-sized; decode needs max_len slots."""
+        return api.grow_cache(self.cfg, cache, self.max_len)

@@ -1,0 +1,22 @@
+# NOTE: deliberately no --xla_force_host_platform_device_count here (the
+# brief requires smoke tests to see 1 device). Multi-device behaviour is
+# exercised by the subprocess scripts under tests/distributed/.
+import os
+import sys
+
+import numpy as np
+import pytest
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax  # noqa: E402
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return jax.random.PRNGKey(0)
+
+
+@pytest.fixture()
+def np_rng():
+    return np.random.default_rng(0)

@@ -1,0 +1,93 @@
+"""Checkpoint store: roundtrip, atomicity, GC, async, mismatch hook,
+TAC moment resharding math."""
+import os
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.checkpoint import CheckpointStore
+from repro.launch.elastic import reshard_tac_opt
+
+
+def tree():
+    return {"w": jnp.arange(12.0).reshape(3, 4),
+            "opt": {"mu": jnp.ones((5,)), "count": jnp.asarray(7)}}
+
+
+def like_of(t):
+    return jax.tree.map(lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), t)
+
+
+def test_roundtrip(tmp_path):
+    st = CheckpointStore(str(tmp_path))
+    st.save(3, tree(), extra={"loss": 1.0})
+    assert st.latest_step() == 3
+    r = st.restore(3, like_of(tree()))
+    for a, b in zip(jax.tree.leaves(r), jax.tree.leaves(tree())):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    assert st.manifest(3)["extra"]["loss"] == 1.0
+
+
+def test_gc_keeps_last_k(tmp_path):
+    st = CheckpointStore(str(tmp_path), keep=2)
+    for s in (1, 2, 3, 4):
+        st.save(s, tree())
+    assert st.available_steps() == [3, 4]
+    assert st.latest_step() == 4
+
+
+def test_async_save(tmp_path):
+    st = CheckpointStore(str(tmp_path))
+    st.save_async(5, tree())
+    st.wait()
+    assert st.latest_step() == 5
+
+
+def test_atomic_overwrite(tmp_path):
+    st = CheckpointStore(str(tmp_path))
+    st.save(1, tree())
+    t2 = jax.tree.map(lambda x: x * 2, tree())
+    st.save(1, t2)
+    r = st.restore(1, like_of(tree()))
+    np.testing.assert_array_equal(np.asarray(r["w"]),
+                                  np.asarray(tree()["w"]) * 2)
+
+
+def test_dtype_cast_on_restore(tmp_path):
+    st = CheckpointStore(str(tmp_path))
+    st.save(1, {"w": jnp.ones((4,), jnp.float32)})
+    like = {"w": jax.ShapeDtypeStruct((4,), jnp.bfloat16)}
+    r = st.restore(1, like)
+    assert r["w"].dtype == jnp.bfloat16
+
+
+def test_mismatch_hook(tmp_path):
+    st = CheckpointStore(str(tmp_path))
+    st.save(1, {"m": jnp.arange(8.0).reshape(2, 4)})
+    like = {"m": jax.ShapeDtypeStruct((4, 2), jnp.float32)}
+    with pytest.raises(ValueError):
+        st.restore(1, like)
+    r = st.restore(1, like, on_mismatch=lambda n, a, ref: a.reshape(4, 2))
+    assert r["m"].shape == (4, 2)
+
+
+def test_reshard_tac_opt_roundtrip():
+    """Re-slicing flat moment shards preserves the global vector, for any
+    old/new ring sizes (the elastic-scaling invariant)."""
+    n_slices, slice_elems = 3, 512 * 4
+    glob = np.arange(n_slices * slice_elems, dtype=np.float32)
+    glob2 = glob.reshape(n_slices, slice_elems)
+
+    def shards_for(n):
+        c = slice_elems // n
+        return np.stack([
+            np.concatenate([glob2[s, i * c:(i + 1) * c]
+                            for s in range(n_slices)])
+            for i in range(n)])
+
+    for old, new in [(8, 4), (4, 8), (8, 8), (2, 16)]:
+        mu_old = shards_for(old)
+        mu_new, _ = reshard_tac_opt(mu_old, mu_old, old, new, n_slices)
+        np.testing.assert_array_equal(mu_new, shards_for(new))

@@ -1,0 +1,89 @@
+"""The assigned architecture table, verified field by field (the brief's
+numbers are normative — a typo here silently invalidates every cell)."""
+import pytest
+
+from repro.configs.registry import ARCH_IDS, get_config
+from repro.configs.base import SHAPES, cell_skip_reason, cells_for, reduced
+
+# (arch, layers, d_model, heads, kv, d_ff, vocab, family)
+ASSIGNED = {
+    "qwen1.5-4b": (40, 2560, 20, 20, 6912, 151936, "dense"),
+    "starcoder2-3b": (30, 3072, 24, 2, 12288, 49152, "dense"),
+    "qwen2-0.5b": (24, 896, 14, 2, 4864, 151936, "dense"),
+    "qwen1.5-110b": (80, 8192, 64, 8, 49152, 152064, "dense"),
+    "whisper-tiny": (4, 384, 6, 6, 1536, 51865, "encdec"),
+    "dbrx-132b": (40, 6144, 48, 8, 10752, 100352, "moe"),
+    "mixtral-8x7b": (32, 4096, 32, 8, 14336, 32000, "moe"),
+    "llava-next-mistral-7b": (32, 4096, 32, 8, 14336, 32000, "vlm"),
+    "rwkv6-7b": (32, 4096, 0, 0, 14336, 65536, "ssm"),
+    "recurrentgemma-9b": (38, 4096, 16, 1, 12288, 256000, "hybrid"),
+}
+
+
+def test_all_archs_present():
+    assert set(ARCH_IDS) == set(ASSIGNED)
+
+
+@pytest.mark.parametrize("arch", sorted(ASSIGNED))
+def test_assigned_numbers(arch):
+    L, d, h, kv, ff, v, fam = ASSIGNED[arch]
+    cfg = get_config(arch)
+    assert cfg.num_layers == L
+    assert cfg.d_model == d
+    assert cfg.num_heads == h
+    assert cfg.num_kv_heads == kv
+    assert cfg.d_ff == ff
+    assert cfg.vocab_size == v
+    assert cfg.family == fam
+
+
+def test_arch_features():
+    assert get_config("qwen1.5-4b").qkv_bias
+    assert get_config("qwen2-0.5b").qkv_bias
+    assert get_config("qwen1.5-110b").qkv_bias
+    assert not get_config("mixtral-8x7b").qkv_bias
+    mx = get_config("mixtral-8x7b")
+    assert mx.moe.num_experts == 8 and mx.moe.top_k == 2
+    assert mx.sliding_window == 4096
+    db = get_config("dbrx-132b")
+    assert db.moe.num_experts == 16 and db.moe.top_k == 4
+    rg = get_config("recurrentgemma-9b")
+    assert rg.block_pattern == ("rglru", "rglru", "local_attn")
+    wt = get_config("whisper-tiny")
+    assert wt.encoder_layers == 4
+
+
+def test_param_counts_plausible():
+    # analytic N within 25% of the nameplate for the honestly-named archs
+    expect = {"qwen1.5-110b": 110e9, "dbrx-132b": 132e9,
+              "mixtral-8x7b": 46.7e9, "rwkv6-7b": 7e9,
+              "recurrentgemma-9b": 9e9, "starcoder2-3b": 3e9}
+    for arch, n in expect.items():
+        got = get_config(arch).param_count()
+        assert abs(got - n) / n < 0.3, (arch, got, n)
+    mx = get_config("mixtral-8x7b")
+    assert mx.active_param_count() < 0.35 * mx.param_count() + 4e9
+
+
+def test_cells_and_skips():
+    total = 0
+    skipped = []
+    for arch in ARCH_IDS:
+        cfg = get_config(arch)
+        for s in SHAPES.values():
+            total += 1
+            if cell_skip_reason(cfg, s):
+                skipped.append((arch, s.name))
+    assert total == 40
+    # long_500k skips exactly the pure-full-attention archs
+    assert set(skipped) == {
+        (a, "long_500k") for a in
+        ("qwen1.5-4b", "starcoder2-3b", "qwen2-0.5b", "qwen1.5-110b",
+         "whisper-tiny", "dbrx-132b", "llava-next-mistral-7b")}
+
+
+@pytest.mark.parametrize("arch", sorted(ASSIGNED))
+def test_reduced_is_small(arch):
+    r = get_config(arch + "-reduced")
+    assert r.param_count() < 5e6
+    assert r.family == get_config(arch).family

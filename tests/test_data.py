@@ -1,0 +1,86 @@
+"""Data pipeline: determinism, exact resume, host sharding, binary shards."""
+import os
+import tempfile
+
+import numpy as np
+import pytest
+
+from repro.data import (BinarySource, DataConfig, SyntheticSource, batch_at,
+                        make_batches)
+
+
+def test_synthetic_deterministic():
+    s = SyntheticSource(256, seed=1)
+    a = batch_at(s, DataConfig(16, 4), 3)
+    b = batch_at(s, DataConfig(16, 4), 3)
+    np.testing.assert_array_equal(a["tokens"], b["tokens"])
+    assert (batch_at(s, DataConfig(16, 4), 4)["tokens"]
+            != a["tokens"]).any()
+    assert a["tokens"].max() < 256 and a["tokens"].min() >= 0
+
+
+def test_labels_are_shifted():
+    s = SyntheticSource(100, seed=0)
+    b = batch_at(s, DataConfig(12, 2), 0)
+    np.testing.assert_array_equal(b["tokens"][:, 1:], b["labels"][:, :-1])
+
+
+def test_host_sharding_partitions_global_batch():
+    s = SyntheticSource(64, seed=0)
+    full = batch_at(s, DataConfig(8, 6), 2)
+    parts = [batch_at(s, DataConfig(8, 6, host_index=i, num_hosts=3), 2)
+             for i in range(3)]
+    got = np.concatenate([p["tokens"] for p in parts])
+    np.testing.assert_array_equal(got, full["tokens"])
+
+
+def test_resume_equals_continuous():
+    s = SyntheticSource(64, seed=0)
+    dc = DataConfig(8, 2)
+    it = make_batches(s, dc, start_step=0)
+    run = [next(it) for _ in range(5)]
+    resumed = [next(make_batches(s, dc, start_step=k)) for k in range(5)]
+    for a, b in zip(run, resumed):
+        np.testing.assert_array_equal(a["tokens"], b["tokens"])
+
+
+def test_binary_source(tmp_path):
+    toks = (np.arange(10_000) * 7919) % 5000
+    f = tmp_path / "shard0.bin"
+    toks.astype(np.uint16).tofile(f)
+    src = BinarySource(str(tmp_path), seed=0)
+    b = batch_at(src, DataConfig(32, 4), 0)
+    assert b["tokens"].shape == (4, 32)
+    assert b["tokens"].max() < 5000
+    # the sampled sequence is a verbatim slice of the stream
+    seq = src.sequence(0, 0, 32)
+    pos = int(np.where(toks == seq[0])[0][0]) if seq[0] in toks else None
+    b2 = batch_at(src, DataConfig(32, 4), 0)
+    np.testing.assert_array_equal(b["tokens"], b2["tokens"])
+
+
+def test_binary_source_uint32_meta(tmp_path):
+    toks = np.arange(1000, dtype=np.uint32) + 70000
+    (tmp_path / "s.bin").write_bytes(toks.tobytes())
+    (tmp_path / "s.meta").write_text("uint32")
+    src = BinarySource(str(tmp_path))
+    seq = src.sequence(0, 0, 16)
+    assert seq.min() >= 70000
+
+
+def test_any_host_count_partitions():
+    from hypothesis import given, settings, strategies as st
+    s = SyntheticSource(97, seed=5)
+
+    @settings(max_examples=15, deadline=None)
+    @given(hosts=st.sampled_from([1, 2, 3, 4, 6, 12]),
+           step=st.integers(0, 50))
+    def check(hosts, step):
+        full = batch_at(s, DataConfig(8, 12), step)
+        parts = [batch_at(s, DataConfig(8, 12, host_index=i,
+                                        num_hosts=hosts), step)
+                 for i in range(hosts)]
+        got = np.concatenate([p["tokens"] for p in parts])
+        np.testing.assert_array_equal(got, full["tokens"])
+
+    check()

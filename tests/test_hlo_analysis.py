@@ -1,0 +1,80 @@
+"""HLO collective parser + roofline math (the dry-run's analysis layer)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.registry import get_config, get_shape
+from repro.launch import hlo_analysis as hlo
+
+SAMPLE = """
+HloModule m
+ENTRY e {
+  %p = bf16[16,512]{1,0} parameter(0)
+  %ag = bf16[16,8192]{1,0} all-gather(%p), dimensions={1}
+  %ar.1 = f32[1024]{0} all-reduce(%x), to_apply=%add
+  ROOT %rs = f32[64]{0} reduce-scatter(%y), dimensions={0}
+  %cp = u32[2,2]{1,0} collective-permute(%z), source_target_pairs={{0,1}}
+  %a2a = s8[128]{0} all-to-all(%w), dimensions={0}
+  %agd = bf16[4]{0} all-gather-done(%t)
+  %dot = f32[4,4]{1,0} dot(%a, %b)
+}
+"""
+
+
+def test_shape_bytes():
+    assert hlo.shape_bytes("bf16[16,512]") == 16 * 512 * 2
+    assert hlo.shape_bytes("f32[]") == 4
+    assert hlo.shape_bytes("(f32[8], bf16[4])") == 32 + 8
+    assert hlo.shape_bytes("s8[128]") == 128
+
+
+def test_collective_stats_parser():
+    st = hlo.collective_stats(SAMPLE)
+    assert st.counts == {"all-gather": 1, "all-reduce": 1,
+                         "reduce-scatter": 1, "collective-permute": 1,
+                         "all-to-all": 1}
+    assert st.bytes_["all-gather"] == 16 * 8192 * 2
+    assert st.bytes_["all-reduce"] == 1024 * 4
+    assert st.bytes_["reduce-scatter"] == 64 * 4
+    assert st.bytes_["all-to-all"] == 128
+    assert st.total_ops == 5
+
+
+def test_parser_on_real_compiled_module():
+    """Parse an actually-compiled psum program and find its all-reduce."""
+    if jax.device_count() < 2:
+        mesh = None
+    f = jax.jit(lambda x: x * 2 + 1)
+    txt = f.lower(jnp.ones((4,))).compile().as_text()
+    st = hlo.collective_stats(txt)
+    assert st.total_ops == 0            # no collectives in elementwise fn
+
+
+def test_roofline_terms_bottleneck():
+    t = hlo.roofline_terms(flops=1e17, hbm_bytes=1e9, collective_bytes=1e9,
+                           n_chips=256)
+    assert t["bottleneck"] == "compute"
+    t = hlo.roofline_terms(flops=1e9, hbm_bytes=1e14, collective_bytes=1e9,
+                           n_chips=1, flops_are_global=False)
+    assert t["bottleneck"] == "memory"
+    t = hlo.roofline_terms(flops=1e9, hbm_bytes=1e9, collective_bytes=1e13,
+                           n_chips=1, flops_are_global=False)
+    assert t["bottleneck"] == "collective"
+
+
+def test_model_flops_moe_uses_active():
+    mx = get_config("mixtral-8x7b")
+    shape = get_shape("train_4k")
+    f = hlo.model_flops(mx, shape)
+    # active ~13B of 47B total: 6*N_active*D bounds
+    n_tok = shape.global_batch * shape.seq_len
+    assert f < 6.2 * 20e9 * n_tok
+    assert f > 6.0 * 10e9 * n_tok
+
+
+def test_model_flops_decode_vs_train():
+    cfg = get_config("qwen2-0.5b")
+    tr = hlo.model_flops(cfg, get_shape("train_4k"))
+    de = hlo.model_flops(cfg, get_shape("decode_32k"))
+    assert tr > de * 1000     # decode is one token per sequence

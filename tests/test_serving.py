@@ -1,0 +1,66 @@
+"""Serving engine: batching exactness, eos, buckets, determinism."""
+import numpy as np
+import jax
+import pytest
+
+from repro.configs.registry import get_config
+from repro.models import api
+from repro.serving import DecodeEngine, Request
+
+
+@pytest.fixture(scope="module")
+def qwen():
+    cfg = get_config("qwen2-0.5b-reduced")
+    params = api.init(jax.random.PRNGKey(0), cfg)
+    return cfg, params
+
+
+def test_mixed_length_batch_is_exact(qwen):
+    cfg, params = qwen
+    eng = DecodeEngine(cfg, params, max_batch=4, max_len=64)
+    p1 = (np.arange(7) * 3) % cfg.vocab_size
+    p2 = (np.arange(12) * 5) % cfg.vocab_size
+    solo = eng.generate([Request(0, p1, max_new=5)])[0].tokens
+    both = eng.generate([Request(0, p1, max_new=5),
+                         Request(1, p2, max_new=5)])
+    np.testing.assert_array_equal(solo, both[0].tokens)
+    assert len(both[1].tokens) == 5
+
+
+def test_eos_stops_early(qwen):
+    cfg, params = qwen
+    eng = DecodeEngine(cfg, params, max_batch=2, max_len=64)
+    first = eng.generate([Request(0, np.arange(5), max_new=8)])[0].tokens
+    eos = int(first[1])
+    eng2 = DecodeEngine(cfg, params, max_batch=2, max_len=64, eos_id=eos)
+    out = eng2.generate([Request(0, np.arange(5), max_new=8)])[0].tokens
+    assert len(out) <= 2 + 1 and out[-1] == eos
+
+
+def test_respects_max_batch(qwen):
+    cfg, params = qwen
+    eng = DecodeEngine(cfg, params, max_batch=2, max_len=64)
+    reqs = [Request(i, np.arange(4 + i), max_new=3) for i in range(5)]
+    res = eng.generate(reqs)
+    assert sorted(r.uid for r in res) == list(range(5))
+    assert all(len(r.tokens) == 3 for r in res)
+
+
+def test_recurrent_arch_buckets_by_length():
+    cfg = get_config("rwkv6-7b-reduced")
+    params = api.init(jax.random.PRNGKey(1), cfg)
+    eng = DecodeEngine(cfg, params, max_batch=4, max_len=64)
+    p1 = np.arange(6) % cfg.vocab_size
+    p2 = np.arange(11) % cfg.vocab_size
+    solo = eng.generate([Request(0, p1, max_new=4)])[0].tokens
+    mixed = eng.generate([Request(0, p1, max_new=4),
+                          Request(1, p2, max_new=4)])
+    np.testing.assert_array_equal(solo, mixed[0].tokens)
+
+
+def test_greedy_is_deterministic(qwen):
+    cfg, params = qwen
+    eng = DecodeEngine(cfg, params, max_batch=2, max_len=64)
+    a = eng.generate([Request(0, np.arange(6), max_new=6)])[0].tokens
+    b = eng.generate([Request(0, np.arange(6), max_new=6)])[0].tokens
+    np.testing.assert_array_equal(a, b)

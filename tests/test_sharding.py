@@ -1,0 +1,98 @@
+"""Sharding rules on abstract meshes (no devices needed): TP/FSDP/EP
+placement, divisibility fallbacks, batch/cache rules."""
+import jax
+import numpy as np
+import pytest
+from jax.sharding import AbstractMesh, PartitionSpec as P
+
+from repro.configs.registry import get_config
+from repro.launch.sharding import spec_partition, cache_shardings, \
+    batch_sharding
+from repro.models import api
+from repro.models.common import ParamSpec, tree_paths
+
+POD = AbstractMesh((16, 16), ("data", "model"))
+MULTI = AbstractMesh((2, 16, 16), ("pod", "data", "model"))
+
+
+def test_tp_rules():
+    s = ParamSpec((4096, 14336), ("embed", "mlp"))
+    assert spec_partition(POD, s) == P("data", "model")
+    s = ParamSpec((4096, 32, 128), ("embed", "heads", None))
+    assert spec_partition(POD, s) == P("data", "model", None)
+
+
+def test_divisibility_fallback():
+    # qwen1.5-4b: 20 heads on a 16-way model axis -> replicated heads dim
+    s = ParamSpec((2560, 20, 128), ("embed", "heads", None))
+    assert spec_partition(POD, s) == P("data", None, None)
+    # 20*128=2560 fused would divide, but per-spec dims don't — fallback
+
+
+def test_experts_rule():
+    s = ParamSpec((16, 6144, 10752), ("experts", "embed", "mlp"))
+    part = spec_partition(POD, s)
+    assert part[0] == "model"          # EP over model axis
+    assert part[1] == "data"           # expert-internal FSDP
+    assert part[2] is None             # model already used by experts
+
+
+def test_no_axis_reuse_within_param():
+    cfg = get_config("qwen1.5-110b")
+    specs = api.specs(cfg)
+    for path, spec in tree_paths(specs):
+        part = spec_partition(POD, spec)
+        used = [a for a in jax.tree.leaves(tuple(part)) if a]
+        flat = []
+        for a in used:
+            flat.extend(a if isinstance(a, tuple) else (a,))
+        assert len(flat) == len(set(flat)), (path, part)
+
+
+def test_fsdp_toggle():
+    s = ParamSpec((4096, 14336), ("embed", "mlp"))
+    assert spec_partition(POD, s, fsdp=False) == P(None, "model")
+
+
+@pytest.mark.parametrize("arch", ["qwen1.5-110b", "mixtral-8x7b",
+                                  "rwkv6-7b", "recurrentgemma-9b"])
+def test_every_param_gets_some_sharding_on_pod(arch):
+    """At 110B scale every big tensor must shard somewhere; guard the
+    bytes-per-chip budget analytically."""
+    cfg = get_config(arch)
+    specs = api.specs(cfg)
+    per_chip = 0
+    for path, spec in tree_paths(specs):
+        part = spec_partition(POD, spec)
+        n = int(np.prod(spec.shape)) * 2      # bf16
+        div = 1
+        for axes in part:
+            if axes is None:
+                continue
+            for a in (axes if isinstance(axes, tuple) else (axes,)):
+                div *= dict(POD.shape)[a]
+        per_chip += n // div
+    # replicated parameter residue must fit comfortably in HBM
+    assert per_chip < 4e9, (arch, per_chip / 1e9)
+
+
+def test_cache_shardings_decode32k_110b():
+    cfg = get_config("qwen1.5-110b")
+    cache = api.cache_specs(cfg, 128, 32768)
+    sh = cache_shardings(POD, cache)
+    spec = sh["k"].spec
+    # (L, B, S, KV, Dh): batch over data; seq or kv over model
+    assert spec[1] == "data"
+    assert "model" in jax.tree.leaves(tuple(spec)), spec
+    # bytes per chip bounded
+    n = np.prod([80, 128, 32768, 8, 128]) * 2 / (16 * 16)
+    assert n < 3e9
+
+
+def test_batch_sharding_rules():
+    toks = jax.ShapeDtypeStruct((256, 4096), jax.numpy.int32)
+    sh = batch_sharding(MULTI, {"tokens": toks})
+    assert sh["tokens"].spec[0] == ("pod", "data")
+    small = jax.ShapeDtypeStruct((3, 4), jax.numpy.int32)
+    sh = batch_sharding(MULTI, {"x": small})
+    assert sh["x"].spec == P()        # indivisible -> replicated

@@ -1,0 +1,51 @@
+"""StableHLO (emitted-schedule) parser unit tests — crafted MLIR text,
+covering region-form ops whose type signature sits on the closing line."""
+from repro.launch.hlo_analysis import stablehlo_collective_stats
+
+SAMPLE = '''
+module @jit_step {
+  func.func public @main(%arg0: tensor<1024xf32>) -> tensor<1024xf32> {
+    %0 = "stablehlo.all_reduce"(%arg0) <{replica_groups = dense<0>}> ({
+    ^bb0(%a: tensor<f32>, %b: tensor<f32>):
+      %s = stablehlo.add %a, %b : tensor<f32>
+      stablehlo.return %s : tensor<f32>
+    }) : (tensor<1024xf32>) -> tensor<1024xf32>
+    %1 = "stablehlo.all_gather"(%0) {all_gather_dim = 0 : i64} : (tensor<1024xf32>) -> tensor<8192xf32>
+    %2 = "stablehlo.reduce_scatter"(%1) <{scatter_dimension = 0 : i64}> ({
+    ^bb0(%a: tensor<f32>, %b: tensor<f32>):
+      %s = stablehlo.add %a, %b : tensor<f32>
+      stablehlo.return %s : tensor<f32>
+    }) : (tensor<8192xf32>) -> tensor<1024xf32>
+    %3 = "stablehlo.collective_permute"(%2) {source_target_pairs = dense<0>} : (tensor<1024xf32>) -> tensor<1024xf32>
+    %4 = "stablehlo.all_to_all"(%3) {split_dimension = 0 : i64} : (tensor<1024xf32>) -> tensor<1024xf32>
+    return %4 : tensor<1024xf32>
+  }
+}
+'''
+
+
+def test_counts_and_bytes():
+    st = stablehlo_collective_stats(SAMPLE)
+    assert st.counts == {"all-reduce": 1, "all-gather": 1,
+                         "reduce-scatter": 1, "collective-permute": 1,
+                         "all-to-all": 1}
+    assert st.bytes_["all-reduce"] == 1024 * 4      # region-form
+    assert st.bytes_["all-gather"] == 8192 * 4      # inline form
+    assert st.bytes_["reduce-scatter"] == 1024 * 4  # region-form
+    assert st.total_ops == 5
+
+
+def test_bf16_and_int_dtypes():
+    txt = ('%1 = "stablehlo.all_gather"(%0) : (tensor<2x8xbf16>) -> '
+           'tensor<16x8xbf16>\n'
+           '%2 = "stablehlo.all_to_all"(%1) : (tensor<4xi32>) -> '
+           'tensor<4xi32>')
+    st = stablehlo_collective_stats(txt)
+    assert st.bytes_["all-gather"] == 16 * 8 * 2
+    assert st.bytes_["all-to-all"] == 16
+
+
+def test_non_collective_lines_ignored():
+    txt = "%5 = stablehlo.dot_general %a, %b : tensor<4x4xf32>"
+    st = stablehlo_collective_stats(txt)
+    assert st.total_ops == 0

@@ -1,0 +1,112 @@
+"""Single-device unit tests for launch/steps.py internals and the
+unroll switch (multi-device behaviour is covered by tests/distributed)."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs.base import CommConfig, RunConfig, ShapeConfig
+from repro.configs.registry import get_config
+from repro.core import aggregation as agg
+from repro.launch import steps as steps_mod
+from repro.models import api
+from repro.models.unroll import scan_or_unroll, unrolled_layers, \
+    unroll_enabled
+
+
+def run_of(cfg, mode="hadronio", **kw):
+    return RunConfig(model=cfg, shape=ShapeConfig("t", "train", 16, 4),
+                     comm=CommConfig(mode=mode, hierarchical=False), **kw)
+
+
+def test_microbatches_split():
+    b = {"tokens": jnp.arange(24).reshape(6, 4)}
+    m = steps_mod._microbatches(b, 3)
+    assert m["tokens"].shape == (3, 2, 4)
+    np.testing.assert_array_equal(np.asarray(m["tokens"][0]),
+                                  np.arange(8).reshape(2, 4))
+
+
+def test_decay_mask_traced_matches_numpy():
+    cfg = get_config("qwen2-0.5b-reduced")
+    plan = agg.make_plan(api.abstract(cfg), CommConfig(mode="hadronio_rs"))
+    a = steps_mod._decay_mask_flat(plan)
+    b = np.asarray(jax.jit(lambda: steps_mod._decay_mask_traced(plan))())
+    np.testing.assert_array_equal(a, b)
+
+
+def test_abstract_tac_state_shapes():
+    cfg = get_config("qwen2-0.5b-reduced")
+    st = steps_mod.abstract_tac_state(run_of(cfg, "hadronio_rs"), 8)
+    assert st.opt.mu.shape[0] == 8                       # ring dim
+    plan = agg.make_plan(api.abstract(cfg), CommConfig(mode="hadronio_rs"))
+    assert st.opt.mu.shape[1] == plan.padded_elems // 8
+    st2 = steps_mod.abstract_tac_state(run_of(cfg, "hadronio"), 8)
+    assert isinstance(st2.opt.mu, dict)                  # tree moments
+    st3 = steps_mod.abstract_train_state(run_of(cfg, "gspmd"))
+    assert jax.tree.structure(st3.params) == \
+        jax.tree.structure(api.abstract(cfg))
+
+
+def test_flat_adamw_matches_tree_adamw():
+    """The ZeRO flat update equals the tree update on the same values."""
+    from repro.optim import adamw
+    rng = np.random.default_rng(0)
+    p = jnp.asarray(rng.normal(size=(8, 4)), jnp.float32)
+    g = jnp.asarray(rng.normal(size=(8, 4)), jnp.float32)
+    run = run_of(get_config("qwen2-0.5b-reduced"))
+    # tree path (no clipping effect: scale grads to tiny norm)
+    g = g * 1e-3
+    new_p, st, _ = adamw.update({"w": g}, adamw.init({"w": p}), {"w": p},
+                                run)
+    # flat path
+    count = jnp.asarray(1, jnp.int32)
+    mask = jnp.ones((32,), jnp.float32)
+    fp, fmu, fnu = steps_mod._flat_adamw_update(
+        p.reshape(-1), g.reshape(-1), jnp.zeros(32), jnp.zeros(32),
+        count, mask, run)
+    np.testing.assert_allclose(np.asarray(new_p["w"]).reshape(-1),
+                               np.asarray(fp), rtol=1e-6, atol=1e-7)
+
+
+def test_scan_or_unroll_equivalence():
+    xs = jnp.arange(12.0).reshape(4, 3)
+
+    def body(c, x):
+        return c + jnp.sum(x), c
+
+    c1, y1 = scan_or_unroll(body, jnp.zeros(()), xs, 4)
+    with unrolled_layers():
+        assert unroll_enabled()
+        c2, y2 = scan_or_unroll(body, jnp.zeros(()), xs, 4)
+    assert not unroll_enabled()
+    np.testing.assert_allclose(float(c1), float(c2))
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2))
+
+
+def test_unrolled_model_matches_scanned(rng):
+    """The dry-run's unrolled lowering computes the same function."""
+    cfg = get_config("qwen1.5-4b-reduced")
+    params = api.init(rng, cfg)
+    batch = {"tokens": jax.random.randint(rng, (2, 8), 0, cfg.vocab_size),
+             "labels": jax.random.randint(rng, (2, 8), 0, cfg.vocab_size)}
+    l1, _ = api.loss(params, batch, cfg)
+    with unrolled_layers():
+        l2, _ = api.loss(params, batch, cfg)
+    np.testing.assert_allclose(float(l1), float(l2), rtol=1e-5)
+
+
+def test_grow_cache_roundtrip(rng):
+    cfg = get_config("qwen2-0.5b-reduced")
+    params = api.init(rng, cfg)
+    _, cache = api.prefill(params, {"tokens": jnp.ones((1, 5),
+                                                       jnp.int32)}, cfg)
+    grown = api.grow_cache(cfg, cache, 32)
+    assert grown["k"].shape[2] == 32
+    np.testing.assert_array_equal(np.asarray(grown["k"][:, :, :5]),
+                                  np.asarray(cache["k"]))
+    # recurrent states pass through untouched
+    cfg2 = get_config("rwkv6-7b-reduced")
+    p2 = api.init(rng, cfg2)
+    _, c2 = api.prefill(p2, {"tokens": jnp.ones((1, 5), jnp.int32)}, cfg2)
+    assert api.grow_cache(cfg2, c2, 64) is c2
