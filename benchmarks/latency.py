@@ -20,6 +20,7 @@ import numpy as np
 from jax.sharding import PartitionSpec as P
 
 from benchmarks.common import Row, block, derived_collective_time, timeit
+from repro import compat
 from repro.launch import hlo_analysis as hlo
 from repro.launch.mesh import make_mesh
 
@@ -39,7 +40,7 @@ def _pingpong_fn(mesh, n_channels: int, msg_elems: int, n_dev: int):
             outs.append(z)
         return tuple(outs)
 
-    f = jax.shard_map(body, mesh=mesh,
+    f = compat.shard_map(body, mesh=mesh,
                       in_specs=tuple([P("data", None)] * n_channels),
                       out_specs=tuple([P("data", None)] * n_channels),
                       check_vma=False)

@@ -19,6 +19,7 @@ import numpy as np
 from jax.sharding import PartitionSpec as P
 
 from benchmarks.common import Row, block, derived_collective_time, timeit
+from repro import compat
 from repro.configs.base import CommConfig
 from repro.core.ring_buffer import plan_slices
 from repro.launch import hlo_analysis as hlo
@@ -60,7 +61,7 @@ def _stream_fn(mesh, mode: str, n_channels: int, n_msgs: int,
                 outs.append(out[: x.size].reshape(x.shape))
         return tuple(outs)
 
-    f = jax.shard_map(body, mesh=mesh,
+    f = compat.shard_map(body, mesh=mesh,
                       in_specs=tuple([P()] * n_channels),
                       out_specs=tuple([P()] * n_channels),
                       check_vma=False)

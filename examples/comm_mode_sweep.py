@@ -8,7 +8,9 @@ the performance claim (hadroNIO's aggregation = fewer, larger sends).
 import jax
 import numpy as np
 
+from repro import compat
 from repro.configs.base import CommConfig, RunConfig, ShapeConfig
+from repro.core.backends import available_modes, get_backend
 from repro.configs.registry import get_config
 from repro.data import DataConfig, SyntheticSource, batch_at
 from repro.launch import hlo_analysis as hlo
@@ -16,7 +18,11 @@ from repro.launch import steps as steps_mod
 from repro.launch.mesh import make_mesh
 from repro.launch.train import Trainer
 
-MODES = ("sockets", "vma", "hadronio", "hadronio_rs")
+# every registered manual mode, paper order first (registry-derived:
+# a new backend shows up here and in the parity assertion automatically)
+PAPER = ("sockets", "vma", "hadronio", "hadronio_rs")
+MODES = PAPER + tuple(m for m in available_modes()
+                      if get_backend(m).manual and m not in PAPER)
 
 
 def main():
@@ -34,7 +40,7 @@ def main():
                                         hierarchical=False),
                         lr=1e-3, total_steps=8, warmup_steps=2)
         # collective schedule from the compiled step
-        with jax.set_mesh(mesh):
+        with compat.set_mesh(mesh):
             step_fn, state_sh, batch_sh_fn = steps_mod.make_train_step(
                 run, mesh)
             state = jax.device_put(

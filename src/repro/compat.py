@@ -1,0 +1,69 @@
+"""Version-adaptive JAX shims.
+
+The repo targets the current jax API (``jax.shard_map``, ``jax.set_mesh``,
+``jax.sharding.AxisType``); the pinned environment may carry an older
+release where those live under different names (or don't exist). Every
+call site goes through this module so the drift is handled exactly once.
+
+Nothing here changes semantics: on a new-enough jax each shim is a
+pass-through to the public API.
+"""
+from __future__ import annotations
+
+import contextlib
+
+import jax
+
+try:                                    # jax >= 0.5
+    from jax.sharding import AxisType
+except ImportError:                     # older jax: meshes are untyped
+    AxisType = None
+
+
+def make_mesh(shape: tuple, axes: tuple):
+    """``jax.make_mesh`` with Auto axis types when the API supports them."""
+    if AxisType is None:
+        return jax.make_mesh(shape, axes)
+    return jax.make_mesh(shape, axes,
+                         axis_types=(AxisType.Auto,) * len(axes))
+
+
+def abstract_mesh(shape: tuple, axes: tuple):
+    """``AbstractMesh`` across the signature change: new jax takes
+    (axis_sizes, axis_names); old jax takes one tuple of (name, size)."""
+    from jax.sharding import AbstractMesh
+    try:
+        return AbstractMesh(shape, axes)
+    except TypeError:
+        return AbstractMesh(tuple(zip(axes, shape)))
+
+
+def shard_map(f, *, mesh, in_specs, out_specs, check_vma: bool = False):
+    """``jax.shard_map`` (new) / ``jax.experimental.shard_map`` (old).
+    ``check_vma`` maps onto the old API's ``check_rep``."""
+    if hasattr(jax, "shard_map"):
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, check_vma=check_vma)
+    from jax.experimental.shard_map import shard_map as _sm
+    return _sm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+               check_rep=check_vma)
+
+
+def tpu_compiler_params(**kwargs):
+    """Pallas-TPU compiler params across the ``TPUCompilerParams`` ->
+    ``CompilerParams`` rename."""
+    from jax.experimental.pallas import tpu as pltpu
+    cls = getattr(pltpu, "CompilerParams", None) \
+        or getattr(pltpu, "TPUCompilerParams")
+    return cls(**kwargs)
+
+
+def set_mesh(mesh):
+    """``jax.set_mesh`` context. Old jax has no sharding-in-types mesh
+    context; entering the ``Mesh`` itself provides the legacy global-mesh
+    scope, which is all pre-0.5 code paths consult."""
+    if hasattr(jax, "set_mesh"):
+        return jax.set_mesh(mesh)
+    if hasattr(mesh, "__enter__"):
+        return mesh
+    return contextlib.nullcontext(mesh)

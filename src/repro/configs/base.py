@@ -191,6 +191,13 @@ class CommConfig:
                    one psum per slice (paper-faithful).
       hadronio_rs— beyond-paper: per-slice reduce-scatter + all-gather with
                    data-sharded (ZeRO-1) optimizer update.
+      hadronio_overlap — beyond-paper: DDP-style reverse-layer bucketing;
+                   per-bucket collectives depend only on their own leaves
+                   so they overlap the remaining backward compute.
+
+    The authoritative mode list is the backend registry
+    (``repro.core.backends.available_modes``) — new modes register
+    themselves and need no edit here.
     """
 
     mode: str = "gspmd"
@@ -201,7 +208,11 @@ class CommConfig:
     hierarchical: bool = True          # pod-aware two-level collectives
 
     def __post_init__(self):
-        assert self.mode in ("gspmd", "sockets", "vma", "hadronio", "hadronio_rs")
+        # the backend registry is the single source of truth for modes
+        # (lazy import: backends import this module for the dataclass)
+        from repro.core.backends import available_modes
+        assert self.mode in available_modes(), \
+            f"unknown comm mode {self.mode!r}; registered: {available_modes()}"
         assert self.compress in ("none", "bf16", "int8_ef")
         assert self.slice_bytes > 0 and self.ring_capacity_bytes >= self.slice_bytes
 

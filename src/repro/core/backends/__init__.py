@@ -1,0 +1,24 @@
+"""Pluggable communication backends (see docs/COMM_BACKENDS.md).
+
+Importing this package registers every built-in mode; external code asks
+the registry (``get_backend`` / ``available_modes``) and never branches
+on mode names — the hadroNIO transparency claim, enforced structurally.
+"""
+from repro.core.backends.base import (CommBackend, StateSpecs, SyncContext,
+                                      SyncResult, UpdateContext,
+                                      available_modes, get_backend,
+                                      register, scatter_group_size)
+
+# importing the mode modules runs their @register decorators
+from repro.core.backends import gspmd        # noqa: F401
+from repro.core.backends import sockets      # noqa: F401
+from repro.core.backends import vma          # noqa: F401
+from repro.core.backends import hadronio     # noqa: F401
+from repro.core.backends import hadronio_rs  # noqa: F401
+from repro.core.backends import hadronio_overlap  # noqa: F401
+
+__all__ = [
+    "CommBackend", "StateSpecs", "SyncContext", "SyncResult",
+    "UpdateContext", "available_modes", "get_backend", "register",
+    "scatter_group_size",
+]

@@ -1,0 +1,197 @@
+"""CommBackend — the pluggable transport layer behind ``sync_grads``.
+
+hadroNIO's transparency claim is that the application keeps the NIO API
+while the transport underneath is swapped (sockets / libvma / UCX). This
+module enforces the same boundary structurally: every synchronization
+strategy is a :class:`CommBackend` registered by mode name, and the only
+way callers reach one is through the registry — ``core/tac.py`` and
+``launch/steps.py`` carry no per-mode branches. Ibdxnet does the same
+with its msgrc transport engine under an unchanged application interface
+(arXiv:1812.01963); here the "engine" is a backend class.
+
+A backend owns three things:
+
+* ``sync(grads, ctx) -> SyncResult`` — the collective schedule for one
+  gradient exchange, traced inside the fully-manual TAC ``shard_map``.
+* ``state_specs(run, n_shards, pod_size)`` — the optimizer/error-feedback
+  state layout this strategy needs (tree moments vs ZeRO-1 flat shards).
+* ``apply_update(...)`` — how synced gradients become a parameter update
+  (tree AdamW by default; ZeRO-1 shard update + all-gather for
+  reduce-scatter strategies).
+
+Capability flags replace mode-name dispatch everywhere else:
+``manual`` (runs under the TAC shard_map vs GSPMD) and ``zero1``
+(optimizer moments are flat ring-sharded slices).
+"""
+from __future__ import annotations
+
+import abc
+from dataclasses import dataclass
+from typing import Any, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import CommConfig, RunConfig
+from repro.core import aggregation as agg
+from repro.optim import adamw
+
+PyTree = Any
+
+
+class SyncResult(NamedTuple):
+    """What one gradient exchange produced (fixed across all backends —
+    the other half of the transparency boundary)."""
+    grads: PyTree             # synced grads (tree), or None in zero1 modes
+    flat_shard: Optional[jax.Array]   # data-sharded flat grads (zero1)
+    plan: Optional[agg.PackPlan]
+    ef: Optional[jax.Array]   # new error-feedback state (compression)
+    gather_axes: tuple = ()   # axes the zero1 shard was scattered over
+
+
+@dataclass(frozen=True)
+class SyncContext:
+    """Resolved axis topology + carried state for one ``sync`` call."""
+    comm: CommConfig
+    pod_axis: Optional[str]   # pod axis when pod-aware collectives apply
+    data_axis: Any            # in-pod DP axis name, or tuple of names
+    flat_axes: tuple          # every DP axis as one flattened logical ring
+    ef: Optional[jax.Array] = None   # error-feedback residual (local)
+
+    @classmethod
+    def resolve(cls, comm: CommConfig, data_axis, pod_axis: Optional[str],
+                ef: Optional[jax.Array] = None) -> "SyncContext":
+        """``data_axis`` may be one axis name or a tuple of names (a
+        flattened DP ring). Pod-awareness applies only when the config
+        asks for hierarchical collectives AND a pod axis exists; in flat
+        mode (pod, data) is treated as one logical ring."""
+        data = (data_axis,) if isinstance(data_axis, str) else tuple(data_axis)
+        data = data[0] if len(data) == 1 else data
+        if pod_axis is None:
+            flat = data if isinstance(data, tuple) else (data,)
+            return cls(comm, None, data, flat, ef)
+        flat = (pod_axis,) + (data if isinstance(data, tuple) else (data,))
+        if comm.hierarchical:
+            return cls(comm, pod_axis, data, flat, ef)
+        return cls(comm, None, data, flat, ef)
+
+    @property
+    def data_axes_tuple(self) -> tuple:
+        return self.data_axis if isinstance(self.data_axis, tuple) \
+            else (self.data_axis,)
+
+
+class StateSpecs(NamedTuple):
+    """Backend-owned slice of the train state (ShapeDtypeStructs)."""
+    opt: adamw.AdamState      # moment layout (tree or flat ring shards)
+    ef: Optional[jax.ShapeDtypeStruct]
+
+
+@dataclass(frozen=True)
+class UpdateContext:
+    """Mesh facts ``apply_update`` needs beyond the sync result."""
+    axes: tuple               # every mesh axis name (loss/grad-norm psum)
+    n_shards: int             # total ring size
+    eff_shards: int           # scatter-group size (in-pod when hierarchical)
+
+
+def scatter_group_size(n_shards: int, pod_size: int,
+                       comm: CommConfig) -> int:
+    """ZeRO-1 scatter-group size: with hierarchical (pod-aware)
+    collectives the reduce-scatter runs IN-POD, so shards are 1/in-pod
+    sized and replicated across pods (hierarchical ZeRO)."""
+    if comm.hierarchical and pod_size > 1:
+        assert n_shards % pod_size == 0
+        return n_shards // pod_size
+    return n_shards
+
+
+class CommBackend(abc.ABC):
+    """One synchronization strategy. Subclass + ``@register("name")``."""
+
+    name: str = ""            # set by @register
+    manual: bool = True       # True: runs inside the TAC manual shard_map
+    zero1: bool = False       # True: flat ring-sharded optimizer moments
+
+    # -- the transparent API --------------------------------------------
+
+    @abc.abstractmethod
+    def sync(self, grads: PyTree, ctx: SyncContext) -> SyncResult:
+        """Exchange gradients across the DP axes (traced in shard_map)."""
+
+    # -- state layout ----------------------------------------------------
+
+    def needs_ef(self, comm: CommConfig) -> bool:
+        return comm.compress in ("bf16", "int8_ef")
+
+    def state_specs(self, run: RunConfig, n_shards: int,
+                    pod_size: int = 1) -> StateSpecs:
+        """Default layout: full-tree fp32 moments; per-peer error-feedback
+        residual when compression is on (global shape carries the ring
+        dim; each peer holds one row)."""
+        from repro.models import api
+        params = api.abstract(run.model)
+        f32 = lambda p: jax.ShapeDtypeStruct(p.shape, jnp.float32)
+        ef = None
+        if self.needs_ef(run.comm):
+            plan = agg.make_plan(params, run.comm)
+            ef = jax.ShapeDtypeStruct(
+                (n_shards, plan.n_slices, plan.slice_elems), jnp.float32)
+        opt = adamw.AdamState(mu=jax.tree.map(f32, params),
+                              nu=jax.tree.map(f32, params),
+                              count=jax.ShapeDtypeStruct((), jnp.int32))
+        return StateSpecs(opt=opt, ef=ef)
+
+    # -- optimizer application ------------------------------------------
+
+    def apply_update(self, params: PyTree, opt: adamw.AdamState,
+                     res: SyncResult, run: RunConfig,
+                     uctx: UpdateContext):
+        """Turn a SyncResult into (new_params, new_opt, metrics). Default:
+        tree AdamW on the synced gradient tree.
+
+        ``metrics`` is a flat dict of replicated scalars; the step builder
+        adds ``loss`` and maps the whole dict to a replicated out-spec, so
+        backends may add/drop keys freely (every value must be identical
+        across ring peers). Include ``grad_norm`` and ``lr`` to keep the
+        Trainer's log line informative."""
+        return adamw.update(res.grads, opt, params, run)
+
+    def validate(self, comm: CommConfig) -> None:
+        """Reject config combinations this strategy cannot honor (called
+        at step-build time, before any tracing)."""
+
+
+# ---------------------------------------------------------------------------
+# Registry
+# ---------------------------------------------------------------------------
+
+_REGISTRY: dict[str, CommBackend] = {}
+
+
+def register(name: str):
+    """Class decorator: ``@register("hadronio")``. Instantiates the
+    backend as a stateless singleton under ``name``."""
+    def deco(cls):
+        cls.name = name
+        if name in _REGISTRY:
+            raise ValueError(f"comm backend {name!r} already registered "
+                             f"({type(_REGISTRY[name]).__name__})")
+        _REGISTRY[name] = cls()
+        return cls
+    return deco
+
+
+def get_backend(name: str) -> CommBackend:
+    try:
+        return _REGISTRY[name]
+    except KeyError:
+        raise KeyError(
+            f"unknown comm mode {name!r}; registered: "
+            f"{', '.join(available_modes())}") from None
+
+
+def available_modes() -> tuple:
+    """Every registered mode name, sorted (the single source of truth for
+    config validation and CLI choices)."""
+    return tuple(sorted(_REGISTRY))

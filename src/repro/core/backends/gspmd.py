@@ -1,0 +1,24 @@
+"""``gspmd`` — the non-TAC reference: pure GSPMD auto sharding, XLA owns
+every collective ("the kernel network stack"). No manual shard_map, no
+explicit gradient exchange — ``sync`` is never traced; registering it
+here keeps step/state dispatch registry-driven for ALL modes."""
+from __future__ import annotations
+
+from repro.core.backends.base import (CommBackend, SyncContext, SyncResult,
+                                      register)
+
+
+@register("gspmd")
+class GspmdBackend(CommBackend):
+
+    manual = False
+
+    def sync(self, grads, ctx: SyncContext) -> SyncResult:
+        raise RuntimeError(
+            "gspmd mode has no explicit gradient exchange: XLA owns the "
+            "collectives; sync_grads must not be called")
+
+    def needs_ef(self, comm) -> bool:
+        # no manual wire -> no compression, so the inherited state_specs
+        # default yields tree moments with ef=None
+        return False

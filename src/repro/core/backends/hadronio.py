@@ -1,0 +1,25 @@
+"""``hadronio`` — the paper-faithful gathering write (§III-C): pack the
+gradient pytree into ring-buffer slices, then one INDEPENDENT collective
+per slice, each issued through a round-robin-assigned CommChannel (the
+worker-per-connection analogue). The XLA latency-hiding scheduler
+overlaps the independent collectives with compute and each other."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core import aggregation as agg
+from repro.core.backends import pipeline
+from repro.core.backends.base import (CommBackend, SyncContext, SyncResult,
+                                      register)
+
+
+@register("hadronio")
+class HadronioBackend(CommBackend):
+
+    def sync(self, grads, ctx: SyncContext) -> SyncResult:
+        plan = agg.make_plan(grads, ctx.comm, dtype=jnp.float32)
+        flat = agg.pack(grads, plan)
+        slices = agg.as_slices(flat, plan)
+        red, new_ef = pipeline.reduce_slices(slices, ctx)
+        synced = agg.unpack(agg.from_slices(red, plan), plan, grads)
+        return SyncResult(synced, None, plan, new_ef)

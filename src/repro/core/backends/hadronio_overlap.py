@@ -1,0 +1,96 @@
+"""``hadronio_overlap`` — beyond-paper: DDP-style gradient bucketing.
+
+The monolithic gathering write (``hadronio``) concatenates EVERY gradient
+leaf before the first collective, so in the step's dataflow graph each
+slice collective depends on the entire backward pass. This backend
+instead packs per-bucket subsets of leaves, in reverse-layer order (the
+selector's ``emission_order``: backward produces last-layer gradients
+first). Each bucket's collective depends only on its own leaves, so the
+XLA latency-hiding scheduler can start the early buckets' collectives
+while the remaining backward compute for earlier layers is still running
+— and the step builder emits them before the loss epilogue.
+
+Buckets fill greedily to ``comm.slice_bytes`` (one leaf larger than a
+slice gets its own bucket) and are padded to the 512-element alignment so
+pod-aware two-level collectives shard evenly. Wire compression is not
+supported here: error-feedback state is shaped by the global ring-buffer
+plan, which this mode deliberately does not build.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import CommConfig
+from repro.core.backends import pipeline
+from repro.core.backends.base import (CommBackend, SyncContext, SyncResult,
+                                      register)
+from repro.core.selector import emission_order
+
+_ALIGN = 512   # matches aggregation.make_plan's reduce-scatter alignment
+
+
+def make_buckets(sizes: list[int], slice_bytes: int,
+                 itemsize: int = 4) -> list[list[int]]:
+    """Greedy reverse-layer bucketing: leaf indices grouped so each bucket
+    holds at most ``slice_bytes`` of wire payload (a single oversized leaf
+    gets its own bucket). Bucket 0 holds the LAST leaves — the gradients
+    backward produces first."""
+    buckets: list[list[int]] = []
+    cur: list[int] = []
+    cur_bytes = 0
+    for i in emission_order(len(sizes), reverse=True):
+        b = sizes[i] * itemsize
+        if cur and cur_bytes + b > slice_bytes:
+            buckets.append(cur)
+            cur, cur_bytes = [], 0
+        cur.append(i)
+        cur_bytes += b
+    if cur:
+        buckets.append(cur)
+    return buckets
+
+
+@register("hadronio_overlap")
+class HadronioOverlapBackend(CommBackend):
+
+    def validate(self, comm: CommConfig) -> None:
+        if comm.compress != "none":
+            raise ValueError(
+                "hadronio_overlap does not support wire compression "
+                f"(compress={comm.compress!r}): error-feedback state is "
+                "keyed to the global ring-buffer plan, which bucketing "
+                "does not build — use mode='hadronio' for compressed "
+                "transfers")
+
+    def needs_ef(self, comm: CommConfig) -> bool:
+        return False
+
+    def sync(self, grads, ctx: SyncContext) -> SyncResult:
+        self.validate(ctx.comm)
+        leaves, treedef = jax.tree.flatten(grads)
+        sizes = [int(np.prod(l.shape)) if l.shape else 1 for l in leaves]
+        buckets = make_buckets(sizes, ctx.comm.slice_bytes)
+
+        def packed(bucket):
+            flat = jnp.concatenate(
+                [leaves[i].astype(jnp.float32).reshape(-1) for i in bucket])
+            pad = -flat.shape[0] % _ALIGN
+            return jnp.pad(flat, (0, pad)) if pad else flat
+
+        reduced = pipeline.emit_through_channels(
+            [packed(b) for b in buckets], ctx,
+            lambda ch, x: ch.all_reduce(x))
+
+        out: list = [None] * len(leaves)
+        for red, bucket in zip(reduced, buckets):
+            off = 0
+            for i in bucket:
+                piece = jax.lax.slice_in_dim(red, off, off + sizes[i],
+                                             axis=0)
+                out[i] = piece.reshape(leaves[i].shape).astype(
+                    leaves[i].dtype)
+                off += sizes[i]
+        synced = jax.tree.unflatten(treedef, out)
+        return SyncResult(synced, None, None, ctx.ef)

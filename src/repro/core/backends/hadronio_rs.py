@@ -1,0 +1,99 @@
+"""``hadronio_rs`` — beyond-paper: per-slice reduce-scatter with a
+data-sharded (ZeRO-1) optimizer. Each peer reduces + keeps 1/ring of
+every slice, updates its flat parameter/moment shard, and all-gathers the
+updated parameter slices back (per slice, independent — overlappable).
+With hierarchical collectives the scatter group is in-pod and shards
+replicate across pods (hierarchical ZeRO)."""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import CommConfig, RunConfig
+from repro.core import aggregation as agg
+from repro.core.backends import pipeline
+from repro.core.backends.base import (CommBackend, StateSpecs, SyncContext,
+                                      SyncResult, UpdateContext, register,
+                                      scatter_group_size)
+from repro.core.hierarchical import all_gather_data
+from repro.optim import adamw
+from repro.optim.flat import decay_mask_traced, flat_adamw_update
+
+PyTree = Any
+
+
+def gather_updated(flat_shard: jax.Array, plan: agg.PackPlan,
+                   like: PyTree, comm: CommConfig, *,
+                   gather_axes=("data",)) -> PyTree:
+    """ZeRO-1 epilogue: all-gather updated parameter slices (per slice,
+    independent — overlappable) and unpack into the parameter tree.
+    ``gather_axes``: the axes the shard was reduce-scattered over (from
+    SyncResult.gather_axes)."""
+    n = plan.n_slices
+    shard = flat_shard.reshape(n, -1)
+    outs = [all_gather_data(shard[i], gather_axes) for i in range(n)]
+    return agg.unpack(agg.from_slices(jnp.stack(outs), plan), plan, like)
+
+
+@register("hadronio_rs")
+class HadronioRsBackend(CommBackend):
+
+    zero1 = True
+
+    def sync(self, grads, ctx: SyncContext) -> SyncResult:
+        plan = agg.make_plan(grads, ctx.comm, dtype=jnp.float32)
+        flat = agg.pack(grads, plan)
+        slices = agg.as_slices(flat, plan)
+        flat_shard, new_ef, gather_axes = pipeline.scatter_slices(slices, ctx)
+        return SyncResult(None, flat_shard, plan, new_ef, gather_axes)
+
+    def state_specs(self, run: RunConfig, n_shards: int,
+                    pod_size: int = 1) -> StateSpecs:
+        """Flat ZeRO-1 moment shards; the leading ring dim makes each
+        peer's shard explicit (global (n_shards, len), local (1, len))."""
+        from repro.models import api
+        params = api.abstract(run.model)
+        plan = agg.make_plan(params, run.comm)
+        ef = None
+        if self.needs_ef(run.comm):
+            ef = jax.ShapeDtypeStruct(
+                (n_shards, plan.n_slices, plan.slice_elems), jnp.float32)
+        eff = scatter_group_size(n_shards, pod_size, run.comm)
+        assert plan.padded_elems % eff == 0, (plan.padded_elems, eff)
+        shard = jax.ShapeDtypeStruct(
+            (n_shards, plan.padded_elems // eff), jnp.float32)
+        opt = adamw.AdamState(mu=shard, nu=shard,
+                              count=jax.ShapeDtypeStruct((), jnp.int32))
+        return StateSpecs(opt=opt, ef=ef)
+
+    def apply_update(self, params: PyTree, opt: adamw.AdamState,
+                     res: SyncResult, run: RunConfig,
+                     uctx: UpdateContext):
+        """ZeRO-1: update this peer's flat param/moment shard, then
+        all-gather the updated parameter slices (per slice). With
+        hierarchical collectives the shard index is in-pod."""
+        eff_shards = uctx.eff_shards
+        flat_p = agg.pack(params, res.plan)
+        nsl = res.plan.n_slices
+        my = jax.lax.axis_index(res.gather_axes)
+        psl = flat_p.reshape(nsl, eff_shards, -1)[:, my].reshape(-1)
+        gsh = res.flat_shard
+        # grad clip on the global flat grad norm (shards replicate
+        # across pods in hierarchical mode: normalize the psum)
+        gn2 = jax.lax.psum(jnp.sum(jnp.square(gsh)), uctx.axes)
+        gn2 = gn2 / (uctx.n_shards // eff_shards)
+        gnorm = jnp.sqrt(gn2)
+        scale = jnp.minimum(1.0, run.grad_clip / jnp.maximum(gnorm, 1e-12))
+        gsh = gsh * scale
+        dm = decay_mask_traced(res.plan).reshape(nsl, eff_shards, -1)[:, my]
+        count = opt.count + 1
+        new_psl, new_mu, new_nu = flat_adamw_update(
+            psl, gsh, opt.mu[0], opt.nu[0], count, dm.reshape(-1), run)
+        new_params = gather_updated(
+            new_psl.astype(jnp.float32), res.plan, params, run.comm,
+            gather_axes=res.gather_axes)
+        new_opt = adamw.AdamState(new_mu[None], new_nu[None], count)
+        metrics = {"grad_norm": gnorm, "lr": adamw.schedule(run, count)}
+        return new_params, new_opt, metrics

@@ -1,0 +1,120 @@
+"""The composable slice pipeline shared by the hadronio-family backends.
+
+One gradient exchange is a fixed sequence of stages, written once here
+instead of per-branch in every mode:
+
+    pack -> ring-buffer plan -> compress -> per-channel collective -> unpack
+
+``pack``/``plan`` live in :mod:`repro.core.aggregation` (the gathering
+write); this module owns the wire stages:
+
+* :func:`channels_for` — build the connection pool for a resolved axis
+  topology (pod-aware when the context says so).
+* :func:`compress_slices` — the optional wire codec (bf16 + error
+  feedback, int8 with local dequant-sum).
+* :func:`emit_through_channels` — the worker-per-connection schedule:
+  slices are assigned to channels round-robin (paper §IV-C) and each
+  channel issues its collectives IN ORDER (an ``optimization_barrier``
+  chains consecutive ops on the same channel — the selector's ordering
+  lever from :mod:`repro.core.selector`), while different channels stay
+  data-independent. ``comm.channels`` therefore really is the paper's
+  connection-count axis: it bounds how many collectives can be in
+  flight, from fully serialized (1) to fully independent (>= n_slices).
+* :func:`reduce_slices` / :func:`scatter_slices` — compress + per-slice
+  all-reduce / reduce-scatter composed over the channel schedule.
+
+Backends compose these; none of them re-implements a stage.
+"""
+from __future__ import annotations
+
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import compress as comp
+from repro.core.channels import CommChannel, make_channels, round_robin
+from repro.core.selector import barrier, emission_order
+
+from repro.core.backends.base import SyncContext
+
+
+def channels_for(ctx: SyncContext, n_slices: int) -> list[CommChannel]:
+    """The connection pool: at most ``comm.channels`` workers, pod-aware
+    when the context resolved a pod axis."""
+    n = max(1, min(ctx.comm.channels, n_slices))
+    return make_channels(n, ctx.flat_axes, pod_axis=ctx.pod_axis,
+                         data_axis=ctx.data_axis)
+
+
+def compress_slices(slices: jax.Array, ctx: SyncContext):
+    """Wire codec stage. Returns (wire, new_ef, int8_scale). For int8 the
+    caller must use :func:`comp.int8_allreduce`-style summation (signalled
+    by a non-None scale)."""
+    comm = ctx.comm
+    if comm.compress == "bf16":
+        wire, new_ef = comp.bf16_compress(slices, ctx.ef)
+        return wire, new_ef, None
+    if comm.compress == "int8_ef":
+        q, scale, new_ef = comp.int8_quantize(slices, ctx.ef)
+        return q, new_ef, scale
+    return slices, None, None
+
+
+def emit_through_channels(items: list, ctx: SyncContext,
+                          op: Callable[[CommChannel, jax.Array],
+                                       jax.Array]) -> list:
+    """Issue ``op(channel, item)`` for every item through the connection
+    pool. Items on the SAME channel are chained (each op's input is
+    barrier-pinned on the channel's previous output, so the compiler must
+    run them in order — one in-flight collective per channel); different
+    channels carry no data dependencies and may overlap freely."""
+    chans = channels_for(ctx, len(items))
+    assign = round_robin(len(items), len(chans))
+    last: dict[int, jax.Array] = {}
+    outs: list[Optional[jax.Array]] = [None] * len(items)
+    for i in emission_order(len(items), reverse=False):
+        ch = chans[assign[i]]
+        x = items[i]
+        if ch.index in last:
+            x, _ = barrier(x, last[ch.index])
+        y = op(ch, x)
+        outs[i] = y
+        last[ch.index] = y
+    return outs
+
+
+def reduce_slices(slices: jax.Array, ctx: SyncContext):
+    """Per-slice all-reduce with optional compression, scheduled over the
+    channel pool. slices: (n, S) f32. Returns (reduced (n, S) f32,
+    new_ef)."""
+    wire, new_ef, scale = compress_slices(slices, ctx)
+    if scale is not None:
+        # int8: all-gather + local dequant-sum (one fused exchange)
+        return comp.int8_allreduce(wire, scale, ctx.flat_axes), new_ef
+
+    outs = emit_through_channels(
+        [wire[i] for i in range(wire.shape[0])], ctx,
+        lambda ch, x: ch.all_reduce(x).astype(jnp.float32))
+    return jnp.stack(outs), new_ef
+
+
+def scatter_slices(slices: jax.Array, ctx: SyncContext):
+    """Per-slice reduce-scatter (the ZeRO-1 exchange) over the channel
+    pool. slices: (n, S) f32 (bf16-compressible). Returns (flat_shard,
+    new_ef, gather_axes) where flat_shard is the peer's (n * S/group,)
+    ZeRO-1 slice and ``gather_axes`` are the axes the shard must be
+    all-gathered over."""
+    comm = ctx.comm
+    new_ef = None
+    if comm.compress == "bf16":
+        slices, new_ef = comp.bf16_compress(slices, ctx.ef)
+    hier = ctx.pod_axis is not None
+    gather_axes = ctx.data_axes_tuple if hier else ctx.flat_axes
+
+    shards = emit_through_channels(
+        [slices[i] for i in range(slices.shape[0])], ctx,
+        lambda ch, x: ch.reduce_scatter(x).astype(jnp.float32))
+    # (n_slices, S/group) -> flat local shard, ZeRO-1 layout
+    flat_shard = jnp.stack(shards).reshape(-1)
+    return flat_shard, new_ef, gather_axes

@@ -1,0 +1,18 @@
+"""``sockets`` — the plain-sockets baseline (paper's JSOR comparison
+point): one ``psum`` per gradient tensor. Per-buffer sends, fixed cost
+paid per tensor; no aggregation, no plan, no packing."""
+from __future__ import annotations
+
+import jax
+
+from repro.core.backends.base import (CommBackend, SyncContext, SyncResult,
+                                      register)
+
+
+@register("sockets")
+class SocketsBackend(CommBackend):
+
+    def sync(self, grads, ctx: SyncContext) -> SyncResult:
+        synced = jax.tree.map(lambda g: jax.lax.psum(g, ctx.flat_axes),
+                              grads)
+        return SyncResult(synced, None, None, ctx.ef)

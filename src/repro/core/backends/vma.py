@@ -1,0 +1,29 @@
+"""``vma`` — the libvma analogue: one monolithic ``psum`` of the whole
+packed gradient. Minimal op count, but no independence to overlap and a
+full-size staging spike (the pack stage materializes every gradient
+before the single send)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import aggregation as agg
+from repro.core import compress as comp
+from repro.core.backends.base import (CommBackend, SyncContext, SyncResult,
+                                      register)
+
+
+@register("vma")
+class VmaBackend(CommBackend):
+
+    def sync(self, grads, ctx: SyncContext) -> SyncResult:
+        plan = agg.make_plan(grads, ctx.comm, dtype=jnp.float32)
+        flat = agg.pack(grads, plan)
+        if ctx.comm.compress == "bf16":
+            wire, new_ef = comp.bf16_compress(flat[None], ctx.ef)
+            red = jax.lax.psum(wire[0],
+                               ctx.flat_axes).astype(jnp.float32)[None]
+            synced = agg.unpack(agg.from_slices(red, plan), plan, grads)
+            return SyncResult(synced, None, plan, new_ef)
+        red = jax.lax.psum(flat, ctx.flat_axes)
+        return SyncResult(agg.unpack(red, plan, grads), None, plan, ctx.ef)

@@ -5,24 +5,56 @@ collectives. hadroNIO gave each connection its own UCX worker so selectors
 could poll many workers; here each channel's collectives are emitted as
 independent HLO ops (no data dependencies between channels), which is the
 property the XLA latency-hiding scheduler needs to progress them
-concurrently. The microbenchmarks (benchmarks/latency.py, throughput.py)
-sweep channel count 1..16, reproducing the paper's connection-count axis.
+concurrently.
+
+Channels are LIVE infrastructure: the hadronio-family backends
+(:mod:`repro.core.backends.pipeline`) assign ring-buffer slices to
+channels round-robin (paper §IV-C assigns connections to selectors
+round-robin) and every slice collective is issued through its channel.
+Within one channel the collectives are CHAINED in order (an
+``optimization_barrier`` pins each op on the channel's previous output),
+so ``comm.channels`` genuinely bounds the number of in-flight
+collectives — 1 serializes the whole exchange, >= n_slices is fully
+independent. A channel built with a ``pod_axis`` issues pod-aware
+two-level collectives (the multi-rail analogue); otherwise it reduces
+over the flattened DP ring. The microbenchmarks (benchmarks/latency.py,
+throughput.py) sweep channel count 1..16, reproducing the paper's
+connection-count axis.
 """
 from __future__ import annotations
 
 from dataclasses import dataclass
+from typing import Any, Optional
 
 import jax
-import jax.numpy as jnp
+
+from repro.core.hierarchical import (psum_hierarchical,
+                                     psum_scatter_hierarchical)
 
 
 @dataclass(frozen=True)
 class CommChannel:
     index: int
     axes: tuple               # DP axis names this channel reduces over
+    pod_axis: Optional[str] = None   # set -> pod-aware 2-level collectives
+    data_axis: Any = None     # in-pod DP axis (name or tuple) when pod-aware
 
     def all_reduce(self, x: jax.Array) -> jax.Array:
+        if self.pod_axis is not None:
+            return psum_hierarchical(x, self.pod_axis, self.data_axis)
         return jax.lax.psum(x, self.axes)
+
+    def reduce_scatter(self, x: jax.Array) -> jax.Array:
+        """Reduce + scatter over the channel's ring (in-pod when
+        pod-aware, with a cross-pod all-reduce of the shard)."""
+        if self.pod_axis is not None:
+            return psum_scatter_hierarchical(x, self.pod_axis,
+                                             self.data_axis)
+        return jax.lax.psum_scatter(x, self.axes,
+                                    scatter_dimension=x.ndim - 1, tiled=True)
+
+    def all_gather(self, x: jax.Array) -> jax.Array:
+        return jax.lax.all_gather(x, self.axes, axis=x.ndim - 1, tiled=True)
 
     def ping(self, x: jax.Array, axis: str, n_shards: int) -> jax.Array:
         """One ring hop (the ping-pong primitive for the latency bench)."""
@@ -30,11 +62,12 @@ class CommChannel:
         return jax.lax.ppermute(x, axis, perm)
 
 
-def make_channels(n: int, axes: tuple) -> list[CommChannel]:
-    return [CommChannel(i, axes) for i in range(n)]
+def make_channels(n: int, axes: tuple, *, pod_axis: Optional[str] = None,
+                  data_axis: Any = None) -> list[CommChannel]:
+    return [CommChannel(i, axes, pod_axis, data_axis) for i in range(n)]
 
 
 def round_robin(n_items: int, n_channels: int) -> list[int]:
-    """Connection assignment used by the benchmarks (paper §IV-C assigns
-    connections to selectors round-robin)."""
+    """Connection assignment (paper §IV-C assigns connections to
+    selectors round-robin)."""
     return [i % n_channels for i in range(n_items)]

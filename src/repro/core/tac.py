@@ -2,149 +2,55 @@
 
 ``sync_grads`` is the transparent boundary: every mode has the same
 signature, so the model / training loop never changes when the comm stack
-is swapped — the hadroNIO transparency claim, enforced by test.
+is swapped — the hadroNIO transparency claim, enforced by test AND by
+structure: this module is a thin façade over the backend registry
+(:mod:`repro.core.backends`); it contains no per-mode branches.
 
-Modes (DESIGN.md §2):
-  sockets     one ``psum`` per gradient tensor (plain-sockets baseline:
-              per-buffer sends, fixed cost paid per tensor).
-  vma         one monolithic ``psum`` of the packed gradient (libvma
-              analogue: minimal op count, no independence to overlap,
-              full-size staging spike).
-  hadronio    paper-faithful gathering-write: pack -> ring-buffer slices ->
-              one independent collective per slice (unrolled; the XLA
-              scheduler overlaps them with compute and each other —
-              "worker per connection").
-  hadronio_rs beyond-paper: per-slice reduce-scatter; the caller updates a
-              data-sharded (ZeRO-1) optimizer shard and all-gathers the
-              updated parameter slices back.
+Modes (docs/COMM_BACKENDS.md):
+  sockets          one ``psum`` per gradient tensor (plain-sockets
+                   baseline: per-buffer sends, fixed cost per tensor).
+  vma              one monolithic ``psum`` of the packed gradient (libvma
+                   analogue: minimal op count, no independence, full-size
+                   staging spike).
+  hadronio         paper-faithful gathering-write: pack -> ring-buffer
+                   slices -> one independent collective per slice, each
+                   issued through its round-robin CommChannel ("worker
+                   per connection").
+  hadronio_rs      beyond-paper: per-slice reduce-scatter; the caller
+                   updates a data-sharded (ZeRO-1) optimizer shard and
+                   all-gathers the updated parameter slices back.
+  hadronio_overlap beyond-paper: DDP-style reverse-layer bucketing; each
+                   bucket's collective depends only on its own leaves so
+                   it can overlap the remaining backward compute.
 
-All modes run inside a partial-manual ``shard_map`` (manual over the DP
-axes, auto/GSPMD over the model axis) — see launch/steps.py.
+All manual modes run inside a partial-manual ``shard_map`` (manual over
+the DP axes, auto/GSPMD over the model axis) — see launch/steps.py.
 """
 from __future__ import annotations
 
-from typing import Any, NamedTuple, Optional
+from typing import Any, Optional
 
 import jax
-import jax.numpy as jnp
 
 from repro.configs.base import CommConfig
 from repro.core import aggregation as agg
-from repro.core import compress as comp
-from repro.core.hierarchical import (all_gather_data, psum_hierarchical,
-                                     psum_scatter_hierarchical)
+from repro.core.backends import SyncContext, SyncResult, get_backend
+from repro.core.backends.hadronio_rs import gather_updated  # noqa: F401
 
 PyTree = Any
 
-
-class SyncResult(NamedTuple):
-    grads: PyTree             # synced grads (tree), or None in _rs mode
-    flat_shard: Optional[jax.Array]   # data-sharded flat grads (_rs mode)
-    plan: Optional[agg.PackPlan]
-    ef: Optional[jax.Array]   # new error-feedback state (compression)
-    gather_axes: tuple = ()   # axes the _rs shard was scattered over
-
-
-def _axes(comm: CommConfig, data_axis, pod_axis: Optional[str]):
-    """``data_axis`` may be one axis name or a tuple of names (a flattened
-    DP ring). Returns (pod, data, flat_axes)."""
-    data = (data_axis,) if isinstance(data_axis, str) else tuple(data_axis)
-    data = data[0] if len(data) == 1 else data
-    if pod_axis is None:
-        return None, data, data if isinstance(data, tuple) else (data,)
-    flat = (pod_axis,) + (data if isinstance(data, tuple) else (data,))
-    if comm.hierarchical:
-        return pod_axis, data, flat
-    # flat mode: treat (pod, data) as one logical ring
-    return None, data, flat
-
-
-def _reduce_slices(slices: jax.Array, comm: CommConfig, pod_axis,
-                   data_axis, flat_axes, ef):
-    """Per-slice independent all-reduce with optional compression.
-    slices: (n, S) f32. Returns (reduced (n, S) f32, new_ef)."""
-    new_ef = None
-    if comm.compress == "bf16":
-        wire, new_ef = comp.bf16_compress(slices, ef)
-    elif comm.compress == "int8_ef":
-        q, scale, new_ef = comp.int8_quantize(slices, ef)
-        out = comp.int8_allreduce(q, scale, flat_axes)
-        return out, new_ef
-    else:
-        wire = slices
-
-    # one INDEPENDENT collective per ring-buffer slice (unrolled on n)
-    outs = []
-    for i in range(wire.shape[0]):
-        s = wire[i]
-        if comm.hierarchical and pod_axis is not None:
-            r = psum_hierarchical(s, pod_axis, data_axis)
-        else:
-            r = jax.lax.psum(s, flat_axes)
-        outs.append(r.astype(jnp.float32))
-    return jnp.stack(outs), new_ef
+__all__ = ["SyncResult", "sync_grads", "gather_updated", "shard_slice_len"]
 
 
 def sync_grads(grads: PyTree, comm: CommConfig, *, data_axis: str = "data",
                pod_axis: Optional[str] = None,
                ef: Optional[jax.Array] = None) -> SyncResult:
-    """Synchronize per-DP-shard gradients across the DP axes."""
-    pod, data, flat_axes = _axes(comm, data_axis, pod_axis)
-
-    if comm.mode == "sockets":
-        synced = jax.tree.map(lambda g: jax.lax.psum(g, flat_axes), grads)
-        return SyncResult(synced, None, None, ef)
-
-    plan = agg.make_plan(grads, comm, dtype=jnp.float32)
-    flat = agg.pack(grads, plan)
-
-    if comm.mode == "vma":
-        if comm.compress == "bf16":
-            wire, new_ef = comp.bf16_compress(flat[None], ef)
-            red = jax.lax.psum(wire[0], flat_axes).astype(jnp.float32)[None]
-            synced = agg.unpack(agg.from_slices(red, plan), plan, grads)
-            return SyncResult(synced, None, plan, new_ef)
-        red = jax.lax.psum(flat, flat_axes)
-        return SyncResult(agg.unpack(red, plan, grads), None, plan, ef)
-
-    slices = agg.as_slices(flat, plan)
-
-    if comm.mode == "hadronio":
-        red, new_ef = _reduce_slices(slices, comm, pod, data, flat_axes, ef)
-        synced = agg.unpack(agg.from_slices(red, plan), plan, grads)
-        return SyncResult(synced, None, plan, new_ef)
-
-    if comm.mode == "hadronio_rs":
-        new_ef = None
-        if comm.compress == "bf16":
-            slices, new_ef = comp.bf16_compress(slices, ef)
-        hier = comm.hierarchical and pod is not None
-        data_t = data if isinstance(data, tuple) else (data,)
-        gather_axes = data_t if hier else flat_axes
-        shards = []
-        for i in range(slices.shape[0]):
-            s = psum_scatter_hierarchical(slices[i], pod, data) if hier else \
-                jax.lax.psum_scatter(slices[i], flat_axes,
-                                     scatter_dimension=0, tiled=True)
-            shards.append(s.astype(jnp.float32))
-        # (n_slices, S/n_shards) -> flat local shard, ZeRO-1 layout
-        flat_shard = jnp.stack(shards).reshape(-1)
-        return SyncResult(None, flat_shard, plan, new_ef, gather_axes)
-
-    raise ValueError(f"unknown TAC mode {comm.mode!r}")
-
-
-def gather_updated(flat_shard: jax.Array, plan: agg.PackPlan,
-                   like: PyTree, comm: CommConfig, *,
-                   gather_axes=("data",)) -> PyTree:
-    """hadronio_rs epilogue: all-gather updated parameter slices (per slice,
-    independent — overlappable) and unpack into the parameter tree.
-    ``gather_axes``: the axes the shard was reduce-scattered over (from
-    SyncResult.gather_axes)."""
-    n = plan.n_slices
-    shard = flat_shard.reshape(n, -1)
-    outs = [all_gather_data(shard[i], gather_axes) for i in range(n)]
-    return agg.unpack(agg.from_slices(jnp.stack(outs), plan), plan, like)
+    """Synchronize per-DP-shard gradients across the DP axes. The mode
+    string selects a registered :class:`CommBackend`; the signature —
+    and therefore every call site — is identical for all of them."""
+    backend = get_backend(comm.mode)
+    ctx = SyncContext.resolve(comm, data_axis, pod_axis, ef)
+    return backend.sync(grads, ctx)
 
 
 def shard_slice_len(plan: agg.PackPlan, n_data: int) -> int:

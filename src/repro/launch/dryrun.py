@@ -25,7 +25,9 @@ import traceback
 import jax
 import numpy as np
 
+from repro import compat
 from repro.configs.base import CommConfig, RunConfig
+from repro.core.backends import available_modes, get_backend
 from repro.configs.registry import SHAPES, ARCH_IDS, cell_skip_reason, \
     get_config, get_shape
 from repro.launch import hlo_analysis as hlo
@@ -49,11 +51,11 @@ def _lower_cell(cfg, shape, mesh, mode: str, microbatches: int):
     if shape.kind == "train":
         step_fn, state_shardings, batch_sh_fn = steps.make_train_step(
             run, mesh)
-        if mode == "gspmd":
-            state = steps.abstract_train_state(run)
-        else:
+        if get_backend(mode).manual:
             state = steps.abstract_tac_state(run, _mesh_chips(mesh),
-                                           mesh.shape.get("pod", 1))
+                                             mesh.shape.get("pod", 1))
+        else:
+            state = steps.abstract_train_state(run)
         inputs = api.input_specs(cfg, shape)
         in_sh = (state_shardings, batch_sh_fn(mesh, inputs))
         jitted = jax.jit(step_fn, in_shardings=in_sh,
@@ -136,7 +138,7 @@ def dryrun_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
 
     mesh = make_production_mesh(multi_pod=multi_pod)
     t0 = time.time()
-    with jax.set_mesh(mesh):
+    with compat.set_mesh(mesh):
         lowered = _lower_cell(cfg, shape, mesh, mode, microbatches)
         compiled = lowered.compile()
         t1 = time.time()
@@ -213,8 +215,7 @@ def main() -> int:
     p.add_argument("--shape", choices=list(SHAPES))
     p.add_argument("--mesh", choices=["pod", "multipod"], default="pod")
     p.add_argument("--mode", default="gspmd",
-                   choices=["gspmd", "sockets", "vma", "hadronio",
-                            "hadronio_rs"])
+                   choices=list(available_modes()))
     p.add_argument("--all", action="store_true",
                    help="run every (arch x shape) cell for --mesh/--mode")
     p.add_argument("--no-correct", action="store_true",

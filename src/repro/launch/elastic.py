@@ -24,7 +24,9 @@ from typing import Optional
 import jax
 import numpy as np
 
+from repro import compat
 from repro.configs.base import RunConfig
+from repro.core.backends import get_backend
 from repro.checkpoint import CheckpointStore
 from repro.launch import steps as steps_mod
 from repro.launch.mesh import make_mesh
@@ -57,7 +59,7 @@ def make_on_mismatch(run: RunConfig):
     """Shape-mismatch resolver for elastic restores. Only the TAC
     ``hadronio_rs`` mode has ring-sized state (flat moment shards + error
     feedback); everything else restores shape-identically."""
-    if run.comm.mode != "hadronio_rs" and run.comm.compress == "none":
+    if not get_backend(run.comm.mode).zero1 and run.comm.compress == "none":
         return None
     from repro.core import aggregation as agg
     from repro.models import api
@@ -84,13 +86,13 @@ def restore_elastic(store: CheckpointStore, run: RunConfig, mesh,
     if s is None:
         raise FileNotFoundError(f"no checkpoint under {store.dir}")
     n_shards = int(np.prod(list(mesh.shape.values())))
-    with jax.set_mesh(mesh):
+    with compat.set_mesh(mesh):
         _, state_sh, _ = steps_mod.make_train_step(run, mesh)
-        if run.comm.mode == "gspmd":
-            like = steps_mod.abstract_train_state(run)
-        else:
+        if get_backend(run.comm.mode).manual:
             like = steps_mod.abstract_tac_state(run, n_shards,
                                                 mesh.shape.get("pod", 1))
+        else:
+            like = steps_mod.abstract_train_state(run)
         state = store.restore(s, like, state_sh,
                               on_mismatch=make_on_mismatch(run))
     return state, s

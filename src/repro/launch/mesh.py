@@ -3,25 +3,31 @@
 A FUNCTION (not a module-level constant) so importing this module never
 touches jax device state — required for the dry-run's forced host device
 count to take effect first.
+
+``AxisType`` moved under ``jax.sharding`` in newer jax; the guarded import
+lives in :mod:`repro.compat` so a pinned older release still collects.
 """
 from __future__ import annotations
 
-import jax
-from jax.sharding import AxisType
+from repro import compat
+from repro.compat import AxisType  # noqa: F401  (re-export, may be None)
 
 
 def make_production_mesh(*, multi_pod: bool = False):
     """16x16 = 256 chips per pod; 2 pods = 512 chips multi-pod."""
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes,
-                         axis_types=(AxisType.Auto,) * len(axes))
+    return compat.make_mesh(shape, axes)
 
 
 def make_mesh(shape: tuple, axes: tuple):
     """Arbitrary mesh for tests/benchmarks (host devices or real)."""
-    return jax.make_mesh(shape, axes,
-                         axis_types=(AxisType.Auto,) * len(axes))
+    return compat.make_mesh(shape, axes)
+
+
+def make_abstract_mesh(shape: tuple, axes: tuple):
+    """Device-free mesh for sharding-rule tests (signature-drift safe)."""
+    return compat.abstract_mesh(shape, axes)
 
 
 def data_axes(mesh) -> tuple:

@@ -8,13 +8,18 @@ Two train-step families (DESIGN.md §4):
   every architecture (including the 110B/132B cells) runs on, and the
   baseline the roofline table is derived from.
 
-* TAC modes (``sockets`` / ``vma`` / ``hadronio`` / ``hadronio_rs``) — the
-  paper's regime: data-parallel peers exchanging gradient traffic, with the
+* TAC modes (every registered backend with ``manual=True``) — the paper's
+  regime: data-parallel peers exchanging gradient traffic, with the
   synchronization strategy swapped behind a fixed API (the transparency
-  claim). The step runs inside a fully-manual ``shard_map`` over every mesh
-  axis (one flattened DP ring — each device is one netty "connection");
-  model compute is purely local, gradient sync is the explicit per-slice
-  collective schedule of :mod:`repro.core.tac`.
+  claim). The step runs inside a fully-manual ``shard_map`` over every
+  mesh axis (one flattened DP ring — each device is one netty
+  "connection"); model compute is purely local, gradient sync is the
+  backend's explicit per-slice collective schedule (repro.core.backends).
+
+This module never branches on mode names: the backend registry supplies
+state layouts (``state_specs``), the optimizer application
+(``apply_update``) and the step family (``manual``), so adding a mode is
+one new backend module and zero launcher edits.
 
 Serve steps (prefill / decode) always run under GSPMD — inference has no
 gradient traffic, which is the paper's scope; the cache/batch sharding
@@ -22,7 +27,6 @@ rules live in launch/sharding.py.
 """
 from __future__ import annotations
 
-import functools
 from typing import Any, NamedTuple, Optional
 
 import jax
@@ -30,22 +34,31 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
+from repro import compat
 from repro.configs.base import ModelConfig, RunConfig, ShapeConfig
-from repro.core import aggregation as agg
+from repro.core import backends as backends_mod
 from repro.core import tac
+from repro.core.backends import UpdateContext, get_backend
 from repro.models import api
-from repro.models.common import abstract_params, param_bytes
 from repro.models.layers import no_shard
 from repro.optim import adamw
+from repro.optim import flat as flat_opt
 from repro.launch.sharding import (batch_sharding, cache_shardings,
                                    make_shard_fn, param_shardings)
 
 PyTree = Any
 
+# packed-flat optimizer helpers kept under their historical names (tests
+# and notebooks import them from here)
+_decay_mask_flat = flat_opt.decay_mask_flat
+_decay_mask_traced = flat_opt.decay_mask_traced
+_flat_adamw_update = flat_opt.flat_adamw_update
+tac_scatter_size = backends_mod.scatter_group_size
+
 
 class TrainState(NamedTuple):
     params: PyTree
-    opt: adamw.AdamState          # tree moments (gspmd/ddp) or flat shards (_rs)
+    opt: adamw.AdamState          # tree moments (gspmd/ddp) or flat shards (zero1)
     step: jax.Array
     ef: Optional[jax.Array] = None   # error-feedback (TAC compression)
 
@@ -107,13 +120,9 @@ def init_train_state(rng: jax.Array, run: RunConfig) -> TrainState:
 def abstract_train_state(run: RunConfig) -> TrainState:
     """ShapeDtypeStruct state for the dry-run (no allocation)."""
     params = api.abstract(run.model)
-    f32 = lambda p: jax.ShapeDtypeStruct(p.shape, jnp.float32)
-    return TrainState(
-        params=params,
-        opt=adamw.AdamState(mu=jax.tree.map(f32, params),
-                            nu=jax.tree.map(f32, params),
-                            count=jax.ShapeDtypeStruct((), jnp.int32)),
-        step=jax.ShapeDtypeStruct((), jnp.int32))
+    specs = get_backend("gspmd").state_specs(run, 1)
+    return TrainState(params=params, opt=specs.opt,
+                      step=jax.ShapeDtypeStruct((), jnp.int32))
 
 
 def train_state_shardings(mesh, run: RunConfig, *, fsdp: bool = True):
@@ -153,46 +162,16 @@ def make_train_step_gspmd(run: RunConfig, mesh):
 # ---------------------------------------------------------------------------
 
 
-def tac_scatter_size(n_shards: int, pod_size: int, comm) -> int:
-    """ZeRO-1 scatter-group size: with hierarchical (pod-aware)
-    collectives the reduce-scatter runs IN-POD, so shards are 1/in-pod
-    sized and replicated across pods (hierarchical ZeRO)."""
-    if comm.hierarchical and pod_size > 1:
-        assert n_shards % pod_size == 0
-        return n_shards // pod_size
-    return n_shards
-
-
 def abstract_tac_state(run: RunConfig, n_shards: int,
                        pod_size: int = 1) -> TrainState:
-    """State for the TAC step. ``hadronio_rs`` keeps flat ZeRO-1 moment
-    shards of length padded_elems / scatter_size; other modes keep tree
-    moments. ``n_shards`` is the TOTAL ring size; ``pod_size`` > 1 makes
-    the scatter group in-pod (see tac_scatter_size)."""
+    """State for the TAC step: the backend owns the optimizer / error
+    feedback layout (``CommBackend.state_specs``). ``n_shards`` is the
+    TOTAL ring size; ``pod_size`` > 1 makes zero1 scatter groups in-pod
+    (see backends.scatter_group_size)."""
     params = api.abstract(run.model)
-    f32 = lambda p: jax.ShapeDtypeStruct(p.shape, jnp.float32)
-    ef = None
-    if run.comm.compress in ("bf16", "int8_ef"):
-        # per-peer residual: global shape carries the ring dim
-        plan = agg.make_plan(params, run.comm)
-        ef = jax.ShapeDtypeStruct((n_shards, plan.n_slices, plan.slice_elems),
-                                  jnp.float32)
-    if run.comm.mode == "hadronio_rs":
-        # flat ZeRO-1 moment shards; the leading ring dim makes each peer's
-        # shard explicit (global (n_shards, len), local (1, len))
-        plan = agg.make_plan(params, run.comm)
-        eff = tac_scatter_size(n_shards, pod_size, run.comm)
-        assert plan.padded_elems % eff == 0
-        shard = jax.ShapeDtypeStruct(
-            (n_shards, plan.padded_elems // eff), jnp.float32)
-        opt = adamw.AdamState(mu=shard, nu=shard,
-                              count=jax.ShapeDtypeStruct((), jnp.int32))
-    else:
-        opt = adamw.AdamState(mu=jax.tree.map(f32, params),
-                              nu=jax.tree.map(f32, params),
-                              count=jax.ShapeDtypeStruct((), jnp.int32))
-    return TrainState(params=params, opt=opt,
-                      step=jax.ShapeDtypeStruct((), jnp.int32), ef=ef)
+    specs = get_backend(run.comm.mode).state_specs(run, n_shards, pod_size)
+    return TrainState(params=params, opt=specs.opt,
+                      step=jax.ShapeDtypeStruct((), jnp.int32), ef=specs.ef)
 
 
 def init_tac_state(rng: jax.Array, run: RunConfig, n_shards: int,
@@ -208,77 +187,27 @@ def init_tac_state(rng: jax.Array, run: RunConfig, n_shards: int,
                       ef=None if sds.ef is None else zeros(sds.ef))
 
 
-def _decay_mask_flat(plan: agg.PackPlan) -> np.ndarray:
-    """Per-element weight-decay mask in packed-flat layout (decay only
-    params with ndim >= 2, matching adamw.update)."""
-    mask = np.zeros((plan.padded_elems,), np.float32)
-    for (start, end), shape in zip(plan.offsets, plan.shapes):
-        if len(shape) >= 2:
-            mask[start:end] = 1.0
-    return mask
-
-
-def _decay_mask_traced(plan: agg.PackPlan) -> jax.Array:
-    """Same mask built from fills inside the trace — avoids embedding a
-    params-sized host constant in the jaxpr (a 110B model's mask is
-    ~2 GB; ranges of 2D leaves are contiguous, so a handful of
-    dynamic-update-slices suffice)."""
-    mask = jnp.zeros((plan.padded_elems,), jnp.float32)
-    run_start = None
-    runs = []
-    for (start, end), shape in zip(plan.offsets, plan.shapes):
-        if len(shape) >= 2:
-            if run_start is None:
-                run_start = start
-            run_end = end
-        else:
-            if run_start is not None:
-                runs.append((run_start, run_end))
-                run_start = None
-    if run_start is not None:
-        runs.append((run_start, run_end))
-    for s, e in runs:
-        mask = jax.lax.dynamic_update_slice_in_dim(
-            mask, jnp.ones((e - s,), jnp.float32), s, axis=0)
-    return mask
-
-
-def _flat_adamw_update(flat_p, flat_g, mu, nu, count, decay_mask, run):
-    """AdamW on flat vectors (the ZeRO-1 shard path). All f32."""
-    b1, b2 = run.beta1, run.beta2
-    lr = adamw.schedule(run, count)
-    c1 = 1.0 - b1 ** count.astype(jnp.float32)
-    c2 = 1.0 - b2 ** count.astype(jnp.float32)
-    mu = b1 * mu + (1 - b1) * flat_g
-    nu = b2 * nu + (1 - b2) * jnp.square(flat_g)
-    step = (mu / c1) / (jnp.sqrt(nu / c2) + run.eps)
-    step = step + run.weight_decay * decay_mask * flat_p
-    return flat_p - lr * step, mu, nu
-
-
 def make_train_step_tac(run: RunConfig, mesh):
     """Returns (step_fn, state_shardings, batch_shardings_fn).
 
     Fully-manual shard_map over every mesh axis: one flattened DP ring of
     ``n_shards`` peers ("connections"). Params replicated; batch sharded on
-    dim 0; gradient sync is the explicit TAC schedule. ``hadronio_rs``
-    additionally shards the optimizer moments (ZeRO-1) as flat slices.
+    dim 0; gradient sync is the registered backend's collective schedule.
+    zero1 backends additionally shard the optimizer moments as flat slices.
     """
     cfg = run.model
     comm = run.comm
+    backend = get_backend(comm.mode)
+    backend.validate(comm)
     axes = tuple(mesh.axis_names)
     n_shards = int(np.prod([mesh.shape[a] for a in axes]))
     pod_size = mesh.shape.get("pod", 1)
     pod_axis = "pod" if pod_size > 1 else None
     data_axes = tuple(a for a in axes if a != "pod") if pod_axis else axes
     eff_shards = tac_scatter_size(n_shards, pod_size, comm)
+    uctx = UpdateContext(axes=axes, n_shards=n_shards,
+                         eff_shards=eff_shards)
     loss_fn = _loss_fn(cfg, no_shard)   # manual region: compute is local
-
-    plan = None
-    if comm.mode == "hadronio_rs":
-        plan = agg.make_plan(api.abstract(cfg), comm)
-        assert plan.padded_elems % eff_shards == 0, \
-            (plan.padded_elems, eff_shards)
 
     def body(state: TrainState, batch: dict):
         # local loss scaled so psum'd grads are the global-mean grads
@@ -288,46 +217,18 @@ def make_train_step_tac(run: RunConfig, mesh):
 
         l, _aux, grads = _accumulate_grads(scaled_loss, state.params, batch,
                                            run.microbatches)
-        loss = jax.lax.psum(l, axes)
 
         ef = None if state.ef is None else state.ef[0]   # local residual
         res = tac.sync_grads(grads, comm, data_axis=data_axes,
                              pod_axis=pod_axis, ef=ef)
         new_ef = None if res.ef is None else res.ef[None]
 
-        if comm.mode == "hadronio_rs":
-            # ZeRO-1: update this peer's flat param/moment shard, then
-            # all-gather the updated parameter slices (per slice). With
-            # hierarchical collectives the shard index is in-pod.
-            flat_p = agg.pack(state.params, res.plan)
-            nsl = res.plan.n_slices
-            my = jax.lax.axis_index(res.gather_axes)
-            psl = flat_p.reshape(nsl, eff_shards, -1)[:, my].reshape(-1)
-            gsh = res.flat_shard
-            # grad clip on the global flat grad norm (shards replicate
-            # across pods in hierarchical mode: normalize the psum)
-            gn2 = jax.lax.psum(jnp.sum(jnp.square(gsh)), axes)
-            gn2 = gn2 / (n_shards // eff_shards)
-            gnorm = jnp.sqrt(gn2)
-            scale = jnp.minimum(1.0, run.grad_clip / jnp.maximum(gnorm, 1e-12))
-            gsh = gsh * scale
-            dm = _decay_mask_traced(res.plan).reshape(nsl, eff_shards,
-                                                      -1)[:, my]
-            count = state.opt.count + 1
-            new_psl, new_mu, new_nu = _flat_adamw_update(
-                psl, gsh, state.opt.mu[0], state.opt.nu[0], count,
-                dm.reshape(-1), run)
-            new_params = tac.gather_updated(
-                new_psl.astype(jnp.float32), res.plan, state.params, comm,
-                gather_axes=res.gather_axes)
-            new_opt = adamw.AdamState(new_mu[None], new_nu[None], count)
-            metrics = {"loss": loss, "grad_norm": gnorm,
-                       "lr": adamw.schedule(run, count)}
-            return TrainState(new_params, new_opt, state.step + 1,
-                              new_ef), metrics
+        # loss epilogue AFTER the sync emission: overlap-style backends'
+        # early-slice collectives precede it in the program
+        loss = jax.lax.psum(l, axes)
 
-        new_params, new_opt, metrics = adamw.update(
-            res.grads, state.opt, state.params, run)
+        new_params, new_opt, metrics = backend.apply_update(
+            state.params, state.opt, res, run, uctx)
         metrics = dict(metrics, loss=loss)
         return TrainState(new_params, new_opt, state.step + 1,
                           new_ef), metrics
@@ -337,7 +238,8 @@ def make_train_step_tac(run: RunConfig, mesh):
     replicated = P()
     batch_spec = P(axes)          # dim 0 over the flattened ring
 
-    if comm.mode == "hadronio_rs":
+    if backend.zero1:
+        # flat moment shards carry the explicit leading ring dim
         opt_specs = adamw.AdamState(mu=batch_spec, nu=batch_spec,
                                     count=replicated)
     else:
@@ -351,12 +253,12 @@ def make_train_step_tac(run: RunConfig, mesh):
 
     def step_fn(state: TrainState, batch: dict):
         bspecs = batch_specs_fn(batch)
-        out = jax.shard_map(
+        # metrics take a replicated PREFIX spec: whatever dict the
+        # backend's apply_update returns works without launcher edits
+        out = compat.shard_map(
             body, mesh=mesh,
             in_specs=(state_specs, bspecs),
-            out_specs=(state_specs,
-                       {"loss": replicated, "grad_norm": replicated,
-                        "lr": replicated}),
+            out_specs=(state_specs, replicated),
             check_vma=False)(state, batch)
         return out
 
@@ -373,11 +275,12 @@ def make_train_step_tac(run: RunConfig, mesh):
 
 
 def make_train_step(run: RunConfig, mesh):
-    """Dispatch on ``run.comm.mode`` (the transparent boundary: callers
-    never change)."""
-    if run.comm.mode == "gspmd":
-        return make_train_step_gspmd(run, mesh)
-    return make_train_step_tac(run, mesh)
+    """Dispatch on the registered backend's step family (the transparent
+    boundary: callers never change, and no mode names appear here)."""
+    backend = get_backend(run.comm.mode)
+    if backend.manual:
+        return make_train_step_tac(run, mesh)
+    return make_train_step_gspmd(run, mesh)
 
 
 # ---------------------------------------------------------------------------
@@ -404,7 +307,6 @@ def make_decode_step(run: RunConfig, mesh):
         logits, new_cache = api.decode_step(params, cache, batch, cfg,
                                             shard_fn)
         return logits, new_cache
-
     return decode_fn
 
 

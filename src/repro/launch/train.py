@@ -39,6 +39,9 @@ from typing import Callable, Optional
 import jax
 import numpy as np
 
+from repro import compat
+from repro.core.backends import available_modes, get_backend
+
 from repro.configs.base import CommConfig, RunConfig, ShapeConfig
 from repro.configs.registry import get_config
 from repro.checkpoint import CheckpointStore
@@ -107,7 +110,7 @@ class Trainer:
                 os._exit(42)
             self.watchdog = Watchdog(watchdog_secs, _abort)
 
-        with jax.set_mesh(mesh):
+        with compat.set_mesh(mesh):
             step_fn, self.state_sh, batch_sh_fn = \
                 steps_mod.make_train_step(run, mesh)
             self._batch_sh_fn = batch_sh_fn
@@ -120,15 +123,15 @@ class Trainer:
     def init_state(self, seed: Optional[int] = None):
         rng = jax.random.PRNGKey(self.run.seed if seed is None else seed)
         pod = self.mesh.shape.get("pod", 1)
-        if self.run.comm.mode == "gspmd":
-            state = steps_mod.init_train_state(rng, self.run)
-        else:
+        if get_backend(self.run.comm.mode).manual:
             state = steps_mod.init_tac_state(rng, self.run, self.n_shards,
                                              pod)
+        else:
+            state = steps_mod.init_train_state(rng, self.run)
         return jax.device_put(state, self.state_sh)
 
     def abstract_state(self):
-        if self.run.comm.mode == "gspmd":
+        if not get_backend(self.run.comm.mode).manual:
             return steps_mod.abstract_train_state(self.run)
         return steps_mod.abstract_tac_state(self.run, self.n_shards,
                                             self.mesh.shape.get("pod", 1))
@@ -152,7 +155,7 @@ class Trainer:
         state, start = self.restore_or_init()
         metrics = {}
         losses = []
-        with jax.set_mesh(self.mesh):
+        with compat.set_mesh(self.mesh):
             # double-buffered host data: build batch k+1 while step k runs
             next_batch = batch_at(self.source, self.dc, start)
             for step in range(start, run.total_steps):
@@ -235,8 +238,7 @@ def main() -> int:
     p.add_argument("--global-batch", type=int, default=8)
     p.add_argument("--seq-len", type=int, default=128)
     p.add_argument("--mode", default="hadronio",
-                   choices=["gspmd", "sockets", "vma", "hadronio",
-                            "hadronio_rs"])
+                   choices=list(available_modes()))
     p.add_argument("--compress", default="none",
                    choices=["none", "bf16", "int8_ef"])
     p.add_argument("--slice-bytes", type=int, default=4 * 1024 * 1024)

@@ -1,0 +1,65 @@
+"""AdamW on packed-flat vectors — the ZeRO-1 shard path.
+
+The reduce-scatter backends keep optimizer moments as flat, ring-sharded
+slices of the packed gradient vector; this module is the flat-vector
+mirror of :mod:`repro.optim.adamw` (same schedule, same decoupled decay,
+decay masked per element instead of per leaf).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import RunConfig
+from repro.core import aggregation as agg
+from repro.optim import adamw
+
+
+def decay_mask_flat(plan: agg.PackPlan) -> np.ndarray:
+    """Per-element weight-decay mask in packed-flat layout (decay only
+    params with ndim >= 2, matching adamw.update)."""
+    mask = np.zeros((plan.padded_elems,), np.float32)
+    for (start, end), shape in zip(plan.offsets, plan.shapes):
+        if len(shape) >= 2:
+            mask[start:end] = 1.0
+    return mask
+
+
+def decay_mask_traced(plan: agg.PackPlan) -> jax.Array:
+    """Same mask built from fills inside the trace — avoids embedding a
+    params-sized host constant in the jaxpr (a 110B model's mask is
+    ~2 GB; ranges of 2D leaves are contiguous, so a handful of
+    dynamic-update-slices suffice)."""
+    mask = jnp.zeros((plan.padded_elems,), jnp.float32)
+    run_start = None
+    runs = []
+    for (start, end), shape in zip(plan.offsets, plan.shapes):
+        if len(shape) >= 2:
+            if run_start is None:
+                run_start = start
+            run_end = end
+        else:
+            if run_start is not None:
+                runs.append((run_start, run_end))
+                run_start = None
+    if run_start is not None:
+        runs.append((run_start, run_end))
+    for s, e in runs:
+        mask = jax.lax.dynamic_update_slice_in_dim(
+            mask, jnp.ones((e - s,), jnp.float32), s, axis=0)
+    return mask
+
+
+def flat_adamw_update(flat_p, flat_g, mu, nu, count, decay_mask,
+                      run: RunConfig):
+    """AdamW on flat vectors. All f32. Returns (new_p, new_mu, new_nu)."""
+    b1, b2 = run.beta1, run.beta2
+    lr = adamw.schedule(run, count)
+    c1 = 1.0 - b1 ** count.astype(jnp.float32)
+    c2 = 1.0 - b2 ** count.astype(jnp.float32)
+    mu = b1 * mu + (1 - b1) * flat_g
+    nu = b2 * nu + (1 - b2) * jnp.square(flat_g)
+    step = (mu / c1) / (jnp.sqrt(nu / c2) + run.eps)
+    step = step + run.weight_decay * decay_mask * flat_p
+    return flat_p - lr * step, mu, nu

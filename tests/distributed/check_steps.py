@@ -6,6 +6,7 @@ from repro.configs.base import CommConfig, RunConfig
 from repro.configs.registry import get_config, get_shape
 from repro.launch import steps
 from repro.launch.mesh import make_mesh
+from repro import compat
 from repro.launch.sharding import batch_sharding
 from repro.models import api
 
@@ -23,7 +24,7 @@ mesh = make_mesh((4, 2), ("data", "model"))
 
 # --- GSPMD path ---
 run = RunConfig(model=cfg, shape=shape, comm=CommConfig(mode="gspmd"))
-with jax.set_mesh(mesh):
+with compat.set_mesh(mesh):
     step_fn, state_sh, batch_sh_fn = steps.make_train_step(run, mesh)
     state = jax.device_put(steps.init_train_state(rng, run), state_sh)
     jitted = jax.jit(step_fn, in_shardings=(state_sh, batch_sh_fn(mesh, batch)),
@@ -36,12 +37,12 @@ with jax.set_mesh(mesh):
 
 # --- TAC paths ---
 losses = {}
-for mode in ("sockets", "vma", "hadronio", "hadronio_rs"):
+for mode in ("sockets", "vma", "hadronio", "hadronio_overlap", "hadronio_rs"):
     run = RunConfig(model=cfg, shape=shape,
                     comm=CommConfig(mode=mode, slice_bytes=256 * 1024,
                                     ring_capacity_bytes=16 * 1024 * 1024,
                                     hierarchical=False))
-    with jax.set_mesh(mesh):
+    with compat.set_mesh(mesh):
         step_fn, state_sh, batch_sh_fn = steps.make_train_step(run, mesh)
         state = jax.device_put(steps.init_tac_state(rng, run, 8), state_sh)
         jitted = jax.jit(step_fn, in_shardings=(state_sh, batch_sh_fn(mesh, batch)),
@@ -63,7 +64,7 @@ run = RunConfig(model=cfg, shape=shape, comm=CommConfig(mode="hadronio", hierarc
                 microbatches=2)
 batch16 = {"tokens": jax.random.randint(rng, (16, S), 0, cfg.vocab_size),
            "labels": jax.random.randint(rng, (16, S), 0, cfg.vocab_size)}
-with jax.set_mesh(mesh):
+with compat.set_mesh(mesh):
     step_fn, state_sh, batch_sh_fn = steps.make_train_step(run, mesh)
     state = jax.device_put(steps.init_tac_state(rng, run, 8), state_sh)
     s1, m = jax.jit(step_fn, in_shardings=(state_sh, batch_sh_fn(mesh, batch16)),
@@ -73,7 +74,7 @@ with jax.set_mesh(mesh):
 # compression state threading
 run = RunConfig(model=cfg, shape=shape,
                 comm=CommConfig(mode="hadronio", compress="bf16", hierarchical=False))
-with jax.set_mesh(mesh):
+with compat.set_mesh(mesh):
     step_fn, state_sh, batch_sh_fn = steps.make_train_step(run, mesh)
     state = jax.device_put(steps.init_tac_state(rng, run, 8), state_sh)
     s1, m = jax.jit(step_fn, in_shardings=(state_sh, batch_sh_fn(mesh, batch)),
@@ -91,7 +92,7 @@ for mode, hier in (("sockets", False), ("hadronio", True),
     run = RunConfig(model=cfg, shape=shape,
                     comm=CommConfig(mode=mode, slice_bytes=256 * 1024,
                                     hierarchical=hier))
-    with jax.set_mesh(mesh3):
+    with compat.set_mesh(mesh3):
         step_fn, state_sh, batch_sh_fn = steps.make_train_step(run, mesh3)
         state = jax.device_put(steps.init_tac_state(rng, run, 8, 2),
                                state_sh)

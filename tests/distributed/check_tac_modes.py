@@ -3,7 +3,7 @@ os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
 import numpy as np
 import jax, jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
-from jax import shard_map
+from repro.compat import shard_map
 from repro.configs.base import CommConfig
 from repro.core import tac, aggregation as agg
 from repro.launch.mesh import make_mesh
@@ -22,7 +22,7 @@ grads = tree(jax.random.PRNGKey(0))
 # We feed identical grads per shard (replicated), so psum = n_data * grads.
 
 results = {}
-for mode in ("sockets", "vma", "hadronio", "hadronio_rs"):
+for mode in ("sockets", "vma", "hadronio", "hadronio_overlap", "hadronio_rs"):
     comm = CommConfig(mode=mode, slice_bytes=1024, ring_capacity_bytes=64 * 1024,
                       hierarchical=False)
 

@@ -3,16 +3,17 @@ placement, divisibility fallbacks, batch/cache rules."""
 import jax
 import numpy as np
 import pytest
-from jax.sharding import AbstractMesh, PartitionSpec as P
+from jax.sharding import PartitionSpec as P
 
 from repro.configs.registry import get_config
+from repro.launch.mesh import make_abstract_mesh
 from repro.launch.sharding import spec_partition, cache_shardings, \
     batch_sharding
 from repro.models import api
 from repro.models.common import ParamSpec, tree_paths
 
-POD = AbstractMesh((16, 16), ("data", "model"))
-MULTI = AbstractMesh((2, 16, 16), ("pod", "data", "model"))
+POD = make_abstract_mesh((16, 16), ("data", "model"))
+MULTI = make_abstract_mesh((2, 16, 16), ("pod", "data", "model"))
 
 
 def test_tp_rules():
