@@ -47,6 +47,50 @@ def _pingpong_fn(mesh, n_channels: int, msg_elems: int, n_dev: int):
     return jax.jit(f)
 
 
+def recommend_channels(rtt_by_channels: dict[int, float],
+                       msg_size: int) -> tuple[int, list[Row]]:
+    """Pick the channel count maximizing aggregate round-trip throughput
+    from measured (channels -> RTT seconds) points — the paper's Fig. 3
+    trade-off: more connections overlap more, but degrade per-channel
+    latency. Returns (best, rows) with one ``recommended_channels`` CSV
+    row plus the derived per-point throughputs."""
+    rows, best, best_tput = [], None, -1.0
+    for ch, t in sorted(rtt_by_channels.items()):
+        tput = ch * msg_size / max(t, 1e-12)
+        rows.append(Row("latency", "autotune", "hadronio", msg_size, ch,
+                        "sweep_throughput", tput / 1e6, "MB/s", "derived"))
+        if tput > best_tput:
+            best_tput, best = tput, ch
+    rows.append(Row("latency", "autotune", "hadronio", msg_size, best,
+                    "recommended_channels", best, "channels", "derived"))
+    return best, rows
+
+
+def autotune_channels(mesh=None, *, msg_size: int = 64 * 1024,
+                      channels=CHANNELS, iters: int = 10):
+    """Channel-count autotune (ROADMAP item): sweep ``comm.channels``
+    over the ping-pong microbenchmark ON THIS MESH and pick a per-mesh
+    default. Returns ``(best_channels, rows)``; feed ``best_channels``
+    into ``CommConfig(channels=...)``. ``run()`` derives the same
+    recommendation from its own sweep without re-measuring."""
+    if mesh is None:
+        n = len(jax.devices())
+        mesh = make_mesh((n,), ("data",))
+    n_dev = mesh.shape["data"]
+    elems = max(1, msg_size // 4)
+    rows, rtts = [], {}
+    for ch in channels:
+        xs = tuple(jnp.zeros((n_dev, elems), jnp.float32) + i
+                   for i in range(ch))
+        fn = _pingpong_fn(mesh, ch, elems, n_dev)
+        t = timeit(lambda: block(fn(*xs)), warmup=1, iters=iters)
+        rtts[ch] = t
+        rows.append(Row("latency", "autotune", "hadronio", msg_size, ch,
+                        "sweep_rtt", t * 1e6, "us", "measured"))
+    best, rec_rows = recommend_channels(rtts, msg_size)
+    return best, rows + rec_rows
+
+
 def run(mesh=None, *, msg_sizes=MSG_SIZES, channels=CHANNELS,
         iters: int = 10):
     if mesh is None:
@@ -54,6 +98,7 @@ def run(mesh=None, *, msg_sizes=MSG_SIZES, channels=CHANNELS,
         mesh = make_mesh((n,), ("data",))
     n_dev = mesh.shape["data"]
     rows = []
+    rtts_at_max = {}
     for msg in msg_sizes:
         elems = max(1, msg // 4)
         for ch in channels:
@@ -64,6 +109,8 @@ def run(mesh=None, *, msg_sizes=MSG_SIZES, channels=CHANNELS,
                                                        jnp.float32)] * ch))
             stats = hlo.stablehlo_collective_stats(lowered.as_text())
             t = timeit(lambda: block(fn(*xs)), iters=iters)
+            if msg == max(msg_sizes):
+                rtts_at_max[ch] = t
             rtt_us = t * 1e6
             rows.append(Row("latency", "fig3/5/7", "hadronio", msg, ch,
                             "rtt", rtt_us, "us", "measured"))
@@ -74,4 +121,8 @@ def run(mesh=None, *, msg_sizes=MSG_SIZES, channels=CHANNELS,
                             "rtt_v5e_model",
                             derived_collective_time(stats) * 1e6 / ch,
                             "us", "derived"))
+    # per-mesh recommended comm.channels default (ROADMAP autotune item)
+    # derived from the sweep just measured — no re-measurement
+    _, rec_rows = recommend_channels(rtts_at_max, max(msg_sizes))
+    rows.extend(rec_rows)
     return rows

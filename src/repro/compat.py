@@ -58,6 +58,24 @@ def tpu_compiler_params(**kwargs):
     return cls(**kwargs)
 
 
+def pallas_available() -> bool:
+    """True when ``jax.experimental.pallas`` is importable (and, on TPU,
+    its compiler-params class resolves). The comm pack stage
+    (``comm.pack="pallas"``) falls back to the jnp path when this is
+    False, so a CPU-only or pallas-less environment still runs every
+    backend."""
+    try:
+        from jax.experimental import pallas  # noqa: F401
+    except Exception:
+        return False
+    if jax.default_backend() == "tpu":
+        try:
+            tpu_compiler_params()
+        except Exception:
+            return False
+    return True
+
+
 def set_mesh(mesh):
     """``jax.set_mesh`` context. Old jax has no sharding-in-types mesh
     context; entering the ``Mesh`` itself provides the legacy global-mesh

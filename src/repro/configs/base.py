@@ -194,6 +194,14 @@ class CommConfig:
       hadronio_overlap — beyond-paper: DDP-style reverse-layer bucketing;
                    per-bucket collectives depend only on their own leaves
                    so they overlap the remaining backward compute.
+      hadronio_overlap_rs — beyond-paper: bucketed ZeRO-1; each bucket
+                   reduce-scatters its own shard (same overlap property)
+                   and the optimizer updates flat data-sharded moments.
+
+    ``pack`` selects the pack/cast/error-feedback copy-path implementation
+    (the paper's gathering-write hot spot): ``jnp`` (reference) or
+    ``pallas`` (fused one-pass kernel, kernels/ring_pack.py; falls back to
+    jnp via repro.compat when pallas is unavailable).
 
     The authoritative mode list is the backend registry
     (``repro.core.backends.available_modes``) — new modes register
@@ -205,7 +213,11 @@ class CommConfig:
     slice_bytes: int = 4 * 1024 * 1024
     channels: int = 4                  # in-flight slices ("connections")
     compress: str = "none"             # none | bf16 | int8_ef
+    pack: str = "jnp"                  # pack-stage impl: jnp | pallas
     hierarchical: bool = True          # pod-aware two-level collectives
+
+    COMPRESS_CODECS = ("none", "bf16", "int8_ef")
+    PACK_IMPLS = ("jnp", "pallas")
 
     def __post_init__(self):
         # the backend registry is the single source of truth for modes
@@ -213,7 +225,20 @@ class CommConfig:
         from repro.core.backends import available_modes
         assert self.mode in available_modes(), \
             f"unknown comm mode {self.mode!r}; registered: {available_modes()}"
-        assert self.compress in ("none", "bf16", "int8_ef")
+        if self.channels < 1:
+            raise ValueError(
+                f"comm.channels must be >= 1 (got {self.channels}): the "
+                "connection pool needs at least one channel; values above "
+                "n_slices are clamped to fully-independent emission")
+        if self.compress not in self.COMPRESS_CODECS:
+            raise ValueError(
+                f"unknown comm.compress {self.compress!r}: expected one of "
+                f"{self.COMPRESS_CODECS}")
+        if self.pack not in self.PACK_IMPLS:
+            raise ValueError(
+                f"unknown comm.pack {self.pack!r}: expected one of "
+                f"{self.PACK_IMPLS} (pallas falls back to jnp when the "
+                "kernel toolchain is unavailable)")
         assert self.slice_bytes > 0 and self.ring_capacity_bytes >= self.slice_bytes
 
 

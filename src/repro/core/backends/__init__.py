@@ -16,6 +16,7 @@ from repro.core.backends import vma          # noqa: F401
 from repro.core.backends import hadronio     # noqa: F401
 from repro.core.backends import hadronio_rs  # noqa: F401
 from repro.core.backends import hadronio_overlap  # noqa: F401
+from repro.core.backends import hadronio_overlap_rs  # noqa: F401
 
 __all__ = [
     "CommBackend", "StateSpecs", "SyncContext", "SyncResult",

@@ -44,8 +44,10 @@ class SyncResult(NamedTuple):
     the other half of the transparency boundary)."""
     grads: PyTree             # synced grads (tree), or None in zero1 modes
     flat_shard: Optional[jax.Array]   # data-sharded flat grads (zero1)
-    plan: Optional[agg.PackPlan]
-    ef: Optional[jax.Array]   # new error-feedback state (compression)
+    plan: Any = None          # backend-owned pack plan (ring or bucketed)
+    ef: Optional[PyTree] = None   # new error-feedback state (compression):
+    #                           one array keyed to the global ring plan, or
+    #                           a pytree keyed by bucket id (overlap modes)
     gather_axes: tuple = ()   # axes the zero1 shard was scattered over
 
 
@@ -56,11 +58,13 @@ class SyncContext:
     pod_axis: Optional[str]   # pod axis when pod-aware collectives apply
     data_axis: Any            # in-pod DP axis name, or tuple of names
     flat_axes: tuple          # every DP axis as one flattened logical ring
-    ef: Optional[jax.Array] = None   # error-feedback residual (local)
+    ef: Optional[PyTree] = None   # error-feedback residual (local): an
+    #                           array (global ring keying) or a pytree
+    #                           keyed by bucket id (per-bucket keying)
 
     @classmethod
     def resolve(cls, comm: CommConfig, data_axis, pod_axis: Optional[str],
-                ef: Optional[jax.Array] = None) -> "SyncContext":
+                ef: Optional[PyTree] = None) -> "SyncContext":
         """``data_axis`` may be one axis name or a tuple of names (a
         flattened DP ring). Pod-awareness applies only when the config
         asks for hierarchical collectives AND a pod axis exists; in flat
@@ -84,7 +88,8 @@ class SyncContext:
 class StateSpecs(NamedTuple):
     """Backend-owned slice of the train state (ShapeDtypeStructs)."""
     opt: adamw.AdamState      # moment layout (tree or flat ring shards)
-    ef: Optional[jax.ShapeDtypeStruct]
+    ef: Optional[PyTree]      # error-feedback layout: one struct (global
+    #                           ring keying) or a tuple keyed by bucket id
 
 
 @dataclass(frozen=True)
@@ -160,6 +165,27 @@ class CommBackend(abc.ABC):
     def validate(self, comm: CommConfig) -> None:
         """Reject config combinations this strategy cannot honor (called
         at step-build time, before any tracing)."""
+
+    # -- reconstruction / resharding hooks ------------------------------
+
+    def gathered_grads(self, res: SyncResult, like: PyTree) -> PyTree:
+        """Reconstruct the full synced-gradient tree from a SyncResult
+        (traced inside the shard_map). Default: the tree is already
+        there. ZeRO-1 backends override: all-gather their flat shard over
+        ``res.gather_axes`` and unpack. Used by the conformance suite and
+        debugging tools; the train step never needs it."""
+        assert res.grads is not None, \
+            f"{self.name}: zero1 backend must override gathered_grads"
+        return res.grads
+
+    def reshard_flat_shards(self, run: RunConfig, stacked, new_shards: int):
+        """Re-slice checkpointed ring-sharded flat optimizer state
+        (global (old_shards, len) numpy array) for a ``new_shards`` ring
+        (elastic restore). Only meaningful for zero1 backends — the state
+        layout is backend-owned, so its resharding rule is too."""
+        raise ValueError(
+            f"comm backend {self.name!r} has no ring-sharded flat state "
+            "to reshard")
 
 
 # ---------------------------------------------------------------------------

@@ -22,3 +22,10 @@ class GspmdBackend(CommBackend):
         # no manual wire -> no compression, so the inherited state_specs
         # default yields tree moments with ef=None
         return False
+
+    def validate(self, comm) -> None:
+        if comm.compress != "none":
+            raise ValueError(
+                "gspmd cannot honor wire compression "
+                f"(compress={comm.compress!r}): XLA owns the collectives "
+                "— there is no manual wire stage; use a TAC mode")

@@ -12,21 +12,30 @@ while the remaining backward compute for earlier layers is still running
 
 Buckets fill greedily to ``comm.slice_bytes`` (one leaf larger than a
 slice gets its own bucket) and are padded to the 512-element alignment so
-pod-aware two-level collectives shard evenly. Wire compression is not
-supported here: error-feedback state is shaped by the global ring-buffer
-plan, which this mode deliberately does not build.
+pod-aware two-level collectives shard evenly. Wire compression IS
+supported here: error-feedback state is a pytree keyed by bucket id (one
+residual per bucket, independent of the global ring plan), so each
+bucket's pack stage — the fused add-EF/cast pass from
+:func:`repro.core.backends.pipeline.pack_wire` — stays self-contained
+and the bucket's collective still depends only on its own leaves.
 """
 from __future__ import annotations
+
+from typing import Any, NamedTuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.configs.base import CommConfig
+from repro.configs.base import CommConfig, RunConfig
+from repro.core import compress as comp
 from repro.core.backends import pipeline
-from repro.core.backends.base import (CommBackend, SyncContext, SyncResult,
-                                      register)
+from repro.core.backends.base import (CommBackend, StateSpecs, SyncContext,
+                                      SyncResult, register)
 from repro.core.selector import emission_order
+from repro.optim import adamw
+
+PyTree = Any
 
 _ALIGN = 512   # matches aggregation.make_plan's reduce-scatter alignment
 
@@ -52,45 +61,123 @@ def make_buckets(sizes: list[int], slice_bytes: int,
     return buckets
 
 
+class BucketPlan(NamedTuple):
+    """Static layout of one bucketed exchange (the bucketed counterpart
+    of :class:`repro.core.aggregation.PackPlan` — shape-only, computed at
+    trace time from the pytree structure)."""
+    buckets: tuple            # per bucket: tuple of leaf indices
+    sizes: tuple              # per-leaf element counts (flatten order)
+    shapes: tuple             # per-leaf shapes (flatten order)
+    padded: tuple             # per-bucket padded element count
+    align: int
+
+    @property
+    def n_buckets(self) -> int:
+        return len(self.buckets)
+
+    @property
+    def total_padded(self) -> int:
+        return sum(self.padded)
+
+
+def make_bucket_plan(tree: PyTree, comm: CommConfig,
+                     align: int = _ALIGN) -> BucketPlan:
+    leaves = jax.tree.leaves(tree)
+    shapes = tuple(tuple(l.shape) for l in leaves)
+    sizes = tuple(int(np.prod(s)) if s else 1 for s in shapes)
+    buckets = tuple(tuple(b) for b in make_buckets(list(sizes),
+                                                   comm.slice_bytes))
+    padded = tuple(-(-sum(sizes[i] for i in b) // align) * align
+                   for b in buckets)
+    return BucketPlan(buckets, sizes, shapes, padded, align)
+
+
+def pack_bucket(leaves: list, plan: BucketPlan, b: int) -> jax.Array:
+    """The per-bucket gathering write: concatenate the bucket's leaves
+    into one padded f32 vector."""
+    flat = jnp.concatenate(
+        [leaves[i].astype(jnp.float32).reshape(-1) for i in plan.buckets[b]])
+    pad = plan.padded[b] - flat.shape[0]
+    return jnp.pad(flat, (0, pad)) if pad else flat
+
+
+def unpack_bucket(vec: jax.Array, plan: BucketPlan, b: int,
+                  like_leaves: list, out: list) -> None:
+    """Inverse carve of one bucket into ``out`` (a per-leaf slot list),
+    casting each leaf to its ``like`` dtype."""
+    off = 0
+    for i in plan.buckets[b]:
+        piece = jax.lax.slice_in_dim(vec, off, off + plan.sizes[i], axis=0)
+        out[i] = piece.reshape(plan.shapes[i]).astype(like_leaves[i].dtype)
+        off += plan.sizes[i]
+
+
+def bucket_ef_specs(plan: BucketPlan, n_shards: int) -> tuple:
+    """Per-bucket error-feedback layout: the EF pytree is keyed by bucket
+    id (leaf b <-> bucket b); the leading ring dim makes each peer's
+    residual row explicit, exactly like the global-ring EF spec."""
+    return tuple(jax.ShapeDtypeStruct((n_shards, p), jnp.float32)
+                 for p in plan.padded)
+
+
+def pack_buckets_wire(leaves: list, plan: BucketPlan, ctx: SyncContext):
+    """Run the pack stage per bucket. Returns (wires, new_efs, scales) —
+    lists indexed by bucket id; ``new_efs`` entries are (padded_b,) f32
+    or None, wires are (1, padded_b) of the wire dtype."""
+    efs = list(ctx.ef) if ctx.ef is not None else [None] * plan.n_buckets
+    assert len(efs) == plan.n_buckets, (len(efs), plan.n_buckets)
+    wires, new_efs, scales = [], [], []
+    for b in range(plan.n_buckets):
+        flat = pack_bucket(leaves, plan, b)
+        ef_b = None if efs[b] is None else efs[b][None]
+        wire, nef, scale = pipeline.pack_wire(flat[None], ef_b, ctx.comm)
+        wires.append(wire)
+        new_efs.append(None if nef is None else nef[0])
+        scales.append(scale)
+    return wires, new_efs, scales
+
+
+def bucket_ef_result(new_efs: list):
+    return tuple(new_efs) if any(e is not None for e in new_efs) else None
+
+
 @register("hadronio_overlap")
 class HadronioOverlapBackend(CommBackend):
 
-    def validate(self, comm: CommConfig) -> None:
-        if comm.compress != "none":
-            raise ValueError(
-                "hadronio_overlap does not support wire compression "
-                f"(compress={comm.compress!r}): error-feedback state is "
-                "keyed to the global ring-buffer plan, which bucketing "
-                "does not build — use mode='hadronio' for compressed "
-                "transfers")
-
-    def needs_ef(self, comm: CommConfig) -> bool:
-        return False
+    def state_specs(self, run: RunConfig, n_shards: int,
+                    pod_size: int = 1) -> StateSpecs:
+        """Tree moments (DDP-style), plus per-bucket error feedback when
+        compression is on — keyed by bucket id, NOT by the global ring
+        plan (this mode never builds one)."""
+        from repro.models import api
+        params = api.abstract(run.model)
+        f32 = lambda p: jax.ShapeDtypeStruct(p.shape, jnp.float32)
+        ef = None
+        if self.needs_ef(run.comm):
+            plan = make_bucket_plan(params, run.comm)
+            ef = bucket_ef_specs(plan, n_shards)
+        opt = adamw.AdamState(mu=jax.tree.map(f32, params),
+                              nu=jax.tree.map(f32, params),
+                              count=jax.ShapeDtypeStruct((), jnp.int32))
+        return StateSpecs(opt=opt, ef=ef)
 
     def sync(self, grads, ctx: SyncContext) -> SyncResult:
-        self.validate(ctx.comm)
         leaves, treedef = jax.tree.flatten(grads)
-        sizes = [int(np.prod(l.shape)) if l.shape else 1 for l in leaves]
-        buckets = make_buckets(sizes, ctx.comm.slice_bytes)
+        plan = make_bucket_plan(grads, ctx.comm)
+        wires, new_efs, scales = pack_buckets_wire(leaves, plan, ctx)
 
-        def packed(bucket):
-            flat = jnp.concatenate(
-                [leaves[i].astype(jnp.float32).reshape(-1) for i in bucket])
-            pad = -flat.shape[0] % _ALIGN
-            return jnp.pad(flat, (0, pad)) if pad else flat
-
-        reduced = pipeline.emit_through_channels(
-            [packed(b) for b in buckets], ctx,
-            lambda ch, x: ch.all_reduce(x))
+        if ctx.comm.compress == "int8_ef":
+            # per-bucket all-gather + local dequant-sum; every bucket's
+            # exchange still depends only on its own leaves
+            reduced = [comp.int8_allreduce(q, s, ctx.flat_axes)
+                       for q, s in zip(wires, scales)]
+        else:
+            reduced = pipeline.emit_through_channels(
+                wires, ctx, lambda ch, x: ch.all_reduce(x).astype(
+                    jnp.float32))
 
         out: list = [None] * len(leaves)
-        for red, bucket in zip(reduced, buckets):
-            off = 0
-            for i in bucket:
-                piece = jax.lax.slice_in_dim(red, off, off + sizes[i],
-                                             axis=0)
-                out[i] = piece.reshape(leaves[i].shape).astype(
-                    leaves[i].dtype)
-                off += sizes[i]
+        for b, red in enumerate(reduced):
+            unpack_bucket(red.reshape(-1), plan, b, leaves, out)
         synced = jax.tree.unflatten(treedef, out)
-        return SyncResult(synced, None, None, ctx.ef)
+        return SyncResult(synced, None, plan, bucket_ef_result(new_efs))

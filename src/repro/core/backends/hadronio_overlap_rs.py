@@ -1,0 +1,214 @@
+"""``hadronio_overlap_rs`` — beyond-paper: bucketed ZeRO-1.
+
+The composition the ROADMAP called out: ``hadronio_overlap``'s
+reverse-layer bucketing (per-bucket collectives that depend only on
+their own leaves, emitted before the loss epilogue) with
+``hadronio_rs``'s reduce-scatter + data-sharded flat AdamW update
+(:mod:`repro.optim.flat`). Each bucket reduce-scatters its OWN shard as
+soon as its leaves exist, so the ZeRO-1 exchange overlaps the remaining
+backward compute — Ibdxnet's point that the buffer scheme and the send
+schedule must be co-designed (arXiv:1812.01963), applied to the ZeRO
+path.
+
+Layout: the peer's flat shard is the concatenation, in bucket order, of
+its contiguous chunk of every bucket (chunk = padded_b / group). Buckets
+are padded to lcm(512, scatter-group) so every bucket shards evenly;
+with pod-aware collectives the scatter group is in-pod and shards
+replicate across pods (hierarchical ZeRO). Error feedback is keyed by
+bucket id, exactly as in ``hadronio_overlap``.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import CommConfig, RunConfig
+from repro.core import compress as comp
+from repro.core.backends import pipeline
+from repro.core.backends.base import (CommBackend, StateSpecs, SyncContext,
+                                      SyncResult, UpdateContext, register,
+                                      scatter_group_size)
+from repro.core.backends.hadronio_overlap import (
+    _ALIGN, BucketPlan, bucket_ef_result, bucket_ef_specs, make_bucket_plan,
+    pack_bucket, pack_buckets_wire, unpack_bucket)
+from repro.core.hierarchical import all_gather_data
+from repro.optim import adamw
+from repro.optim.flat import flat_adamw_update, reshard_ring_segments
+
+PyTree = Any
+
+
+def rs_align(group: int) -> int:
+    """Bucket padding alignment: every bucket must shard evenly over the
+    scatter group AND keep the 512-lane alignment -> lcm."""
+    return _ALIGN * group // math.gcd(_ALIGN, group)
+
+
+def rs_bucket_plan(tree: PyTree, comm: CommConfig, group: int) -> BucketPlan:
+    return make_bucket_plan(tree, comm, align=rs_align(group))
+
+
+def bucket_decay_mask(plan: BucketPlan) -> jax.Array:
+    """Per-element weight-decay mask in bucketed-flat layout (decay only
+    >= 2-D leaves, matching adamw.update). Built from contiguous-run
+    fills inside the trace, like optim.flat.decay_mask_traced."""
+    mask = jnp.zeros((plan.total_padded,), jnp.float32)
+    runs = []
+    base = 0
+    for b, idx in enumerate(plan.buckets):
+        off, run_start = base, None
+        for i in idx:
+            if len(plan.shapes[i]) >= 2:
+                if run_start is None:
+                    run_start = off
+                run_end = off + plan.sizes[i]
+            elif run_start is not None:
+                runs.append((run_start, run_end))
+                run_start = None
+            off += plan.sizes[i]
+        if run_start is not None:
+            runs.append((run_start, run_end))
+        base += plan.padded[b]
+    for s, e in runs:
+        mask = jax.lax.dynamic_update_slice_in_dim(
+            mask, jnp.ones((e - s,), jnp.float32), s, axis=0)
+    return mask
+
+
+def shard_of_buckets(vectors_by_bucket, plan: BucketPlan, group: int, my):
+    """Concatenate this peer's contiguous chunk of every bucket vector —
+    the flat-shard layout (bucket-major, ring-ordered chunks)."""
+    parts = []
+    for b, vec in enumerate(vectors_by_bucket):
+        c = plan.padded[b] // group
+        parts.append(jax.lax.dynamic_slice_in_dim(vec, my * c, c, axis=0))
+    return jnp.concatenate(parts)
+
+
+@register("hadronio_overlap_rs")
+class HadronioOverlapRsBackend(CommBackend):
+
+    zero1 = True
+
+    def sync(self, grads, ctx: SyncContext) -> SyncResult:
+        leaves, _ = jax.tree.flatten(grads)
+        gather_axes, group = pipeline.scatter_group(ctx)
+        plan = rs_bucket_plan(grads, ctx.comm, group)
+        wires, new_efs, scales = pack_buckets_wire(leaves, plan, ctx)
+
+        if ctx.comm.compress == "int8_ef":
+            # per-bucket dequant-sum everywhere, keep this peer's chunk
+            my = jax.lax.axis_index(gather_axes)
+            shards = [
+                jax.lax.dynamic_slice_in_dim(
+                    comp.int8_allreduce(q, s, ctx.flat_axes).reshape(-1),
+                    my * (plan.padded[b] // group),
+                    plan.padded[b] // group, axis=0)
+                for b, (q, s) in enumerate(zip(wires, scales))]
+        else:
+            shards = pipeline.emit_through_channels(
+                wires, ctx,
+                lambda ch, x: ch.reduce_scatter(x).astype(
+                    jnp.float32).reshape(-1))
+        flat_shard = jnp.concatenate(shards)
+        return SyncResult(None, flat_shard, plan, bucket_ef_result(new_efs),
+                          gather_axes)
+
+    def state_specs(self, run: RunConfig, n_shards: int,
+                    pod_size: int = 1) -> StateSpecs:
+        """Flat ZeRO-1 moment shards in bucketed layout (leading ring dim
+        makes each peer's shard explicit), per-bucket error feedback."""
+        from repro.models import api
+        params = api.abstract(run.model)
+        eff = scatter_group_size(n_shards, pod_size, run.comm)
+        plan = rs_bucket_plan(params, run.comm, eff)
+        ef = bucket_ef_specs(plan, n_shards) if self.needs_ef(run.comm) \
+            else None
+        shard = jax.ShapeDtypeStruct(
+            (n_shards, plan.total_padded // eff), jnp.float32)
+        opt = adamw.AdamState(mu=shard, nu=shard,
+                              count=jax.ShapeDtypeStruct((), jnp.int32))
+        return StateSpecs(opt=opt, ef=ef)
+
+    def apply_update(self, params: PyTree, opt: adamw.AdamState,
+                     res: SyncResult, run: RunConfig,
+                     uctx: UpdateContext):
+        """Bucketed ZeRO-1: update this peer's flat param/moment shard,
+        then all-gather the updated parameters PER BUCKET (independent,
+        overlappable). With hierarchical collectives the shard index is
+        in-pod."""
+        plan: BucketPlan = res.plan
+        eff = uctx.eff_shards
+        leaves_p, treedef = jax.tree.flatten(params)
+        my = jax.lax.axis_index(res.gather_axes)
+        psl = shard_of_buckets(
+            [pack_bucket(leaves_p, plan, b) for b in range(plan.n_buckets)],
+            plan, eff, my)
+        gsh = res.flat_shard
+        # grad clip on the global flat grad norm (shards replicate across
+        # pods in hierarchical mode: normalize the psum)
+        gn2 = jax.lax.psum(jnp.sum(jnp.square(gsh)), uctx.axes)
+        gn2 = gn2 / (uctx.n_shards // eff)
+        gnorm = jnp.sqrt(gn2)
+        scale = jnp.minimum(1.0, run.grad_clip / jnp.maximum(gnorm, 1e-12))
+        gsh = gsh * scale
+        mask = bucket_decay_mask(plan)
+        dm = shard_of_buckets(
+            [jax.lax.slice_in_dim(mask, sum(plan.padded[:b]),
+                                  sum(plan.padded[:b]) + plan.padded[b])
+             for b in range(plan.n_buckets)], plan, eff, my)
+        count = opt.count + 1
+        new_psl, new_mu, new_nu = flat_adamw_update(
+            psl, gsh, opt.mu[0], opt.nu[0], count, dm, run)
+        out: list = [None] * len(leaves_p)
+        off = 0
+        new_psl = new_psl.astype(jnp.float32)
+        for b in range(plan.n_buckets):
+            c = plan.padded[b] // eff
+            shard_b = jax.lax.slice_in_dim(new_psl, off, off + c, axis=0)
+            full_b = all_gather_data(shard_b, res.gather_axes)
+            unpack_bucket(full_b, plan, b, leaves_p, out)
+            off += c
+        new_params = jax.tree.unflatten(treedef, out)
+        new_opt = adamw.AdamState(new_mu[None], new_nu[None], count)
+        metrics = {"grad_norm": gnorm, "lr": adamw.schedule(run, count)}
+        return new_params, new_opt, metrics
+
+    def gathered_grads(self, res: SyncResult, like: PyTree) -> PyTree:
+        """Reconstruct the synced gradient tree: per-bucket all-gather of
+        the shard chunks, then the inverse carve."""
+        plan: BucketPlan = res.plan
+        like_leaves, treedef = jax.tree.flatten(like)
+        out: list = [None] * len(like_leaves)
+        group = plan.total_padded // res.flat_shard.shape[0]
+        off = 0
+        for b in range(plan.n_buckets):
+            c = plan.padded[b] // group
+            shard_b = jax.lax.slice_in_dim(res.flat_shard, off, off + c,
+                                           axis=0)
+            full_b = all_gather_data(shard_b, res.gather_axes)
+            unpack_bucket(full_b, plan, b, like_leaves, out)
+            off += c
+        return jax.tree.unflatten(treedef, out)
+
+    def reshard_flat_shards(self, run: RunConfig, stacked, new_shards: int):
+        """Elastic re-slice of the bucketed flat moments. Valid only when
+        the bucket plan is ring-size-invariant (the scatter group divides
+        the 512 alignment for both ring sizes, the common power-of-two
+        case) — otherwise the bucket padding itself changes and the state
+        must be reinitialized."""
+        from repro.models import api
+        old_shards = stacked.shape[0]
+        eff_old = scatter_group_size(old_shards, 1, run.comm)
+        eff_new = scatter_group_size(new_shards, 1, run.comm)
+        if rs_align(eff_old) != rs_align(eff_new):
+            raise ValueError(
+                f"cannot reshard bucketed ZeRO-1 state {old_shards}->"
+                f"{new_shards}: bucket alignment changes "
+                f"({rs_align(eff_old)} -> {rs_align(eff_new)})")
+        plan = rs_bucket_plan(api.abstract(run.model), run.comm, eff_old)
+        return reshard_ring_segments(stacked, old_shards, new_shards,
+                                     plan.padded)

@@ -19,7 +19,8 @@ from repro.core.backends.base import (CommBackend, StateSpecs, SyncContext,
                                       scatter_group_size)
 from repro.core.hierarchical import all_gather_data
 from repro.optim import adamw
-from repro.optim.flat import decay_mask_traced, flat_adamw_update
+from repro.optim.flat import (decay_mask_traced, flat_adamw_update,
+                              reshard_ring_segments)
 
 PyTree = Any
 
@@ -97,3 +98,17 @@ class HadronioRsBackend(CommBackend):
         new_opt = adamw.AdamState(new_mu[None], new_nu[None], count)
         metrics = {"grad_norm": gnorm, "lr": adamw.schedule(run, count)}
         return new_params, new_opt, metrics
+
+    def gathered_grads(self, res: SyncResult, like: PyTree) -> PyTree:
+        """Reconstruct the synced gradient tree from the ZeRO-1 shard
+        (per-slice all-gather + unpack)."""
+        return gather_updated(res.flat_shard, res.plan, like, None,
+                              gather_axes=res.gather_axes)
+
+    def reshard_flat_shards(self, run: RunConfig, stacked, new_shards: int):
+        """Elastic re-slice: the global flat layout is slice-major with
+        ring-ordered chunks — n_slices equal segments."""
+        from repro.models import api
+        plan = agg.make_plan(api.abstract(run.model), run.comm)
+        return reshard_ring_segments(stacked, stacked.shape[0], new_shards,
+                                     [plan.slice_elems] * plan.n_slices)

@@ -3,15 +3,23 @@
 One gradient exchange is a fixed sequence of stages, written once here
 instead of per-branch in every mode:
 
-    pack -> ring-buffer plan -> compress -> per-channel collective -> unpack
+    pack -> ring-buffer plan -> pack stage (cast/EF) -> per-channel
+    collective -> unpack
 
 ``pack``/``plan`` live in :mod:`repro.core.aggregation` (the gathering
 write); this module owns the wire stages:
 
 * :func:`channels_for` — build the connection pool for a resolved axis
   topology (pod-aware when the context says so).
-* :func:`compress_slices` — the optional wire codec (bf16 + error
-  feedback, int8 with local dequant-sum).
+* :func:`pack_wire` — the pack stage: the fused add-error-feedback /
+  cast-to-wire-dtype copy pass (the paper's §III-C gathering-write hot
+  spot). ``comm.pack`` selects the implementation: ``"pallas"`` runs the
+  fused one-HBM-pass kernel (kernels/ring_pack.py, interpret mode
+  off-TPU), ``"jnp"`` the reference elementwise path; both produce
+  bit-identical wire bytes. Selection falls back through
+  :func:`repro.compat.pallas_available` so pallas-less environments run
+  every backend unchanged. int8 needs a per-slice amax reduction the
+  kernel does not fuse, so it always takes the jnp path.
 * :func:`emit_through_channels` — the worker-per-connection schedule:
   slices are assigned to channels round-robin (paper §IV-C) and each
   channel issues its collectives IN ORDER (an ``optimization_barrier``
@@ -20,7 +28,7 @@ write); this module owns the wire stages:
   data-independent. ``comm.channels`` therefore really is the paper's
   connection-count axis: it bounds how many collectives can be in
   flight, from fully serialized (1) to fully independent (>= n_slices).
-* :func:`reduce_slices` / :func:`scatter_slices` — compress + per-slice
+* :func:`reduce_slices` / :func:`scatter_slices` — pack stage + per-slice
   all-reduce / reduce-scatter composed over the channel schedule.
 
 Backends compose these; none of them re-implements a stage.
@@ -32,6 +40,8 @@ from typing import Callable, Optional
 import jax
 import jax.numpy as jnp
 
+from repro import compat
+from repro.configs.base import CommConfig
 from repro.core import compress as comp
 from repro.core.channels import CommChannel, make_channels, round_robin
 from repro.core.selector import barrier, emission_order
@@ -47,17 +57,37 @@ def channels_for(ctx: SyncContext, n_slices: int) -> list[CommChannel]:
                          data_axis=ctx.data_axis)
 
 
-def compress_slices(slices: jax.Array, ctx: SyncContext):
-    """Wire codec stage. Returns (wire, new_ef, int8_scale). For int8 the
-    caller must use :func:`comp.int8_allreduce`-style summation (signalled
-    by a non-None scale)."""
-    comm = ctx.comm
-    if comm.compress == "bf16":
-        wire, new_ef = comp.bf16_compress(slices, ctx.ef)
-        return wire, new_ef, None
+def pack_impl(comm: CommConfig) -> str:
+    """Resolve the pack-stage implementation: honor ``comm.pack`` when the
+    pallas toolchain is importable, else fall back to jnp."""
+    if comm.pack == "pallas" and compat.pallas_available():
+        return "pallas"
+    return "jnp"
+
+
+def pack_wire(slices: jax.Array, ef, comm: CommConfig):
+    """The pack stage over a ``(n, S)`` slice view: one fused pass doing
+    add-EF, cast-to-wire-dtype, and residual capture.
+
+    Returns ``(wire, new_ef, int8_scale)``. ``new_ef`` is None when the
+    codec carries no residual; a non-None ``int8_scale`` signals that the
+    caller must use :func:`comp.int8_allreduce`-style summation."""
     if comm.compress == "int8_ef":
-        q, scale, new_ef = comp.int8_quantize(slices, ctx.ef)
+        # amax reduction + quant: jnp path regardless of comm.pack
+        q, scale, new_ef = comp.int8_quantize(slices, ef)
         return q, new_ef, scale
+    with_ef = comm.compress == "bf16"
+    wire_dtype = "bfloat16" if with_ef else jnp.dtype(slices.dtype).name
+    if pack_impl(comm) == "pallas":
+        from repro.kernels import ops
+        n, s = slices.shape
+        wire, new_ef = ops.pack_slices(slices.reshape(-1), ef, n_slices=n,
+                                       slice_elems=s, wire_dtype=wire_dtype,
+                                       with_ef=with_ef)
+        return wire, new_ef, None
+    if with_ef:
+        wire, new_ef = comp.bf16_compress(slices, ef)
+        return wire, new_ef, None
     return slices, None, None
 
 
@@ -84,11 +114,20 @@ def emit_through_channels(items: list, ctx: SyncContext,
     return outs
 
 
+def scatter_group(ctx: SyncContext):
+    """(gather_axes, group_size) for the ZeRO-1 reduce-scatter: in-pod
+    when pod-aware (shards replicate across pods), the whole flattened
+    ring otherwise. ``group_size`` is a static int (psum-of-1 idiom)."""
+    gather_axes = ctx.data_axes_tuple if ctx.pod_axis is not None \
+        else ctx.flat_axes
+    return gather_axes, jax.lax.psum(1, gather_axes)
+
+
 def reduce_slices(slices: jax.Array, ctx: SyncContext):
-    """Per-slice all-reduce with optional compression, scheduled over the
-    channel pool. slices: (n, S) f32. Returns (reduced (n, S) f32,
+    """Per-slice all-reduce with the optional pack stage, scheduled over
+    the channel pool. slices: (n, S) f32. Returns (reduced (n, S) f32,
     new_ef)."""
-    wire, new_ef, scale = compress_slices(slices, ctx)
+    wire, new_ef, scale = pack_wire(slices, ctx.ef, ctx.comm)
     if scale is not None:
         # int8: all-gather + local dequant-sum (one fused exchange)
         return comp.int8_allreduce(wire, scale, ctx.flat_axes), new_ef
@@ -101,19 +140,25 @@ def reduce_slices(slices: jax.Array, ctx: SyncContext):
 
 def scatter_slices(slices: jax.Array, ctx: SyncContext):
     """Per-slice reduce-scatter (the ZeRO-1 exchange) over the channel
-    pool. slices: (n, S) f32 (bf16-compressible). Returns (flat_shard,
+    pool. slices: (n, S) f32 (wire-compressible). Returns (flat_shard,
     new_ef, gather_axes) where flat_shard is the peer's (n * S/group,)
     ZeRO-1 slice and ``gather_axes`` are the axes the shard must be
     all-gathered over."""
-    comm = ctx.comm
-    new_ef = None
-    if comm.compress == "bf16":
-        slices, new_ef = comp.bf16_compress(slices, ctx.ef)
-    hier = ctx.pod_axis is not None
-    gather_axes = ctx.data_axes_tuple if hier else ctx.flat_axes
+    gather_axes, group = scatter_group(ctx)
+    wire, new_ef, scale = pack_wire(slices, ctx.ef, ctx.comm)
+    if scale is not None:
+        # int8: full dequant-sum everywhere, then keep this peer's chunk
+        # of every slice (pods replicate shards, matching gather_axes)
+        red = comp.int8_allreduce(wire, scale, ctx.flat_axes)
+        n, s = red.shape
+        assert s % group == 0, (s, group)
+        my = jax.lax.axis_index(gather_axes)
+        shard = jax.lax.dynamic_slice_in_dim(red, my * (s // group),
+                                             s // group, axis=1)
+        return shard.reshape(-1), new_ef, gather_axes
 
     shards = emit_through_channels(
-        [slices[i] for i in range(slices.shape[0])], ctx,
+        [wire[i] for i in range(wire.shape[0])], ctx,
         lambda ch, x: ch.reduce_scatter(x).astype(jnp.float32))
     # (n_slices, S/group) -> flat local shard, ZeRO-1 layout
     flat_shard = jnp.stack(shards).reshape(-1)

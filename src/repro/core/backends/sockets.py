@@ -5,6 +5,7 @@ from __future__ import annotations
 
 import jax
 
+from repro.configs.base import CommConfig
 from repro.core.backends.base import (CommBackend, SyncContext, SyncResult,
                                       register)
 
@@ -12,7 +13,19 @@ from repro.core.backends.base import (CommBackend, SyncContext, SyncResult,
 @register("sockets")
 class SocketsBackend(CommBackend):
 
+    def needs_ef(self, comm: CommConfig) -> bool:
+        return False
+
+    def validate(self, comm: CommConfig) -> None:
+        if comm.compress != "none":
+            raise ValueError(
+                "sockets cannot honor wire compression "
+                f"(compress={comm.compress!r}): each tensor is psum'd "
+                "unpacked — there is no wire stage to compress; use a "
+                "hadronio-family mode")
+
     def sync(self, grads, ctx: SyncContext) -> SyncResult:
+        self.validate(ctx.comm)
         synced = jax.tree.map(lambda g: jax.lax.psum(g, ctx.flat_axes),
                               grads)
-        return SyncResult(synced, None, None, ctx.ef)
+        return SyncResult(synced, None, None, None)

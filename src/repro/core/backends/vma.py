@@ -7,8 +7,9 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from repro.configs.base import CommConfig
 from repro.core import aggregation as agg
-from repro.core import compress as comp
+from repro.core.backends import pipeline
 from repro.core.backends.base import (CommBackend, SyncContext, SyncResult,
                                       register)
 
@@ -16,14 +17,27 @@ from repro.core.backends.base import (CommBackend, SyncContext, SyncResult,
 @register("vma")
 class VmaBackend(CommBackend):
 
+    def validate(self, comm: CommConfig) -> None:
+        if comm.compress == "int8_ef":
+            raise ValueError(
+                "vma cannot honor compress='int8_ef': the libvma analogue "
+                "is one monolithic psum, and int8 summation needs the "
+                "gather + local-dequant exchange of the hadronio family")
+
+    def needs_ef(self, comm: CommConfig) -> bool:
+        return comm.compress == "bf16"
+
     def sync(self, grads, ctx: SyncContext) -> SyncResult:
+        self.validate(ctx.comm)
         plan = agg.make_plan(grads, ctx.comm, dtype=jnp.float32)
         flat = agg.pack(grads, plan)
         if ctx.comm.compress == "bf16":
-            wire, new_ef = comp.bf16_compress(flat[None], ctx.ef)
-            red = jax.lax.psum(wire[0],
-                               ctx.flat_axes).astype(jnp.float32)[None]
+            # pack stage over the ring-slice view (EF layout matches the
+            # global-plan state spec); the wire is still ONE psum
+            wire, new_ef, _ = pipeline.pack_wire(
+                agg.as_slices(flat, plan), ctx.ef, ctx.comm)
+            red = jax.lax.psum(wire, ctx.flat_axes).astype(jnp.float32)
             synced = agg.unpack(agg.from_slices(red, plan), plan, grads)
             return SyncResult(synced, None, plan, new_ef)
         red = jax.lax.psum(flat, ctx.flat_axes)
-        return SyncResult(agg.unpack(red, plan, grads), None, plan, ctx.ef)
+        return SyncResult(agg.unpack(red, plan, grads), None, plan, None)

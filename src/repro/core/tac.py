@@ -22,6 +22,9 @@ Modes (docs/COMM_BACKENDS.md):
   hadronio_overlap beyond-paper: DDP-style reverse-layer bucketing; each
                    bucket's collective depends only on its own leaves so
                    it can overlap the remaining backward compute.
+  hadronio_overlap_rs beyond-paper: bucketed ZeRO-1 — the same bucketing
+                   composed with per-bucket reduce-scatter and the
+                   flat-shard AdamW update (optim/flat.py).
 
 All manual modes run inside a partial-manual ``shard_map`` (manual over
 the DP axes, auto/GSPMD over the model axis) — see launch/steps.py.

@@ -18,12 +18,23 @@ tile HBM->VMEM->HBM. slice_elems is 512-aligned by the plan (aggregation
 from __future__ import annotations
 
 import functools
+import math
 
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 LANE_BLOCK = 8 * 128 * 4          # 4096 f32 = 16 KiB per tile per buffer
+
+
+def _block_for(slice_elems: int, block: int) -> int:
+    """Largest tile <= ``block`` that divides ``slice_elems`` exactly.
+    Slices are 512-aligned by the plan, so the gcd never drops below the
+    lane granularity for any 512-aligned slice length."""
+    blk = min(block, slice_elems)
+    if slice_elems % blk:
+        blk = math.gcd(slice_elems, blk)
+    return blk
 
 
 def _pack_kernel(flat_ref, ef_ref, wire_ref, new_ef_ref):
@@ -47,8 +58,7 @@ def pack_slices_kernel(flat: jax.Array, ef, n_slices: int,
     """flat: (n_slices * slice_elems,) f32. Returns (wire (n, S) of
     wire_dtype, new_ef (n, S) f32 or None)."""
     assert flat.shape == (n_slices * slice_elems,), flat.shape
-    blk = min(block, slice_elems)
-    assert slice_elems % blk == 0, (slice_elems, blk)
+    blk = _block_for(slice_elems, block)
     grid = (n_slices, slice_elems // blk)
     x2 = flat.reshape(n_slices, slice_elems)
     spec = pl.BlockSpec((1, blk), lambda i, j: (i, j))
@@ -85,8 +95,7 @@ def unpack_slices_kernel(wire: jax.Array, out_dtype=jnp.float32,
                          interpret: bool = False) -> jax.Array:
     """(n, S) wire -> (n * S,) of out_dtype (one fused cast+copy pass)."""
     n, s = wire.shape
-    blk = min(block, s)
-    assert s % blk == 0, (s, blk)
+    blk = _block_for(s, block)
     spec = pl.BlockSpec((1, blk), lambda i, j: (i, j))
     out = pl.pallas_call(
         _unpack_kernel, grid=(n, s // blk), in_specs=[spec], out_specs=spec,

@@ -5,10 +5,12 @@ checkpoint/store.py), so elasticity reduces to: build the new mesh, derive
 the new shardings from the same logical rules, restore, continue. The two
 things that must be re-derived on a scale change:
 
-* ``CommConfig``-dependent state — the TAC ``hadronio_rs`` mode keeps
-  *flat, ring-sharded* optimizer moments whose shard length depends on the
-  device count. ``reshard_tac_opt`` re-slices them for the new ring (the
-  global flat vector is an invariant).
+* ``CommConfig``-dependent state — the ZeRO-1 modes keep *flat,
+  ring-sharded* optimizer moments whose shard length depends on the
+  device count. The owning backend's ``reshard_flat_shards`` hook
+  re-slices them for the new ring (the global flat vector is an
+  invariant; the segment layout — ring slices vs overlap buckets — is
+  backend-owned).
 * data order — the pipeline is addressed by (step, global index), so a
   different host count reads the same global batch (DataConfig.host_*).
 
@@ -35,43 +37,39 @@ from repro.optim import adamw
 
 def reshard_tac_opt(flat_mu: np.ndarray, flat_nu: np.ndarray,
                     old_shards: int, new_shards: int, n_slices: int):
-    """Re-slice hadronio_rs flat moment shards for a new ring size.
+    """Re-slice hadronio_rs-style flat moment shards for a new ring size
+    (thin wrapper over :func:`repro.optim.flat.reshard_ring_segments`,
+    which owns the segment-major re-slice rule — the live restore path
+    goes through the backend's ``reshard_flat_shards`` hook).
 
     Saved checkpoints hold the *global* stacked shards (old_shards,
-    shard_len). The global flat layout is (n_slices, padded/n_slices)
-    sliced per-shard chunk-wise; rebuild it, then re-slice.
-    Returns (new_mu, new_nu) of shape (new_shards, new_shard_len).
-    """
-    def reslice(stacked: np.ndarray) -> np.ndarray:
-        old = stacked.reshape(old_shards, n_slices, -1)      # (O, n, c_o)
-        # global slice view: (n, slice_elems) with chunks in ring order
-        glob = np.stack([np.concatenate(
-            [old[i, s] for i in range(old_shards)]) for s in range(n_slices)])
-        assert glob.shape[1] % new_shards == 0
-        c_n = glob.shape[1] // new_shards
-        return np.stack([glob[:, i * c_n:(i + 1) * c_n].reshape(-1)
-                         for i in range(new_shards)])
-
-    return reslice(flat_mu), reslice(flat_nu)
+    shard_len); the global flat layout is n_slices equal segments.
+    Returns (new_mu, new_nu) of shape (new_shards, new_shard_len)."""
+    from repro.optim.flat import reshard_ring_segments
+    seg = [flat_mu.shape[1] * old_shards // n_slices] * n_slices
+    return (reshard_ring_segments(flat_mu, old_shards, new_shards, seg),
+            reshard_ring_segments(flat_nu, old_shards, new_shards, seg))
 
 
 def make_on_mismatch(run: RunConfig):
-    """Shape-mismatch resolver for elastic restores. Only the TAC
-    ``hadronio_rs`` mode has ring-sized state (flat moment shards + error
-    feedback); everything else restores shape-identically."""
-    if not get_backend(run.comm.mode).zero1 and run.comm.compress == "none":
+    """Shape-mismatch resolver for elastic restores. Ring-sized state is
+    backend-owned, so the re-slice rule is the backend's
+    ``reshard_flat_shards`` hook (zero1 flat moments); error-feedback
+    residuals are per-peer and only change shape via the ring size, so a
+    mismatch resets them to zero (one uncompensated step of truncation —
+    the EF telescoping restarts cleanly)."""
+    backend = get_backend(run.comm.mode)
+    if not backend.zero1 and run.comm.compress == "none":
         return None
-    from repro.core import aggregation as agg
-    from repro.models import api
-    plan = agg.make_plan(api.abstract(run.model), run.comm)
 
     def on_mismatch(name: str, arr: np.ndarray, ref) -> np.ndarray:
         want = tuple(ref.shape)
         if arr.ndim == 2 and len(want) == 2 and \
                 arr.size == int(np.prod(want)):
-            out, _ = reshard_tac_opt(arr, arr, arr.shape[0], want[0],
-                                     plan.n_slices)
-            return out
+            return backend.reshard_flat_shards(run, arr, want[0])
+        if arr.ndim == len(want) and arr.shape[1:] == want[1:]:
+            # leading ring dim changed on a per-peer residual: reset
+            return np.zeros(want, np.float32)
         raise ValueError(f"{name}: cannot reshard {arr.shape}->{want}")
 
     return on_mismatch

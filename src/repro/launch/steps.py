@@ -60,7 +60,10 @@ class TrainState(NamedTuple):
     params: PyTree
     opt: adamw.AdamState          # tree moments (gspmd/ddp) or flat shards (zero1)
     step: jax.Array
-    ef: Optional[jax.Array] = None   # error-feedback (TAC compression)
+    ef: Optional[PyTree] = None   # error-feedback (TAC compression): one
+    #                               array keyed to the global ring plan, or
+    #                               a per-bucket pytree (overlap modes) —
+    #                               every leaf carries a leading ring dim
 
 
 # ---------------------------------------------------------------------------
@@ -184,7 +187,8 @@ def init_tac_state(rng: jax.Array, run: RunConfig, n_shards: int,
                                           jax.tree.map(zeros, sds.opt.nu),
                                           jnp.zeros((), jnp.int32)),
                       step=jnp.zeros((), jnp.int32),
-                      ef=None if sds.ef is None else zeros(sds.ef))
+                      ef=None if sds.ef is None
+                      else jax.tree.map(zeros, sds.ef))
 
 
 def make_train_step_tac(run: RunConfig, mesh):
@@ -218,10 +222,14 @@ def make_train_step_tac(run: RunConfig, mesh):
         l, _aux, grads = _accumulate_grads(scaled_loss, state.params, batch,
                                            run.microbatches)
 
-        ef = None if state.ef is None else state.ef[0]   # local residual
+        # local residual: strip the leading ring dim from every EF leaf
+        # (one array for global-ring keying, a pytree for per-bucket)
+        ef = None if state.ef is None \
+            else jax.tree.map(lambda e: e[0], state.ef)
         res = tac.sync_grads(grads, comm, data_axis=data_axes,
                              pod_axis=pod_axis, ef=ef)
-        new_ef = None if res.ef is None else res.ef[None]
+        new_ef = None if res.ef is None \
+            else jax.tree.map(lambda e: e[None], res.ef)
 
         # loss epilogue AFTER the sync emission: overlap-style backends'
         # early-slice collectives precede it in the program
@@ -248,7 +256,8 @@ def make_train_step_tac(run: RunConfig, mesh):
         params=jax.tree.map(lambda _: replicated, state_sds.params),
         opt=opt_specs,
         step=replicated,
-        ef=None if state_sds.ef is None else batch_spec)
+        ef=None if state_sds.ef is None
+        else jax.tree.map(lambda _: batch_spec, state_sds.ef))
     batch_specs_fn = lambda b: jax.tree.map(lambda _: batch_spec, b)
 
     def step_fn(state: TrainState, batch: dict):
@@ -278,6 +287,7 @@ def make_train_step(run: RunConfig, mesh):
     """Dispatch on the registered backend's step family (the transparent
     boundary: callers never change, and no mode names appear here)."""
     backend = get_backend(run.comm.mode)
+    backend.validate(run.comm)
     if backend.manual:
         return make_train_step_tac(run, mesh)
     return make_train_step_gspmd(run, mesh)

@@ -220,7 +220,7 @@ def build_run(args) -> RunConfig:
                         seq_len=args.seq_len, global_batch=args.global_batch)
     comm = CommConfig(mode=args.mode, slice_bytes=args.slice_bytes,
                       hierarchical=not args.flat_collectives,
-                      compress=args.compress)
+                      compress=args.compress, pack=args.pack)
     return RunConfig(model=cfg, shape=shape, comm=comm,
                      lr=args.lr, total_steps=args.steps,
                      warmup_steps=max(args.steps // 10, 1),
@@ -240,7 +240,12 @@ def main() -> int:
     p.add_argument("--mode", default="hadronio",
                    choices=list(available_modes()))
     p.add_argument("--compress", default="none",
-                   choices=["none", "bf16", "int8_ef"])
+                   choices=list(CommConfig.COMPRESS_CODECS))
+    p.add_argument("--pack", default="jnp",
+                   choices=list(CommConfig.PACK_IMPLS),
+                   help="pack/cast/EF copy-path impl (pallas = fused "
+                        "ring_pack kernel; falls back to jnp off-TPU "
+                        "toolchains)")
     p.add_argument("--slice-bytes", type=int, default=4 * 1024 * 1024)
     p.add_argument("--flat-collectives", action="store_true")
     p.add_argument("--microbatches", type=int, default=1)

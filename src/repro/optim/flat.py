@@ -51,6 +51,33 @@ def decay_mask_traced(plan: agg.PackPlan) -> jax.Array:
     return mask
 
 
+def reshard_ring_segments(stacked: np.ndarray, old_shards: int,
+                          new_shards: int, seg_lens) -> np.ndarray:
+    """Re-slice ring-sharded flat state for a new ring size (elastic
+    restore). The global layout is segment-major: each segment (a ring
+    slice or an overlap bucket) of global length ``L`` is carved into
+    ``shards`` contiguous chunks in ring order, and each peer's row is
+    the concatenation of its chunk of every segment. ``stacked``:
+    (old_shards, sum(L)/old_shards). Returns (new_shards, ...)."""
+    seg_lens = [int(L) for L in seg_lens]
+    assert stacked.shape == (old_shards, sum(seg_lens) // old_shards), \
+        (stacked.shape, old_shards, sum(seg_lens))
+    for L in seg_lens:
+        assert L % old_shards == 0 and L % new_shards == 0, \
+            (L, old_shards, new_shards)
+    # rebuild each segment's global vector from the old chunks
+    globs, off = [], 0
+    for L in seg_lens:
+        c = L // old_shards
+        globs.append(np.concatenate([stacked[i, off:off + c]
+                                     for i in range(old_shards)]))
+        off += c
+    return np.stack([
+        np.concatenate([g[j * (len(g) // new_shards):
+                          (j + 1) * (len(g) // new_shards)] for g in globs])
+        for j in range(new_shards)])
+
+
 def flat_adamw_update(flat_p, flat_g, mu, nu, count, decay_mask,
                       run: RunConfig):
     """AdamW on flat vectors. All f32. Returns (new_p, new_mu, new_nu)."""

@@ -1,0 +1,298 @@
+"""Cross-backend conformance suite.
+
+The JIB-benchmark lesson (Nothaas et al., arXiv:1910.02245): transport
+variants are only trustworthy when ONE harness exercises every
+implementation identically. Every registered comm backend runs through
+the same fixture matrix here:
+
+* **sync parity** — on a 1-peer ring psum == identity, so the
+  reconstructed synced gradients must equal the inputs within the wire
+  codec's dtype tolerance, for every supported ``(compress, pack)``
+  combination; unsupported combinations must be REJECTED by
+  ``validate()`` with a clear error (never silently ignored).
+* **state round-trip** — ``state_specs`` / ``init`` / ``apply_update``
+  agree: a jitted train step returns a state matching the abstract specs
+  leaf-for-leaf (structure, shape, dtype), for compress off AND on.
+* **gspmd parity** — every manual backend's two-step loss equals the
+  gspmd reference within tolerance (the paper's transparency claim).
+* **bucket independence** — in BOTH overlap modes, each bucket's
+  collective depends only on its own leaves (+ its own per-bucket error
+  feedback): a jaxpr-level dependency check, for every codec.
+
+The matrix is generated from ``available_modes()`` and indexed into
+``SUPPORTED_COMPRESS`` at collection time — registering a backend
+without declaring its conformance expectations fails collection.
+
+Set ``REPRO_CONFORMANCE_PACK=jnp|pallas`` to pin the pack-stage
+implementation (CI runs the jnp fallback explicitly).
+"""
+import functools
+import os
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro import compat
+from repro.configs.base import CommConfig, RunConfig, ShapeConfig
+from repro.configs.registry import get_config
+from repro.core import tac
+from repro.core.backends import (SyncContext, available_modes, get_backend)
+from repro.core.backends import hadronio_overlap as ho
+from repro.core.backends import hadronio_overlap_rs as hors
+from repro.launch import steps as steps_mod
+from repro.launch.mesh import make_mesh
+
+COMPRESS = ("none", "bf16", "int8_ef")
+_PACK_ENV = os.environ.get("REPRO_CONFORMANCE_PACK")
+PACKS = (_PACK_ENV,) if _PACK_ENV else ("jnp", "pallas")
+assert all(p in ("jnp", "pallas") for p in PACKS), _PACK_ENV
+
+# Which codecs each registered mode must honor; everything not listed
+# must be rejected by validate(). EVERY registered mode needs an entry —
+# the matrix below indexes this dict with each name in available_modes()
+# at collection time, so a backend registered without conformance
+# coverage fails before a single test runs.
+SUPPORTED_COMPRESS = {
+    "gspmd": ("none",),
+    "sockets": ("none",),
+    "vma": ("none", "bf16"),
+    "hadronio": ("none", "bf16", "int8_ef"),
+    "hadronio_rs": ("none", "bf16", "int8_ef"),
+    "hadronio_overlap": ("none", "bf16", "int8_ef"),
+    "hadronio_overlap_rs": ("none", "bf16", "int8_ef"),
+}
+
+SYNC_CASES = [(m, c, p)
+              for m in available_modes()
+              for c in SUPPORTED_COMPRESS[m]      # KeyError => no coverage
+              for p in PACKS]
+REJECT_CASES = [(m, c)
+                for m in available_modes()
+                for c in COMPRESS if c not in SUPPORTED_COMPRESS[m]]
+STEP_CASES = [(m, c) for m in available_modes()
+              for c in SUPPORTED_COMPRESS[m]]
+BUCKET_MODES = ("hadronio_overlap", "hadronio_overlap_rs")
+
+# int8 quantizes per slice/bucket against the group amax; tolerance is
+# absolute against the tree's amax (~4 for unit normals)
+TOL = {"none": dict(rtol=1e-6, atol=1e-6),
+       "bf16": dict(rtol=1e-2, atol=1e-3),
+       "int8_ef": dict(rtol=0.0, atol=0.05)}
+
+
+def test_matrix_covers_registry_exactly():
+    """No registered mode without coverage, no stale matrix entries."""
+    assert set(SUPPORTED_COMPRESS) == set(available_modes())
+
+
+def _grad_tree():
+    """Mixed-shape synthetic gradients: a scalar-ish 1-D leaf, odd dims,
+    and one 3000-element leaf that is BIGGER than a 4 KiB bucket (12 KB
+    payload -> its own bucket)."""
+    ks = jax.random.split(jax.random.PRNGKey(7), 4)
+    return {"a": jax.random.normal(ks[0], (33, 7)),
+            "b": {"c": jax.random.normal(ks[1], (129,)),
+                  "d": jax.random.normal(ks[2], (2, 3, 5))},
+            "e": jax.random.normal(ks[3], (3000,))}
+
+
+def _comm(mode, compress="none", pack="jnp", **kw):
+    kw.setdefault("slice_bytes", 4096)
+    kw.setdefault("hierarchical", False)
+    return CommConfig(mode=mode, compress=compress, pack=pack, **kw)
+
+
+@pytest.mark.parametrize("mode,compress,pack", SYNC_CASES)
+def test_sync_parity(mode, compress, pack):
+    """Identity on a 1-peer ring, reconstructed through the backend's own
+    gathered_grads (exercises the zero1 gather epilogues too)."""
+    backend = get_backend(mode)
+    if not backend.manual:
+        pytest.skip("no manual sync; covered by the step round-trip")
+    comm = _comm(mode, compress, pack)
+    backend.validate(comm)
+    grads = _grad_tree()
+    mesh = make_mesh((1,), ("data",))
+
+    def body(g):
+        r = tac.sync_grads(g, comm, data_axis=("data",))
+        return backend.gathered_grads(r, g)
+
+    out = jax.jit(compat.shard_map(body, mesh=mesh, in_specs=(P(),),
+                                   out_specs=P()))(grads)
+    assert jax.tree.structure(out) == jax.tree.structure(grads)
+    for a, b in zip(jax.tree.leaves(out), jax.tree.leaves(grads)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   **TOL[compress])
+
+
+@pytest.mark.parametrize("mode,compress", REJECT_CASES)
+def test_unsupported_codec_rejected(mode, compress):
+    """A codec the strategy cannot honor must raise at validate() —
+    silently ignoring compression is a conformance failure."""
+    comm = _comm(mode, compress)
+    with pytest.raises(ValueError, match="compress"):
+        get_backend(mode).validate(comm)
+
+
+# ---------------------------------------------------------------------------
+# Step-level round-trip + gspmd parity (one cached 2-step run per case)
+# ---------------------------------------------------------------------------
+
+
+@functools.lru_cache(maxsize=None)
+def _two_step(mode, compress):
+    """(final_state, abstract_specs, [loss1, loss2]) for a jitted 2-step
+    run of the given mode on a 1-device mesh."""
+    cfg = get_config("qwen2-0.5b-reduced")
+    run = RunConfig(model=cfg, shape=ShapeConfig("t", "train", 16, 4),
+                    comm=_comm(mode, compress, slice_bytes=16 * 1024))
+    mesh = make_mesh((1,), ("data",))
+    with compat.set_mesh(mesh):
+        step_fn, state_sh, _ = steps_mod.make_train_step(run, mesh)
+        if get_backend(mode).manual:
+            sds = steps_mod.abstract_tac_state(run, 1)
+            state = steps_mod.init_tac_state(jax.random.PRNGKey(0), run, 1)
+        else:
+            sds = steps_mod.abstract_train_state(run)
+            state = steps_mod.init_train_state(jax.random.PRNGKey(0), run)
+        batch = {"tokens": jnp.ones((4, 16), jnp.int32),
+                 "labels": jnp.ones((4, 16), jnp.int32)}
+        jf = jax.jit(step_fn)
+        losses = []
+        for _ in range(2):
+            state, m = jf(state, batch)
+            losses.append(float(m["loss"]))
+    return state, sds, losses
+
+
+@pytest.mark.parametrize("mode,compress", STEP_CASES)
+def test_state_roundtrip(mode, compress):
+    """The state a step RETURNS matches the state_specs layout the
+    backend DECLARED — structure, shape, and dtype, leaf for leaf (error
+    feedback included when the codec carries one)."""
+    state, sds, losses = _two_step(mode, compress)
+    assert jax.tree.structure(state) == jax.tree.structure(sds)
+    paths_out = jax.tree_util.tree_flatten_with_path(state)[0]
+    paths_sds = jax.tree_util.tree_flatten_with_path(sds)[0]
+    for (pa, a), (pb, b) in zip(paths_out, paths_sds):
+        assert pa == pb
+        assert tuple(a.shape) == tuple(b.shape), (pa, a.shape, b.shape)
+        assert a.dtype == b.dtype, (pa, a.dtype, b.dtype)
+    assert all(np.isfinite(l) for l in losses), losses
+    if get_backend(mode).needs_ef(CommConfig(mode=mode, compress=compress,
+                                             hierarchical=False)):
+        assert state.ef is not None
+    else:
+        assert state.ef is None
+
+
+@pytest.mark.parametrize("mode", [m for m in available_modes()
+                                  if get_backend(m).manual])
+def test_gspmd_parity(mode):
+    """Two-step loss trajectory equals the gspmd reference (transparency:
+    the synchronization strategy must not change the math)."""
+    _, _, ref = _two_step("gspmd", "none")
+    _, _, got = _two_step(mode, "none")
+    np.testing.assert_allclose(got, ref, rtol=0, atol=2e-3)
+
+
+# ---------------------------------------------------------------------------
+# Bucket independence (jaxpr-level): each bucket's collective depends
+# only on its own leaves (+ its own per-bucket EF residual)
+# ---------------------------------------------------------------------------
+
+
+def _collective_deps(mode, compress, pack):
+    """Trace the backend's sync inside the shard_map and return
+    (plan, [(primitive_name, dep_label_set)]) for every collective eqn.
+    Labels: ('leaf', i) for gradient leaf i, ('ef', b) for bucket b's
+    residual."""
+    comm = _comm(mode, compress, pack, channels=64, slice_bytes=1024,
+                 ring_capacity_bytes=1 << 20)
+    grads = _grad_tree()
+    leaves, treedef = jax.tree.flatten(grads)
+    backend = get_backend(mode)
+    plan = ho.make_bucket_plan(grads, comm) if mode == "hadronio_overlap" \
+        else hors.rs_bucket_plan(grads, comm, 1)
+    n_ef = plan.n_buckets if compress != "none" else 0
+    mesh = make_mesh((1,), ("data",))
+
+    def body(*args):
+        g = jax.tree.unflatten(treedef, list(args[:len(leaves)]))
+        efs = tuple(args[len(leaves):]) or None
+        ctx = SyncContext.resolve(comm, ("data",), None, efs)
+        r = backend.sync(g, ctx)
+        outs = jax.tree.leaves(r.grads) if r.grads is not None \
+            else [r.flat_shard]
+        return tuple(outs)
+
+    args = leaves + [jnp.zeros((p,), jnp.float32) for p in plan.padded[:n_ef]]
+    n_out = len(leaves) if mode == "hadronio_overlap" else 1
+    f = compat.shard_map(body, mesh=mesh, in_specs=(P(),) * len(args),
+                         out_specs=(P(),) * n_out)
+    jaxpr = jax.make_jaxpr(f)(*args)
+
+    inner = None
+    for eqn in jaxpr.jaxpr.eqns:
+        if eqn.primitive.name == "shard_map":
+            inner = eqn.params["jaxpr"]
+            break
+    assert inner is not None, "no shard_map eqn found"
+
+    Literal = jax.core.Literal
+    deps = {}
+    for i, v in enumerate(inner.invars):
+        deps[v] = frozenset([("leaf", i) if i < len(leaves)
+                             else ("ef", i - len(leaves))])
+    for v in inner.constvars:
+        deps[v] = frozenset()
+
+    def var_deps(a):
+        return frozenset() if isinstance(a, Literal) \
+            else deps.get(a, frozenset())
+
+    collectives = []
+    for eqn in inner.eqns:
+        d = frozenset().union(*[var_deps(a) for a in eqn.invars]) \
+            if eqn.invars else frozenset()
+        name = eqn.primitive.name
+        if any(k in name for k in ("psum", "all_gather", "all_to_all",
+                                   "ppermute", "reduce_scatter")):
+            collectives.append((name, d))
+        for ov in eqn.outvars:
+            deps[ov] = d
+    return plan, collectives
+
+
+@pytest.mark.parametrize("mode", BUCKET_MODES)
+@pytest.mark.parametrize("compress", COMPRESS)
+@pytest.mark.parametrize("pack", PACKS)
+def test_bucket_collectives_depend_only_on_own_leaves(mode, compress, pack):
+    """The overlap property, stated on the dataflow graph itself: with
+    enough channels, every collective's transitive input set is exactly
+    one bucket's leaves (plus that bucket's own EF residual) — so the
+    latency-hiding scheduler may start it as soon as those leaves exist,
+    in BOTH the all-reduce and the reduce-scatter (ZeRO-1) modes, with
+    and without wire compression, for both pack implementations."""
+    plan, collectives = _collective_deps(mode, compress, pack)
+    assert plan.n_buckets >= 3          # the fixture really is multi-bucket
+    assert any(len(b) == 1 for b in plan.buckets)   # oversized-leaf bucket
+    assert collectives, "sync emitted no collectives"
+    buckets_hit = set()
+    for name, d in collectives:
+        leaf_deps = {i for kind, i in d if kind == "leaf"}
+        ef_deps = {b for kind, b in d if kind == "ef"}
+        owners = [b for b in range(plan.n_buckets)
+                  if leaf_deps == set(plan.buckets[b])]
+        assert len(owners) == 1, \
+            (f"{name}: leaf deps {sorted(leaf_deps)} are not exactly one "
+             f"bucket of {plan.buckets}")
+        assert ef_deps <= {owners[0]}, \
+            (f"{name}: bucket {owners[0]} collective reads EF of "
+             f"buckets {sorted(ef_deps)}")
+        buckets_hit.add(owners[0])
+    assert buckets_hit == set(range(plan.n_buckets))

@@ -26,7 +26,7 @@ from repro.launch import steps as steps_mod
 from repro.launch.mesh import make_mesh
 
 ALL_MODES = ("gspmd", "sockets", "vma", "hadronio", "hadronio_rs",
-             "hadronio_overlap")
+             "hadronio_overlap", "hadronio_overlap_rs")
 
 
 # ---------------------------------------------------------------------------
@@ -72,6 +72,7 @@ def test_capability_flags():
     for m in ALL_MODES[1:]:
         assert get_backend(m).manual, m
     assert get_backend("hadronio_rs").zero1
+    assert get_backend("hadronio_overlap_rs").zero1
     for m in ("sockets", "vma", "hadronio", "hadronio_overlap"):
         assert not get_backend(m).zero1, m
 
@@ -84,11 +85,37 @@ def test_scatter_group_size():
     assert scatter_group_size(8, 1, hier) == 8
 
 
-def test_overlap_rejects_compression():
-    comm = CommConfig(mode="hadronio_overlap", compress="bf16",
-                      hierarchical=False)
-    with pytest.raises(ValueError, match="compression"):
-        get_backend("hadronio_overlap").validate(comm)
+def test_overlap_supports_compression():
+    """Per-bucket EF keying (ISSUE 2): the overlap modes now accept wire
+    compression — validate() passes and the backend declares EF state."""
+    for mode in ("hadronio_overlap", "hadronio_overlap_rs"):
+        for compress in ("bf16", "int8_ef"):
+            comm = CommConfig(mode=mode, compress=compress,
+                              hierarchical=False)
+            get_backend(mode).validate(comm)     # must not raise
+            assert get_backend(mode).needs_ef(comm)
+
+
+def test_comm_config_rejects_bad_values():
+    """Clear errors for the enum/range fields (ISSUE 2 satellite)."""
+    with pytest.raises(ValueError, match="channels"):
+        CommConfig(mode="hadronio", channels=0, hierarchical=False)
+    with pytest.raises(ValueError, match="channels"):
+        CommConfig(mode="hadronio", channels=-3, hierarchical=False)
+    with pytest.raises(ValueError, match="compress"):
+        CommConfig(mode="hadronio", compress="fp4", hierarchical=False)
+    with pytest.raises(ValueError, match="pack"):
+        CommConfig(mode="hadronio", pack="cuda", hierarchical=False)
+
+
+def test_unsupported_compress_rejected_at_validate():
+    """Strategies that cannot honor a codec say so instead of silently
+    ignoring it."""
+    for mode, compress in [("sockets", "bf16"), ("sockets", "int8_ef"),
+                           ("vma", "int8_ef"), ("gspmd", "bf16")]:
+        comm = CommConfig(mode=mode, compress=compress, hierarchical=False)
+        with pytest.raises(ValueError, match="compress"):
+            get_backend(mode).validate(comm)
 
 
 def test_overlap_bucketing():
@@ -118,7 +145,8 @@ def _model_grads():
 
 
 @pytest.mark.parametrize("mode", ["sockets", "vma", "hadronio",
-                                  "hadronio_overlap", "hadronio_rs"])
+                                  "hadronio_overlap", "hadronio_rs",
+                                  "hadronio_overlap_rs"])
 def test_cross_backend_parity_small_model(mode):
     grads = _model_grads()
     comm = CommConfig(mode=mode, slice_bytes=64 * 1024, hierarchical=False)
@@ -126,10 +154,8 @@ def test_cross_backend_parity_small_model(mode):
 
     def body(g):
         r = tac.sync_grads(g, comm, data_axis=("data",))
-        if r.grads is None:          # zero1: reconstruct via the epilogue
-            return tac.gather_updated(r.flat_shard, r.plan, g, comm,
-                                      gather_axes=r.gather_axes)
-        return r.grads
+        # zero1: reconstruct via the backend's own gather epilogue
+        return get_backend(mode).gathered_grads(r, g)
 
     out = jax.jit(compat.shard_map(body, mesh=mesh, in_specs=(P(),),
                                    out_specs=P()))(grads)
@@ -235,3 +261,93 @@ def test_hadronio_op_count_matches_plan():
     text = _lower_tac_step("hadronio", 16 * 1024)
     n_ar = len(_AR_RE.findall(text))
     assert n_ar == plan.n_slices + 1, (n_ar, plan.n_slices)
+
+
+def test_overlap_rs_emits_one_reduce_scatter_per_bucket():
+    """The bucketed ZeRO-1 mode: one reduce-scatter per bucket in the
+    lowered step (the overlap property on the scatter path), ahead of
+    the loss epilogue's all-reduce."""
+    cfg = get_config("qwen2-0.5b-reduced")
+    from repro.models import api
+    from repro.core.backends.hadronio_overlap_rs import rs_bucket_plan
+    slice_bytes = 16 * 1024
+    comm = CommConfig(mode="hadronio_overlap_rs", slice_bytes=slice_bytes,
+                      hierarchical=False)
+    plan = rs_bucket_plan(api.abstract(cfg), comm, 1)
+    text = _lower_tac_step("hadronio_overlap_rs", slice_bytes)
+    n_rs = text.count("stablehlo.reduce_scatter")
+    assert n_rs == plan.n_buckets, (n_rs, plan.n_buckets)
+
+
+# ---------------------------------------------------------------------------
+# The pack stage (comm.pack): pallas fused kernel vs jnp reference
+# ---------------------------------------------------------------------------
+
+
+def _pack_comm(compress, pack):
+    return CommConfig(mode="hadronio", compress=compress, pack=pack,
+                      hierarchical=False)
+
+
+def test_pack_stage_identical_wire_bytes(np_rng):
+    """comm.pack='pallas' and 'jnp' must produce bit-identical wire
+    bytes (and residuals): the fused kernel is a copy-path optimization,
+    never a numerics change."""
+    from repro.core.backends import pipeline
+    slices = jnp.asarray(np_rng.normal(size=(3, 1536)), jnp.float32)
+    ef = jnp.asarray(np_rng.normal(size=(3, 1536)) * 0.01, jnp.float32)
+    for compress in ("none", "bf16"):
+        outs = {}
+        for pack in ("jnp", "pallas"):
+            e = ef if compress == "bf16" else None
+            wire, new_ef, scale = pipeline.pack_wire(
+                slices, e, _pack_comm(compress, pack))
+            assert scale is None
+            outs[pack] = (wire, new_ef)
+        wj, ej = outs["jnp"]
+        wp, ep = outs["pallas"]
+        assert wj.dtype == wp.dtype
+        np.testing.assert_array_equal(
+            np.asarray(wj).view(np.uint8), np.asarray(wp).view(np.uint8))
+        if compress == "bf16":
+            np.testing.assert_array_equal(np.asarray(ej), np.asarray(ep))
+
+
+def test_pack_stage_int8_always_jnp(np_rng):
+    """int8 needs an amax reduction the kernel does not fuse: both pack
+    settings take the identical jnp path."""
+    from repro.core.backends import pipeline
+    slices = jnp.asarray(np_rng.normal(size=(2, 512)), jnp.float32)
+    q1, e1, s1 = pipeline.pack_wire(slices, None, _pack_comm("int8_ef",
+                                                             "jnp"))
+    q2, e2, s2 = pipeline.pack_wire(slices, None, _pack_comm("int8_ef",
+                                                             "pallas"))
+    np.testing.assert_array_equal(np.asarray(q1), np.asarray(q2))
+    np.testing.assert_array_equal(np.asarray(s1), np.asarray(s2))
+    np.testing.assert_array_equal(np.asarray(e1), np.asarray(e2))
+
+
+def test_pack_falls_back_without_pallas(monkeypatch):
+    """comm.pack='pallas' in a pallas-less environment silently takes
+    the jnp path (the compat fallback), with identical results."""
+    from repro.core.backends import pipeline
+    monkeypatch.setattr(compat, "pallas_available", lambda: False)
+    assert pipeline.pack_impl(_pack_comm("bf16", "pallas")) == "jnp"
+    assert pipeline.pack_impl(_pack_comm("bf16", "jnp")) == "jnp"
+
+
+# ---------------------------------------------------------------------------
+# Channel-count autotune (benchmarks/latency.py, ROADMAP item)
+# ---------------------------------------------------------------------------
+
+
+def test_channel_autotune_smoke():
+    """The sweep runs on the live mesh and returns a channel count from
+    the swept set, plus the recommended-default row for the CSV."""
+    from benchmarks.latency import autotune_channels
+    best, rows = autotune_channels(msg_size=1024, channels=(1, 2), iters=1)
+    assert best in (1, 2)
+    rec = [r for r in rows if r.metric == "recommended_channels"]
+    assert len(rec) == 1 and rec[0].value == best
+    assert CommConfig(mode="hadronio", channels=best,
+                      hierarchical=False).channels == best

@@ -31,6 +31,25 @@ def test_pack_slices(n, s, wire, np_rng):
     rel_close(ops.unpack_slices(w1), ref.unpack_slices(w2), 0, 0)
 
 
+@pytest.mark.parametrize("n,s", [(3, 4608), (5, 1536), (7, 2560),
+                                 (1, 512 * 11)])
+@pytest.mark.parametrize("wire", ["bfloat16", "float32"])
+def test_pack_slices_odd_alignment(n, s, wire, np_rng):
+    """Odd slice counts and 512-aligned-but-not-LANE_BLOCK-divisible
+    slice lengths (the gcd tiling path): pallas (interpret on CPU) must
+    match the jnp oracle bit-for-bit."""
+    assert s % (8 * 128 * 4) != 0        # really exercises the gcd path
+    flat = jnp.asarray(np_rng.normal(size=(n * s,)), jnp.float32)
+    ef = jnp.asarray(np_rng.normal(size=(n, s)) * 0.01, jnp.float32)
+    w1, e1 = ops.pack_slices(flat, ef, n_slices=n, slice_elems=s,
+                             wire_dtype=wire)
+    w2, e2 = ref.pack_slices(flat, ef, n_slices=n, slice_elems=s,
+                             wire_dtype=wire)
+    rel_close(w1, w2, 0, 0)
+    rel_close(e1, e2, 0, 0)
+    rel_close(ops.unpack_slices(w1), ref.unpack_slices(w2), 0, 0)
+
+
 def test_pack_slices_no_ef(np_rng):
     flat = jnp.asarray(np_rng.normal(size=(2 * 512,)), jnp.float32)
     w1, e1 = ops.pack_slices(flat, None, n_slices=2, slice_elems=512,
