@@ -28,8 +28,10 @@ import time
 from typing import Callable, Iterable
 
 import jax
+import jax.numpy as jnp
 import numpy as np
 
+from repro.core.ring_buffer import plan_slices
 from repro.launch import hlo_analysis as hlo
 
 N_DEVICES = 8     # virtual host devices for measured numbers
@@ -77,6 +79,18 @@ def write_rows(rows: Iterable[Row], path: str | None):
         with open(path, "w") as f:
             f.write(text)
     return text
+
+
+def slice_view(flat, comm):
+    """Shared prologue of the slice benchmarks: zero-pad a flat f32
+    payload to the ring-buffer plan and view it as (n_slices,
+    slice_elems). Returns (slices, plan)."""
+    sp = plan_slices(flat.shape[0] * 4, comm)
+    elems = sp.slice_bytes // 4
+    pad = sp.n_slices * elems - flat.shape[0]
+    if pad:
+        flat = jnp.pad(flat, (0, pad))
+    return flat.reshape(sp.n_slices, elems), sp
 
 
 def timeit(fn: Callable[[], object], *, warmup: int = 2, iters: int = 10

@@ -19,13 +19,18 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import PartitionSpec as P
 
-from benchmarks.common import Row, block, derived_collective_time, timeit
+from benchmarks.common import (Row, block, derived_collective_time,
+                               slice_view, timeit)
 from repro import compat
+from repro.configs.base import CommConfig
+from repro.core.backends import pipeline
+from repro.core.backends.base import SyncContext
 from repro.launch import hlo_analysis as hlo
 from repro.launch.mesh import make_mesh
 
 MSG_SIZES = [16, 1024, 64 * 1024]
 CHANNELS = [1, 2, 4, 8, 16]
+SLICE_SIZES = [16 * 1024, 64 * 1024, 256 * 1024, 1024 * 1024]
 
 
 def _pingpong_fn(mesh, n_channels: int, msg_elems: int, n_dev: int):
@@ -47,32 +52,35 @@ def _pingpong_fn(mesh, n_channels: int, msg_elems: int, n_dev: int):
     return jax.jit(f)
 
 
-def recommend_channels(rtt_by_channels: dict[int, float],
-                       msg_size: int) -> tuple[int, list[Row]]:
+def recommend_channels(rtt_by_channels: dict[int, float], msg_size: int,
+                       mode: str = "hadronio") -> tuple[int, list[Row]]:
     """Pick the channel count maximizing aggregate round-trip throughput
     from measured (channels -> RTT seconds) points — the paper's Fig. 3
     trade-off: more connections overlap more, but degrade per-channel
     latency. Returns (best, rows) with one ``recommended_channels`` CSV
-    row plus the derived per-point throughputs."""
+    row plus the derived per-point throughputs. ``mode`` labels the rows
+    (sweeps over the overlap modes stay distinguishable in the CSV)."""
     rows, best, best_tput = [], None, -1.0
     for ch, t in sorted(rtt_by_channels.items()):
         tput = ch * msg_size / max(t, 1e-12)
-        rows.append(Row("latency", "autotune", "hadronio", msg_size, ch,
+        rows.append(Row("latency", "autotune", mode, msg_size, ch,
                         "sweep_throughput", tput / 1e6, "MB/s", "derived"))
         if tput > best_tput:
             best_tput, best = tput, ch
-    rows.append(Row("latency", "autotune", "hadronio", msg_size, best,
+    rows.append(Row("latency", "autotune", mode, msg_size, best,
                     "recommended_channels", best, "channels", "derived"))
     return best, rows
 
 
 def autotune_channels(mesh=None, *, msg_size: int = 64 * 1024,
-                      channels=CHANNELS, iters: int = 10):
+                      channels=CHANNELS, iters: int = 10,
+                      mode: str = "hadronio"):
     """Channel-count autotune (ROADMAP item): sweep ``comm.channels``
     over the ping-pong microbenchmark ON THIS MESH and pick a per-mesh
     default. Returns ``(best_channels, rows)``; feed ``best_channels``
     into ``CommConfig(channels=...)``. ``run()`` derives the same
-    recommendation from its own sweep without re-measuring."""
+    recommendation from its own sweep without re-measuring. ``mode`` is
+    the row label only (the ping-pong primitive is mode-agnostic)."""
     if mesh is None:
         n = len(jax.devices())
         mesh = make_mesh((n,), ("data",))
@@ -85,9 +93,78 @@ def autotune_channels(mesh=None, *, msg_size: int = 64 * 1024,
         fn = _pingpong_fn(mesh, ch, elems, n_dev)
         t = timeit(lambda: block(fn(*xs)), warmup=1, iters=iters)
         rtts[ch] = t
-        rows.append(Row("latency", "autotune", "hadronio", msg_size, ch,
+        rows.append(Row("latency", "autotune", mode, msg_size, ch,
                         "sweep_rtt", t * 1e6, "us", "measured"))
-    best, rec_rows = recommend_channels(rtts, msg_size)
+    best, rec_rows = recommend_channels(rtts, msg_size, mode)
+    return best, rows + rec_rows
+
+
+# ---------------------------------------------------------------------------
+# Slice-size autotune (the ROADMAP's open bucket-granularity sweep)
+# ---------------------------------------------------------------------------
+
+
+def _slice_exchange_fn(mesh, comm: CommConfig, payload_elems: int):
+    """One jitted gradient exchange of ``payload_elems`` f32 through the
+    LIVE wire pipeline (pack stage -> channel schedule at the configured
+    aggregate granularity -> unpack stage)."""
+
+    def body(x):
+        ctx = SyncContext.resolve(comm, ("data",), None)
+        sl, _ = slice_view(x, comm)
+        red, _ = pipeline.reduce_slices(sl, ctx)
+        return red.reshape(-1)[:payload_elems]
+
+    f = compat.shard_map(body, mesh=mesh, in_specs=(P(),), out_specs=P(),
+                         check_vma=False)
+    return jax.jit(f)
+
+
+def recommend_slice_bytes(goodput_by_size: dict[int, float],
+                          mode: str = "hadronio",
+                          channels: int = 4) -> tuple[int, list[Row]]:
+    """Pick the slice granularity maximizing goodput from already-measured
+    (slice_bytes -> bytes/s) points — no re-measurement. Returns (best,
+    rows) with the per-mesh ``recommended_slice_bytes`` default row, the
+    granularity analogue of ``recommend_channels``."""
+    best = max(sorted(goodput_by_size), key=goodput_by_size.get)
+    row = Row("latency", "autotune", mode, best, channels,
+              "recommended_slice_bytes", best, "bytes", "derived")
+    return best, [row]
+
+
+def autotune_slice_bytes(mesh=None, *, payload_bytes: int = 4 * 1024 * 1024,
+                         slice_sizes=SLICE_SIZES, channels: int = 4,
+                         aggregate: str = "slice", mode: str = "hadronio",
+                         iters: int = 10):
+    """Slice/bucket-granularity autotune (ROADMAP follow-up: the channel
+    sweep existed, the ``comm.slice_bytes`` sweep did not): exchange a
+    fixed payload through the live wire pipeline once per candidate
+    granularity ON THIS MESH, and pick the slice size maximizing goodput
+    — the paper's §V-B trade-off (small slices pay per-send overhead,
+    huge slices forfeit overlap). Returns ``(best_slice_bytes, rows)``;
+    feed the result into ``CommConfig(slice_bytes=...)``. The
+    ``recommended_slice_bytes`` row is derived from the sweep without
+    re-measuring; ``aggregate`` selects the flush granularity under test
+    and ``mode`` labels the rows."""
+    if mesh is None:
+        n = len(jax.devices())
+        mesh = make_mesh((n,), ("data",))
+    payload_elems = max(1, payload_bytes // 4)
+    rows, goodput = [], {}
+    for sb in slice_sizes:
+        comm = CommConfig(mode=mode, slice_bytes=sb, channels=channels,
+                          aggregate=aggregate, hierarchical=False,
+                          ring_capacity_bytes=max(64 * sb,
+                                                  2 * payload_bytes))
+        fn = _slice_exchange_fn(mesh, comm, payload_elems)
+        x = jnp.ones((payload_elems,), jnp.float32)
+        t = timeit(lambda: block(fn(x)), warmup=1, iters=iters)
+        goodput[sb] = payload_bytes / max(t, 1e-12)
+        rows.append(Row("latency", "autotune", mode, sb, channels,
+                        "sweep_slice_goodput", goodput[sb] / 1e6, "MB/s",
+                        "measured"))
+    best, rec_rows = recommend_slice_bytes(goodput, mode, channels)
     return best, rows + rec_rows
 
 
@@ -125,4 +202,7 @@ def run(mesh=None, *, msg_sizes=MSG_SIZES, channels=CHANNELS,
     # derived from the sweep just measured — no re-measurement
     _, rec_rows = recommend_channels(rtts_at_max, max(msg_sizes))
     rows.extend(rec_rows)
+    # per-mesh recommended comm.slice_bytes default (the granularity sweep)
+    _, sb_rows = autotune_slice_bytes(mesh, iters=max(1, iters // 2))
+    rows.extend(sb_rows)
     return rows

@@ -7,9 +7,14 @@ TPU reading: per channel, a stream of ``flush_interval`` messages is
 either sent one collective per message (mode=sockets — the pre-fix
 hadroNIO loop of §III-C) or aggregated into ring-buffer slices with one
 collective per slice (mode=hadronio — the gathering write). mode=vma
-fuses the whole stream into a single monolithic collective. The measured
-axis is bytes moved per wall-clock second across channels; derived
-numbers give the HLO op count — the paper's "number of send calls".
+fuses the whole stream into a single monolithic collective.
+mode=hadronio_agg sweeps the NEW ``comm.aggregate="channel"`` axis: the
+stream's slices are coalesced into ONE wire flush per connection (the
+paper's full gathering write — §V-B's one large buffer handed to UCX per
+connection), routed through the live pipeline (pack stage -> coalesced
+flush -> unpack stage). The measured axis is bytes moved per wall-clock
+second across channels; derived numbers give the HLO op count — the
+paper's "number of send calls".
 """
 from __future__ import annotations
 
@@ -18,10 +23,12 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import PartitionSpec as P
 
-from benchmarks.common import Row, block, derived_collective_time, timeit
+from benchmarks.common import (Row, block, derived_collective_time,
+                               slice_view, timeit)
 from repro import compat
 from repro.configs.base import CommConfig
-from repro.core.ring_buffer import plan_slices
+from repro.core.backends import pipeline
+from repro.core.backends.base import SyncContext
 from repro.launch import hlo_analysis as hlo
 from repro.launch.mesh import make_mesh
 
@@ -44,21 +51,27 @@ def _stream_fn(mesh, mode: str, n_channels: int, n_msgs: int,
             elif mode == "vma":
                 outs.append(jax.lax.psum(x.reshape(-1),
                                          "data").reshape(x.shape))
-            else:  # hadronio: pack into slices, one collective per slice
-                flat = x.reshape(-1)
-                total = flat.shape[0] * 4
-                sp = plan_slices(total, CommConfig(
+            elif mode == "hadronio":
+                # pack into slices, one collective per slice
+                total = x.size * 4
+                sl, sp = slice_view(x.reshape(-1), CommConfig(
                     mode="hadronio", slice_bytes=slice_bytes,
                     ring_capacity_bytes=max(slice_bytes * 64, total)))
-                elems = sp.slice_bytes // 4
-                pad = sp.n_slices * elems - flat.shape[0]
-                if pad:
-                    flat = jnp.pad(flat, (0, pad))
-                sl = flat.reshape(sp.n_slices, elems)
                 red = [jax.lax.psum(sl[i], "data")
                        for i in range(sp.n_slices)]
                 out = jnp.stack(red).reshape(-1)
                 outs.append(out[: x.size].reshape(x.shape))
+            else:  # hadronio_agg: ONE coalesced wire flush per stream,
+                #    through the live pipeline (aggregate="channel")
+                total = x.size * 4
+                comm = CommConfig(
+                    mode="hadronio", slice_bytes=slice_bytes,
+                    channels=1, aggregate="channel", hierarchical=False,
+                    ring_capacity_bytes=max(slice_bytes * 64, total))
+                sl, _ = slice_view(x.reshape(-1), comm)
+                ctx = SyncContext.resolve(comm, ("data",), None)
+                red, _ = pipeline.reduce_slices(sl, ctx)
+                outs.append(red.reshape(-1)[: x.size].reshape(x.shape))
         return tuple(outs)
 
     f = compat.shard_map(body, mesh=mesh,
@@ -69,8 +82,8 @@ def _stream_fn(mesh, mode: str, n_channels: int, n_msgs: int,
 
 
 def run(mesh=None, *, msg_sizes=MSG_SIZES, channels=CHANNELS,
-        modes=("sockets", "vma", "hadronio"), slice_bytes: int = 64 * 1024,
-        iters: int = 5):
+        modes=("sockets", "vma", "hadronio", "hadronio_agg"),
+        slice_bytes: int = 64 * 1024, iters: int = 5):
     if mesh is None:
         n = len(jax.devices())
         mesh = make_mesh((n,), ("data",))

@@ -201,7 +201,26 @@ class CommConfig:
     ``pack`` selects the pack/cast/error-feedback copy-path implementation
     (the paper's gathering-write hot spot): ``jnp`` (reference) or
     ``pallas`` (fused one-pass kernel, kernels/ring_pack.py; falls back to
-    jnp via repro.compat when pallas is unavailable).
+    jnp via repro.compat when pallas is unavailable). The same switch
+    selects the unpack-stage implementation (the scattering-read epilogue
+    — one fused cast-from-wire-dtype pass over the collective results).
+
+    ``aggregate`` is the wire-flush granularity of the channel schedule
+    (paper §III-C: hadroNIO's ring buffer merges many small writes into
+    one large UCX request per connection):
+
+      slice   — one collective per ring slice / bucket; same-channel
+                collectives are chained in order.
+      channel — gathering write at connection granularity: every slice
+                round-robin-assigned to a channel is coalesced into ONE
+                contiguous wire buffer and flushed with a single
+                collective per channel. Bit-identical numerics; the
+                reduce-scatter flush interleaves per-slice shard chunks
+                so the ZeRO-1 flat-shard ordering is unchanged.
+
+    Modes without a channel schedule (gspmd / sockets / vma) have nothing
+    to coalesce; ``aggregate`` is a documented no-op there (unlike
+    ``compress``, it never changes numerics, so no rejection is needed).
 
     The authoritative mode list is the backend registry
     (``repro.core.backends.available_modes``) — new modes register
@@ -213,11 +232,13 @@ class CommConfig:
     slice_bytes: int = 4 * 1024 * 1024
     channels: int = 4                  # in-flight slices ("connections")
     compress: str = "none"             # none | bf16 | int8_ef
-    pack: str = "jnp"                  # pack-stage impl: jnp | pallas
+    pack: str = "jnp"                  # pack/unpack-stage impl: jnp | pallas
+    aggregate: str = "slice"           # wire-flush granularity: slice | channel
     hierarchical: bool = True          # pod-aware two-level collectives
 
     COMPRESS_CODECS = ("none", "bf16", "int8_ef")
     PACK_IMPLS = ("jnp", "pallas")
+    AGGREGATES = ("slice", "channel")
 
     def __post_init__(self):
         # the backend registry is the single source of truth for modes
@@ -239,6 +260,11 @@ class CommConfig:
                 f"unknown comm.pack {self.pack!r}: expected one of "
                 f"{self.PACK_IMPLS} (pallas falls back to jnp when the "
                 "kernel toolchain is unavailable)")
+        if self.aggregate not in self.AGGREGATES:
+            raise ValueError(
+                f"unknown comm.aggregate {self.aggregate!r}: expected one "
+                f"of {self.AGGREGATES} ('channel' coalesces every slice on "
+                "a channel into one wire flush per collective)")
         assert self.slice_bytes > 0 and self.ring_capacity_bytes >= self.slice_bytes
 
 

@@ -2,7 +2,11 @@
 gradient pytree into ring-buffer slices, then one INDEPENDENT collective
 per slice, each issued through a round-robin-assigned CommChannel (the
 worker-per-connection analogue). The XLA latency-hiding scheduler
-overlaps the independent collectives with compute and each other."""
+overlaps the independent collectives with compute and each other.
+``comm.aggregate="channel"`` raises the flush granularity to one
+coalesced wire buffer per channel (n_channels collectives per exchange
+instead of n_slices) with bit-identical results — see
+pipeline.emit_through_channels."""
 from __future__ import annotations
 
 import jax.numpy as jnp

@@ -172,9 +172,15 @@ class HadronioOverlapBackend(CommBackend):
             reduced = [comp.int8_allreduce(q, s, ctx.flat_axes)
                        for q, s in zip(wires, scales)]
         else:
-            reduced = pipeline.emit_through_channels(
-                wires, ctx, lambda ch, x: ch.all_reduce(x).astype(
-                    jnp.float32))
+            # channel schedule (one collective per bucket, or one
+            # coalesced flush per channel under aggregate="channel"),
+            # then the fused unpack stage PER BUCKET — keeping the cast
+            # bucket-local preserves the overlap property through to the
+            # optimizer (a merged unpack would join every bucket)
+            reduced = [
+                pipeline.unpack_wire(r, ctx.comm)
+                for r in pipeline.emit_through_channels(
+                    wires, ctx, "all_reduce")]
 
         out: list = [None] * len(leaves)
         for b, red in enumerate(reduced):

@@ -109,10 +109,15 @@ class HadronioOverlapRsBackend(CommBackend):
                     plan.padded[b] // group, axis=0)
                 for b, (q, s) in enumerate(zip(wires, scales))]
         else:
-            shards = pipeline.emit_through_channels(
-                wires, ctx,
-                lambda ch, x: ch.reduce_scatter(x).astype(
-                    jnp.float32).reshape(-1))
+            # per-bucket reduce-scatter through the channel schedule
+            # (coalesced one-flush-per-channel under aggregate="channel",
+            # peer-major interleaved so each bucket's shard — and the
+            # flat-shard bucket ordering — is unchanged), then the fused
+            # unpack stage per bucket (bucket-local keeps the overlap)
+            shards = [
+                pipeline.unpack_wire(s, ctx.comm).reshape(-1)
+                for s in pipeline.emit_through_channels(
+                    wires, ctx, "reduce_scatter", group=group)]
         flat_shard = jnp.concatenate(shards)
         return SyncResult(None, flat_shard, plan, bucket_ef_result(new_efs),
                           gather_axes)
@@ -195,20 +200,25 @@ class HadronioOverlapRsBackend(CommBackend):
         return jax.tree.unflatten(treedef, out)
 
     def reshard_flat_shards(self, run: RunConfig, stacked, new_shards: int):
-        """Elastic re-slice of the bucketed flat moments. Valid only when
-        the bucket plan is ring-size-invariant (the scatter group divides
-        the 512 alignment for both ring sizes, the common power-of-two
-        case) — otherwise the bucket padding itself changes and the state
-        must be reinitialized."""
+        """Elastic re-slice of the bucketed flat moments. When the bucket
+        plan is ring-size-invariant (the scatter group divides the 512
+        alignment for both ring sizes — the common power-of-two case) the
+        old values are re-sliced exactly. A non-power-of-two group changes
+        the lcm(512, group) bucket padding itself, so the old flat layout
+        has no element-preserving mapping: take the replan-and-reinit path
+        — rebuild the plan at the new alignment and reinitialize the flat
+        moments to zero (AdamW warms them back up over ~1/(1-beta) steps;
+        the parameters are replicated and untouched)."""
+        import numpy as np
         from repro.models import api
         old_shards = stacked.shape[0]
         eff_old = scatter_group_size(old_shards, 1, run.comm)
         eff_new = scatter_group_size(new_shards, 1, run.comm)
         if rs_align(eff_old) != rs_align(eff_new):
-            raise ValueError(
-                f"cannot reshard bucketed ZeRO-1 state {old_shards}->"
-                f"{new_shards}: bucket alignment changes "
-                f"({rs_align(eff_old)} -> {rs_align(eff_new)})")
+            plan = rs_bucket_plan(api.abstract(run.model), run.comm,
+                                  eff_new)
+            return np.zeros((new_shards, plan.total_padded // eff_new),
+                            np.float32)
         plan = rs_bucket_plan(api.abstract(run.model), run.comm, eff_old)
         return reshard_ring_segments(stacked, old_shards, new_shards,
                                      plan.padded)

@@ -3,7 +3,10 @@ data-sharded (ZeRO-1) optimizer. Each peer reduces + keeps 1/ring of
 every slice, updates its flat parameter/moment shard, and all-gathers the
 updated parameter slices back (per slice, independent — overlappable).
 With hierarchical collectives the scatter group is in-pod and shards
-replicate across pods (hierarchical ZeRO)."""
+replicate across pods (hierarchical ZeRO). ``comm.aggregate="channel"``
+coalesces each channel's slices into one peer-major-interleaved
+reduce-scatter flush; the ZeRO-1 flat-shard layout is unchanged
+(pipeline.interleave_for_scatter)."""
 from __future__ import annotations
 
 from typing import Any

@@ -4,7 +4,7 @@ One gradient exchange is a fixed sequence of stages, written once here
 instead of per-branch in every mode:
 
     pack -> ring-buffer plan -> pack stage (cast/EF) -> per-channel
-    collective -> unpack
+    collective -> unpack stage -> unpack
 
 ``pack``/``plan`` live in :mod:`repro.core.aggregation` (the gathering
 write); this module owns the wire stages:
@@ -21,21 +21,28 @@ write); this module owns the wire stages:
   every backend unchanged. int8 needs a per-slice amax reduction the
   kernel does not fuse, so it always takes the jnp path.
 * :func:`emit_through_channels` — the worker-per-connection schedule:
-  slices are assigned to channels round-robin (paper §IV-C) and each
+  slices are assigned to channels round-robin (paper §IV-C) and the
+  flush granularity is ``comm.aggregate``. Under ``"slice"`` each
   channel issues its collectives IN ORDER (an ``optimization_barrier``
   chains consecutive ops on the same channel — the selector's ordering
   lever from :mod:`repro.core.selector`), while different channels stay
-  data-independent. ``comm.channels`` therefore really is the paper's
-  connection-count axis: it bounds how many collectives can be in
-  flight, from fully serialized (1) to fully independent (>= n_slices).
+  data-independent. Under ``"channel"`` every channel coalesces its
+  slices into ONE contiguous wire buffer and flushes a single collective
+  — hadroNIO's ring-buffer gathering write (§III-C, §V-B), where many
+  small application writes become one large UCX request per connection.
+* :func:`unpack_wire` — the unpack stage (the scattering-read
+  counterpart of the pack stage): one fused cast-from-wire-dtype +
+  re-slice HBM pass over the stacked collective results, replacing the
+  old per-slice ``.astype(f32)`` epilogue. Implementation selection is
+  the same ``comm.pack`` switch (kernels/ring_pack.unpack_slices_kernel
+  vs jnp), with identical outputs.
 * :func:`reduce_slices` / :func:`scatter_slices` — pack stage + per-slice
-  all-reduce / reduce-scatter composed over the channel schedule.
+  all-reduce / reduce-scatter + unpack stage composed over the channel
+  schedule.
 
 Backends compose these; none of them re-implements a stage.
 """
 from __future__ import annotations
-
-from typing import Callable, Optional
 
 import jax
 import jax.numpy as jnp
@@ -43,10 +50,13 @@ import jax.numpy as jnp
 from repro import compat
 from repro.configs.base import CommConfig
 from repro.core import compress as comp
-from repro.core.channels import CommChannel, make_channels, round_robin
+from repro.core.channels import (CommChannel, channel_groups, make_channels,
+                                 round_robin)
 from repro.core.selector import barrier, emission_order
 
 from repro.core.backends.base import SyncContext
+
+_KINDS = ("all_reduce", "reduce_scatter")
 
 
 def channels_for(ctx: SyncContext, n_slices: int) -> list[CommChannel]:
@@ -58,8 +68,8 @@ def channels_for(ctx: SyncContext, n_slices: int) -> list[CommChannel]:
 
 
 def pack_impl(comm: CommConfig) -> str:
-    """Resolve the pack-stage implementation: honor ``comm.pack`` when the
-    pallas toolchain is importable, else fall back to jnp."""
+    """Resolve the pack/unpack-stage implementation: honor ``comm.pack``
+    when the pallas toolchain is importable, else fall back to jnp."""
     if comm.pack == "pallas" and compat.pallas_available():
         return "pallas"
     return "jnp"
@@ -91,24 +101,103 @@ def pack_wire(slices: jax.Array, ef, comm: CommConfig):
     return slices, None, None
 
 
-def emit_through_channels(items: list, ctx: SyncContext,
-                          op: Callable[[CommChannel, jax.Array],
-                                       jax.Array]) -> list:
-    """Issue ``op(channel, item)`` for every item through the connection
-    pool. Items on the SAME channel are chained (each op's input is
-    barrier-pinned on the channel's previous output, so the compiler must
-    run them in order — one in-flight collective per channel); different
-    channels carry no data dependencies and may overlap freely."""
+def unpack_wire(wire: jax.Array, comm: CommConfig,
+                out_dtype=jnp.float32) -> jax.Array:
+    """The unpack stage — the paper's scattering read (§III-C): one fused
+    cast-from-wire-dtype + re-slice HBM pass over the stacked ``(n, S)``
+    collective results, instead of one ``.astype`` round trip per slice.
+    ``comm.pack`` selects the implementation exactly like the pack stage
+    (pallas kernel vs jnp reference; bit-identical outputs). A wire
+    already in ``out_dtype`` needs no pass at all."""
+    if wire.dtype == jnp.dtype(out_dtype):
+        return wire
+    if pack_impl(comm) == "pallas":
+        from repro.kernels import ops
+        return ops.unpack_slices(
+            wire, out_dtype=jnp.dtype(out_dtype).name).reshape(wire.shape)
+    return wire.astype(out_dtype)
+
+
+def interleave_for_scatter(flats: list, group: int) -> jax.Array:
+    """Peer-major coalescing of 1-D wire buffers for ONE reduce-scatter
+    flush: peer ``p``'s contiguous ``1/group`` chunk of the result is the
+    concatenation of ``p``'s chunk of every buffer, in buffer order — so
+    a coalesced reduce-scatter hands every peer exactly the same
+    per-slice shards (and therefore the same ZeRO-1 flat-shard ordering)
+    as one collective per slice."""
+    if len(flats) == 1:
+        return flats[0]
+    return jnp.concatenate([f.reshape(group, -1) for f in flats],
+                           axis=1).reshape(-1)
+
+
+def _scattered_shape(shape: tuple, group: int) -> tuple:
+    return shape[:-1] + (shape[-1] // group,)
+
+
+def _flush_channel(ch: CommChannel, items: list, idx: list, kind: str,
+                   group: int, outs: list) -> None:
+    """One coalesced wire flush: concatenate the channel's items into a
+    single contiguous buffer, issue ONE collective, carve the results
+    back out (the scattering read)."""
+    flats = [items[i].reshape(-1) for i in idx]
+    if kind == "all_reduce":
+        buf = flats[0] if len(flats) == 1 else jnp.concatenate(flats)
+        red = ch.all_reduce(buf)
+        off = 0
+        for i, f in zip(idx, flats):
+            outs[i] = jax.lax.slice_in_dim(
+                red, off, off + f.shape[0]).reshape(items[i].shape)
+            off += f.shape[0]
+        return
+    buf = interleave_for_scatter(flats, group)
+    sh = ch.reduce_scatter(buf)
+    off = 0
+    for i, f in zip(idx, flats):
+        c = f.shape[0] // group
+        outs[i] = jax.lax.slice_in_dim(sh, off, off + c).reshape(
+            _scattered_shape(items[i].shape, group))
+        off += c
+
+
+def emit_through_channels(items: list, ctx: SyncContext, kind: str,
+                          *, group: int = 1) -> list:
+    """Issue the collective ``kind`` ("all_reduce" | "reduce_scatter")
+    for every item through the connection pool, at the flush granularity
+    ``ctx.comm.aggregate``:
+
+    * ``"slice"`` — one collective per item. Items on the SAME channel
+      are chained (each op's input is barrier-pinned on the channel's
+      previous output, so the compiler must run them in order — one
+      in-flight collective per channel); different channels carry no
+      data dependencies and may overlap freely.
+    * ``"channel"`` — one coalesced wire flush per channel: all items
+      round-robin-assigned to a channel become ONE contiguous buffer and
+      ONE collective (n_channels collectives per exchange instead of
+      n_slices). Reduce-scatter flushes are peer-major interleaved
+      (:func:`interleave_for_scatter`) so each item's shard is unchanged.
+
+    Returns per-item results: reduced arrays in the item's own shape
+    (all_reduce), or the item's scatter shard with the trailing dim
+    divided by ``group`` (reduce_scatter). Both granularities return
+    bit-identical values."""
+    assert kind in _KINDS, kind
     chans = channels_for(ctx, len(items))
+    outs: list = [None] * len(items)
+    if ctx.comm.aggregate == "channel":
+        for ch, idx in zip(chans, channel_groups(len(items), len(chans))):
+            if idx:
+                _flush_channel(ch, items, idx, kind, group, outs)
+        return outs
     assign = round_robin(len(items), len(chans))
     last: dict[int, jax.Array] = {}
-    outs: list[Optional[jax.Array]] = [None] * len(items)
     for i in emission_order(len(items), reverse=False):
         ch = chans[assign[i]]
         x = items[i]
         if ch.index in last:
             x, _ = barrier(x, last[ch.index])
-        y = op(ch, x)
+        y = ch.all_reduce(x) if kind == "all_reduce" \
+            else ch.reduce_scatter(x)
         outs[i] = y
         last[ch.index] = y
     return outs
@@ -124,26 +213,25 @@ def scatter_group(ctx: SyncContext):
 
 
 def reduce_slices(slices: jax.Array, ctx: SyncContext):
-    """Per-slice all-reduce with the optional pack stage, scheduled over
-    the channel pool. slices: (n, S) f32. Returns (reduced (n, S) f32,
-    new_ef)."""
+    """Per-slice all-reduce with the pack/unpack stages, scheduled over
+    the channel pool at the configured flush granularity. slices: (n, S)
+    f32. Returns (reduced (n, S) f32, new_ef)."""
     wire, new_ef, scale = pack_wire(slices, ctx.ef, ctx.comm)
     if scale is not None:
         # int8: all-gather + local dequant-sum (one fused exchange)
         return comp.int8_allreduce(wire, scale, ctx.flat_axes), new_ef
 
     outs = emit_through_channels(
-        [wire[i] for i in range(wire.shape[0])], ctx,
-        lambda ch, x: ch.all_reduce(x).astype(jnp.float32))
-    return jnp.stack(outs), new_ef
+        [wire[i] for i in range(wire.shape[0])], ctx, "all_reduce")
+    return unpack_wire(jnp.stack(outs), ctx.comm), new_ef
 
 
 def scatter_slices(slices: jax.Array, ctx: SyncContext):
     """Per-slice reduce-scatter (the ZeRO-1 exchange) over the channel
-    pool. slices: (n, S) f32 (wire-compressible). Returns (flat_shard,
-    new_ef, gather_axes) where flat_shard is the peer's (n * S/group,)
-    ZeRO-1 slice and ``gather_axes`` are the axes the shard must be
-    all-gathered over."""
+    schedule, with the pack/unpack stages. slices: (n, S) f32
+    (wire-compressible). Returns (flat_shard, new_ef, gather_axes) where
+    flat_shard is the peer's (n * S/group,) ZeRO-1 slice and
+    ``gather_axes`` are the axes the shard must be all-gathered over."""
     gather_axes, group = scatter_group(ctx)
     wire, new_ef, scale = pack_wire(slices, ctx.ef, ctx.comm)
     if scale is not None:
@@ -158,8 +246,8 @@ def scatter_slices(slices: jax.Array, ctx: SyncContext):
         return shard.reshape(-1), new_ef, gather_axes
 
     shards = emit_through_channels(
-        [wire[i] for i in range(wire.shape[0])], ctx,
-        lambda ch, x: ch.reduce_scatter(x).astype(jnp.float32))
+        [wire[i] for i in range(wire.shape[0])], ctx, "reduce_scatter",
+        group=group)
     # (n_slices, S/group) -> flat local shard, ZeRO-1 layout
-    flat_shard = jnp.stack(shards).reshape(-1)
+    flat_shard = unpack_wire(jnp.stack(shards), ctx.comm).reshape(-1)
     return flat_shard, new_ef, gather_axes

@@ -33,10 +33,12 @@ class VmaBackend(CommBackend):
         flat = agg.pack(grads, plan)
         if ctx.comm.compress == "bf16":
             # pack stage over the ring-slice view (EF layout matches the
-            # global-plan state spec); the wire is still ONE psum
+            # global-plan state spec); the wire is still ONE psum, and
+            # the fused unpack stage does the cast back to f32
             wire, new_ef, _ = pipeline.pack_wire(
                 agg.as_slices(flat, plan), ctx.ef, ctx.comm)
-            red = jax.lax.psum(wire, ctx.flat_axes).astype(jnp.float32)
+            red = pipeline.unpack_wire(jax.lax.psum(wire, ctx.flat_axes),
+                                       ctx.comm)
             synced = agg.unpack(agg.from_slices(red, plan), plan, grads)
             return SyncResult(synced, None, plan, new_ef)
         red = jax.lax.psum(flat, ctx.flat_axes)

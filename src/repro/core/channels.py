@@ -15,7 +15,10 @@ Within one channel the collectives are CHAINED in order (an
 ``optimization_barrier`` pins each op on the channel's previous output),
 so ``comm.channels`` genuinely bounds the number of in-flight
 collectives — 1 serializes the whole exchange, >= n_slices is fully
-independent. A channel built with a ``pod_axis`` issues pod-aware
+independent. Under ``comm.aggregate="channel"`` the chain collapses
+entirely: each channel's slices are coalesced (:func:`channel_groups`)
+into one contiguous buffer and flushed with a SINGLE collective — the
+paper's gathering write at connection granularity. A channel built with a ``pod_axis`` issues pod-aware
 two-level collectives (the multi-rail analogue); otherwise it reduces
 over the flattened DP ring. The microbenchmarks (benchmarks/latency.py,
 throughput.py) sweep channel count 1..16, reproducing the paper's
@@ -71,3 +74,16 @@ def round_robin(n_items: int, n_channels: int) -> list[int]:
     """Connection assignment (paper §IV-C assigns connections to
     selectors round-robin)."""
     return [i % n_channels for i in range(n_items)]
+
+
+def channel_groups(n_items: int, n_channels: int) -> list[list[int]]:
+    """The inverse view of :func:`round_robin`: for each channel, the item
+    indices it carries, in emission order. Under
+    ``comm.aggregate="channel"`` each group is ONE gathering-write flush —
+    the channel's slices are coalesced into a single contiguous wire
+    buffer and sent as one collective (paper §III-C: the ring buffer
+    merges many small writes into one large request per connection)."""
+    groups: list[list[int]] = [[] for _ in range(n_channels)]
+    for i, c in enumerate(round_robin(n_items, n_channels)):
+        groups[c].append(i)
+    return groups

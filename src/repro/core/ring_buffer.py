@@ -17,6 +17,12 @@ from dataclasses import dataclass
 from repro.configs.base import CommConfig
 
 
+ALIGN_BYTES = 512   # keeps pallas pack/unpack tiles >= one (8, 128) f32
+#                     lane block (note: element-level plans in
+#                     aggregation.make_plan align to 512 ELEMENTS; this
+#                     byte-level rounding only guards direct consumers)
+
+
 @dataclass(frozen=True)
 class SlicePlan:
     total_bytes: int          # payload bytes (one sync dtype)
@@ -24,6 +30,8 @@ class SlicePlan:
     n_slices: int
     requested_slice_bytes: int
     clamped: bool             # True if capacity forced slice growth
+    align_pad_bytes: int = 0  # bytes the 512-B rounding added to a
+    #                           capacity-grown slice (0 when unclamped)
 
 
 def plan_slices(total_bytes: int, comm: CommConfig) -> SlicePlan:
@@ -31,10 +39,18 @@ def plan_slices(total_bytes: int, comm: CommConfig) -> SlicePlan:
     max_inflight = max(1, comm.ring_capacity_bytes // req)
     n = max(1, -(-total_bytes // req))
     clamped = n > max_inflight
+    align_pad = 0
     if clamped:
         n = max_inflight
         eff = -(-total_bytes // n)
+        # capacity growth can land on any byte count; round up to the
+        # 512-byte alignment so the pallas pack/unpack tiling keeps
+        # lane-sized tiles instead of degrading to gcd-1
+        aligned = -(-eff // ALIGN_BYTES) * ALIGN_BYTES
+        align_pad = aligned - eff
+        eff = aligned
     else:
         eff = req
     return SlicePlan(total_bytes=total_bytes, slice_bytes=eff, n_slices=n,
-                     requested_slice_bytes=req, clamped=clamped)
+                     requested_slice_bytes=req, clamped=clamped,
+                     align_pad_bytes=align_pad)

@@ -51,6 +51,8 @@ def pack_slices(flat: jax.Array, ef, *, n_slices: int, slice_elems: int,
 
 @functools.partial(jax.jit, static_argnames=("out_dtype",))
 def unpack_slices(wire: jax.Array, out_dtype="float32"):
+    """Fused cast-from-wire-dtype + re-slice (the unpack stage /
+    scattering read) — see ring_pack.py. wire: (n, S). Returns (n*S,)."""
     return _rp.unpack_slices_kernel(wire, jnp.dtype(out_dtype),
                                     interpret=_interpret())
 

@@ -13,7 +13,14 @@ into ONE HBM read + one write per element, tiled through VMEM.
 Block layout: the flat buffer is viewed as (n_slices, slice_elems); grid =
 (n_slices, slice_elems // LANE_BLOCK); each program moves one (1, 8·128·k)
 tile HBM->VMEM->HBM. slice_elems is 512-aligned by the plan (aggregation
-.make_plan), so tiles are always lane-aligned.
+.make_plan; ring_buffer.plan_slices additionally rounds capacity-grown
+slices to 512 BYTES — at least 128 f32 lanes — for direct byte-level
+consumers), so tiles are always lane-aligned.
+
+``unpack_slices_kernel`` is the scattering-read counterpart — the live
+unpack stage of the wire pipeline (backends/pipeline.unpack_wire): one
+fused cast-from-wire-dtype + re-slice pass over the stacked collective
+results, replacing a per-slice ``.astype`` epilogue.
 """
 from __future__ import annotations
 

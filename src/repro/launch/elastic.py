@@ -54,19 +54,30 @@ def reshard_tac_opt(flat_mu: np.ndarray, flat_nu: np.ndarray,
 def make_on_mismatch(run: RunConfig):
     """Shape-mismatch resolver for elastic restores. Ring-sized state is
     backend-owned, so the re-slice rule is the backend's
-    ``reshard_flat_shards`` hook (zero1 flat moments); error-feedback
-    residuals are per-peer and only change shape via the ring size, so a
-    mismatch resets them to zero (one uncompensated step of truncation —
-    the EF telescoping restarts cleanly)."""
+    ``reshard_flat_shards`` hook (zero1 flat moments — including the
+    replan-and-reinit path a non-power-of-two scatter group takes, where
+    even the total flat length changes); error-feedback residuals are
+    per-peer and keyed to the ring/bucket layout, so any mismatch resets
+    them to zero (one uncompensated step of truncation — the EF
+    telescoping restarts cleanly). Leaves are told apart by their
+    checkpoint path name (``.ef...`` vs ``.opt_...``, see
+    checkpoint/store._leaf_files), not by shape: an overlap bucket's
+    residual and a flat moment shard are both 2-D."""
     backend = get_backend(run.comm.mode)
     if not backend.zero1 and run.comm.compress == "none":
         return None
 
     def on_mismatch(name: str, arr: np.ndarray, ref) -> np.ndarray:
         want = tuple(ref.shape)
-        if arr.ndim == 2 and len(want) == 2 and \
-                arr.size == int(np.prod(want)):
-            return backend.reshard_flat_shards(run, arr, want[0])
+        if name.startswith(".ef") and arr.ndim == len(want):
+            return np.zeros(want, np.float32)
+        if arr.ndim == 2 and len(want) == 2:
+            out = backend.reshard_flat_shards(run, arr, want[0])
+            if tuple(out.shape) != want:
+                raise ValueError(
+                    f"{name}: backend resharded {arr.shape} -> {out.shape},"
+                    f" expected {want}")
+            return out
         if arr.ndim == len(want) and arr.shape[1:] == want[1:]:
             # leading ring dim changed on a per-peer residual: reset
             return np.zeros(want, np.float32)

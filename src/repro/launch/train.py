@@ -220,7 +220,8 @@ def build_run(args) -> RunConfig:
                         seq_len=args.seq_len, global_batch=args.global_batch)
     comm = CommConfig(mode=args.mode, slice_bytes=args.slice_bytes,
                       hierarchical=not args.flat_collectives,
-                      compress=args.compress, pack=args.pack)
+                      compress=args.compress, pack=args.pack,
+                      aggregate=args.aggregate)
     return RunConfig(model=cfg, shape=shape, comm=comm,
                      lr=args.lr, total_steps=args.steps,
                      warmup_steps=max(args.steps // 10, 1),
@@ -246,6 +247,12 @@ def main() -> int:
                    help="pack/cast/EF copy-path impl (pallas = fused "
                         "ring_pack kernel; falls back to jnp off-TPU "
                         "toolchains)")
+    p.add_argument("--aggregate", default="slice",
+                   choices=list(CommConfig.AGGREGATES),
+                   help="wire-flush granularity: 'slice' = one collective "
+                        "per ring slice/bucket; 'channel' = coalesce each "
+                        "channel's slices into one flush (paper §III-C "
+                        "gathering write; bit-identical numerics)")
     p.add_argument("--slice-bytes", type=int, default=4 * 1024 * 1024)
     p.add_argument("--flat-collectives", action="store_true")
     p.add_argument("--microbatches", type=int, default=1)

@@ -23,8 +23,18 @@ The matrix is generated from ``available_modes()`` and indexed into
 ``SUPPORTED_COMPRESS`` at collection time — registering a backend
 without declaring its conformance expectations fails collection.
 
+* **aggregate parity** — ``comm.aggregate="channel"`` (one coalesced
+  wire flush per connection) must be BIT-identical to the per-slice
+  schedule for every hadronio-family mode and codec, including the
+  ZeRO-1 flat-shard ordering, and the per-exchange collective count must
+  drop from n_slices to n_channels (checked on the emitted StableHLO via
+  ``launch/hlo_analysis``).
+
 Set ``REPRO_CONFORMANCE_PACK=jnp|pallas`` to pin the pack-stage
-implementation (CI runs the jnp fallback explicitly).
+implementation (CI runs the jnp fallback explicitly) and
+``REPRO_CONFORMANCE_AGG=slice|channel`` to pin the wire-flush
+granularity the whole matrix runs under (CI runs the suite again with
+``channel``).
 """
 import functools
 import os
@@ -49,6 +59,10 @@ COMPRESS = ("none", "bf16", "int8_ef")
 _PACK_ENV = os.environ.get("REPRO_CONFORMANCE_PACK")
 PACKS = (_PACK_ENV,) if _PACK_ENV else ("jnp", "pallas")
 assert all(p in ("jnp", "pallas") for p in PACKS), _PACK_ENV
+# wire-flush granularity the whole matrix runs under (the aggregate-parity
+# tests below always exercise BOTH, so the default leg stays "slice")
+AGG = os.environ.get("REPRO_CONFORMANCE_AGG", "slice")
+assert AGG in ("slice", "channel"), AGG
 
 # Which codecs each registered mode must honor; everything not listed
 # must be rejected by validate(). EVERY registered mode needs an entry —
@@ -102,6 +116,7 @@ def _grad_tree():
 def _comm(mode, compress="none", pack="jnp", **kw):
     kw.setdefault("slice_bytes", 4096)
     kw.setdefault("hierarchical", False)
+    kw.setdefault("aggregate", AGG)
     return CommConfig(mode=mode, compress=compress, pack=pack, **kw)
 
 
@@ -266,6 +281,111 @@ def _collective_deps(mode, compress, pack):
         for ov in eqn.outvars:
             deps[ov] = d
     return plan, collectives
+
+
+# ---------------------------------------------------------------------------
+# Channel-level gathering-write aggregation (comm.aggregate="channel"):
+# bit-identical numerics, fewer wire flushes
+# ---------------------------------------------------------------------------
+
+HADRONIO_FAMILY = tuple(m for m in available_modes()
+                        if m.startswith("hadronio"))
+AGG_CASES = [(m, c, p)
+             for m in HADRONIO_FAMILY
+             for c in SUPPORTED_COMPRESS[m]
+             for p in PACKS]
+
+
+def _sync_outputs(mode, comm, grads):
+    """(leaves-or-flat-shard tuple, ef leaves tuple) of one jitted sync,
+    plus the emitted StableHLO collective stats."""
+    from repro.launch import hlo_analysis as hlo
+    backend = get_backend(mode)
+
+    def body(g):
+        r = tac.sync_grads(g, comm, data_axis=("data",))
+        outs = tuple(jax.tree.leaves(r.grads)) if r.grads is not None \
+            else (r.flat_shard,)
+        efs = tuple(jax.tree.leaves(r.ef)) if r.ef is not None else ()
+        return outs + efs
+
+    mesh = make_mesh((1,), ("data",))
+    f = jax.jit(compat.shard_map(body, mesh=mesh, in_specs=(P(),),
+                                 out_specs=P()))
+    stats = hlo.stablehlo_collective_stats(f.lower(grads).as_text())
+    return f(grads), stats
+
+
+@pytest.mark.parametrize("mode,compress,pack", AGG_CASES)
+def test_aggregate_channel_parity(mode, compress, pack):
+    """aggregate="channel" (one coalesced wire flush per connection) is
+    BIT-identical to the per-slice schedule — synced grads for the tree
+    modes, the flat-shard ordering for the ZeRO-1 modes, and the
+    error-feedback residuals — with fewer channels than slices/buckets so
+    coalescing genuinely merges buffers."""
+    grads = _grad_tree()
+    outs = {}
+    for aggregate in ("slice", "channel"):
+        comm = _comm(mode, compress, pack, channels=2, slice_bytes=1024,
+                     ring_capacity_bytes=1 << 20, aggregate=aggregate)
+        outs[aggregate], _ = _sync_outputs(mode, comm, grads)
+    assert len(outs["slice"]) == len(outs["channel"])
+    for a, b in zip(outs["slice"], outs["channel"]):
+        assert a.dtype == b.dtype
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+@pytest.mark.parametrize("mode", HADRONIO_FAMILY)
+def test_aggregate_collective_count_drops_to_channel_count(mode):
+    """The gathering-write payoff, read off the emitted StableHLO
+    (launch/hlo_analysis): per exchange, the per-slice schedule emits one
+    collective per slice/bucket; aggregate="channel" emits exactly
+    min(channels, n_items) — one coalesced flush per connection."""
+    grads = _grad_tree()
+    n_channels = 2       # < n_buckets (3) and < n_slices (7) at 1 KiB
+    counts = {}
+    for aggregate in ("slice", "channel"):
+        comm = _comm(mode, "none", "jnp", channels=n_channels,
+                     slice_bytes=1024, ring_capacity_bytes=1 << 20,
+                     aggregate=aggregate)
+        _, stats = _sync_outputs(mode, comm, grads)
+        counts[aggregate] = stats.total_ops
+    if mode in BUCKET_MODES:
+        plan = ho.make_bucket_plan(grads, _comm(mode, slice_bytes=1024)) \
+            if mode == "hadronio_overlap" \
+            else hors.rs_bucket_plan(grads, _comm(mode, slice_bytes=1024), 1)
+        n_items = plan.n_buckets
+    else:
+        from repro.core import aggregation as agg
+        n_items = agg.make_plan(_grad_tree(),
+                                _comm(mode, slice_bytes=1024)).n_slices
+    assert n_items > n_channels, (n_items, n_channels)
+    assert counts["slice"] == n_items, counts
+    assert counts["channel"] == n_channels, counts
+
+
+def test_channel_flush_preserves_scatter_layout(np_rng):
+    """The reduce-scatter flush interleave: peer p's contiguous 1/group
+    chunk of the coalesced buffer equals the concatenation of p's
+    per-slice chunks — the property that keeps the ZeRO-1 flat-shard
+    ordering identical across aggregate granularities."""
+    from repro.core.backends import pipeline
+    group = 4
+    sizes = [512, 1024, 512]
+    flats = [jnp.asarray(np_rng.normal(size=(s,)), jnp.float32)
+             for s in sizes]
+    buf = np.asarray(pipeline.interleave_for_scatter(flats, group))
+    assert buf.shape == (sum(sizes),)
+    c = buf.shape[0] // group
+    for p in range(group):
+        expect = np.concatenate(
+            [np.asarray(f)[p * (len(f) // group):(p + 1) * (len(f) // group)]
+             for f in flats])
+        np.testing.assert_array_equal(buf[p * c:(p + 1) * c], expect)
+    # single-buffer flush needs no interleave (identity)
+    np.testing.assert_array_equal(
+        np.asarray(pipeline.interleave_for_scatter(flats[:1], group)),
+        np.asarray(flats[0]))
 
 
 @pytest.mark.parametrize("mode", BUCKET_MODES)

@@ -91,3 +91,62 @@ def test_reshard_tac_opt_roundtrip():
         mu_old = shards_for(old)
         mu_new, _ = reshard_tac_opt(mu_old, mu_old, old, new, n_slices)
         np.testing.assert_array_equal(mu_new, shards_for(new))
+
+
+def _overlap_rs_run(n_shards):
+    from repro.configs.base import CommConfig, RunConfig, ShapeConfig
+    from repro.configs.registry import get_config
+    run = RunConfig(model=get_config("qwen2-0.5b-reduced"),
+                    shape=ShapeConfig("t", "train", 16, 4),
+                    comm=CommConfig(mode="hadronio_overlap_rs",
+                                    slice_bytes=16 * 1024,
+                                    hierarchical=False))
+    from repro.core.backends import get_backend
+    backend = get_backend("hadronio_overlap_rs")
+    spec = backend.state_specs(run, n_shards).opt.mu
+    return run, backend, tuple(spec.shape)
+
+
+def test_overlap_rs_reshard_power_of_two_preserves_values():
+    """Ring changes that keep the lcm(512, group) bucket alignment (the
+    power-of-two case) re-slice the old moments exactly."""
+    run, backend, shape_old = _overlap_rs_run(2)
+    stacked = np.arange(np.prod(shape_old), dtype=np.float32).reshape(
+        shape_old)
+    out = backend.reshard_flat_shards(run, stacked, 4)
+    _, _, shape_new = _overlap_rs_run(4)
+    assert tuple(out.shape) == shape_new
+    # the re-slice is a permutation of the same global values
+    np.testing.assert_array_equal(np.sort(out.reshape(-1)),
+                                  np.sort(stacked.reshape(-1)))
+    assert out.reshape(-1).sum() == stacked.reshape(-1).sum()
+
+
+def test_overlap_rs_reshard_odd_group_replans_and_reinits():
+    """ROADMAP follow-up: a non-power-of-two scatter group changes the
+    lcm(512, group) bucket padding, so the old flat layout has no
+    element-preserving mapping — the backend replans at the new alignment
+    and reinitializes the moments to zero instead of asserting."""
+    run, backend, shape_old = _overlap_rs_run(2)
+    stacked = np.ones(shape_old, np.float32)
+    out = backend.reshard_flat_shards(run, stacked, 3)    # lcm 512 -> 1536
+    _, _, shape_new = _overlap_rs_run(3)
+    assert tuple(out.shape) == shape_new
+    assert out.dtype == np.float32 and not out.any()
+
+
+def test_elastic_mismatch_hook_routes_odd_group_reshard():
+    """launch.elastic.make_on_mismatch must reach the backend hook even
+    when the total flat length changes (the replan path) — and still
+    reset error-feedback residuals by name, not by shape."""
+    from repro.launch.elastic import make_on_mismatch
+    run, backend, shape_old = _overlap_rs_run(2)
+    _, _, shape_new = _overlap_rs_run(3)
+    hook = make_on_mismatch(run)
+    ref = jax.ShapeDtypeStruct(shape_new, jnp.float32)
+    out = hook(".opt_.mu.npy", np.ones(shape_old, np.float32), ref)
+    assert tuple(out.shape) == tuple(shape_new) and not out.any()
+    # a 2-D per-bucket EF residual resets to zero instead of resharding
+    ef_ref = jax.ShapeDtypeStruct((3, 1536), jnp.float32)
+    out = hook(".ef_0.npy", np.ones((2, 512), np.float32), ef_ref)
+    assert out.shape == (3, 1536) and not out.any()

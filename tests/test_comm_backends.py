@@ -106,6 +106,8 @@ def test_comm_config_rejects_bad_values():
         CommConfig(mode="hadronio", compress="fp4", hierarchical=False)
     with pytest.raises(ValueError, match="pack"):
         CommConfig(mode="hadronio", pack="cuda", hierarchical=False)
+    with pytest.raises(ValueError, match="aggregate"):
+        CommConfig(mode="hadronio", aggregate="tensor", hierarchical=False)
 
 
 def test_unsupported_compress_rejected_at_validate():
@@ -336,6 +338,27 @@ def test_pack_falls_back_without_pallas(monkeypatch):
     assert pipeline.pack_impl(_pack_comm("bf16", "jnp")) == "jnp"
 
 
+def test_unpack_stage_identical_outputs(np_rng):
+    """The unpack stage (scattering read) mirrors the pack-stage harness
+    discipline: pallas and jnp implementations produce bit-identical f32
+    outputs from the same wire bytes; a wire already in the target dtype
+    is returned untouched (no copy pass)."""
+    from repro.core.backends import pipeline
+    src = jnp.asarray(np_rng.normal(size=(3, 1536)), jnp.float32)
+    wire = src.astype(jnp.bfloat16)
+    outs = {p: pipeline.unpack_wire(wire, _pack_comm("bf16", p))
+            for p in ("jnp", "pallas")}
+    for p, o in outs.items():
+        assert o.dtype == jnp.float32 and o.shape == wire.shape, p
+    np.testing.assert_array_equal(np.asarray(outs["jnp"]),
+                                  np.asarray(outs["pallas"]))
+    # bf16 -> f32 widening is exact: the unpack stage loses nothing
+    np.testing.assert_array_equal(np.asarray(outs["jnp"]),
+                                  np.asarray(wire, np.float32))
+    for p in ("jnp", "pallas"):
+        assert pipeline.unpack_wire(src, _pack_comm("none", p)) is src
+
+
 # ---------------------------------------------------------------------------
 # Channel-count autotune (benchmarks/latency.py, ROADMAP item)
 # ---------------------------------------------------------------------------
@@ -351,3 +374,42 @@ def test_channel_autotune_smoke():
     assert len(rec) == 1 and rec[0].value == best
     assert CommConfig(mode="hadronio", channels=best,
                       hierarchical=False).channels == best
+
+
+def test_autotune_rows_carry_mode_label():
+    """The autotune rows thread the ACTUAL mode name into the CSV (they
+    used to hard-code "hadronio"), so sweeps over the overlap modes stay
+    distinguishable."""
+    from benchmarks.latency import autotune_channels
+    _, rows = autotune_channels(msg_size=1024, channels=(1,), iters=1,
+                                mode="hadronio_overlap_rs")
+    assert rows and all(r.mode == "hadronio_overlap_rs" for r in rows)
+
+
+def test_slice_bytes_autotune_smoke():
+    """The slice-granularity sweep (ROADMAP follow-up) runs the LIVE wire
+    pipeline on this mesh, returns a granularity from the swept set, and
+    derives the recommended-default row from the already-measured points
+    (no re-measurement)."""
+    from benchmarks.latency import autotune_slice_bytes
+    best, rows = autotune_slice_bytes(payload_bytes=64 * 1024,
+                                      slice_sizes=(4096, 16384),
+                                      channels=2, iters=1)
+    assert best in (4096, 16384)
+    measured = [r for r in rows if r.metric == "sweep_slice_goodput"]
+    assert len(measured) == 2 and all(r.kind == "measured"
+                                      for r in measured)
+    rec = [r for r in rows if r.metric == "recommended_slice_bytes"]
+    assert len(rec) == 1 and rec[0].value == best and rec[0].kind == "derived"
+    assert CommConfig(mode="hadronio", slice_bytes=best,
+                      hierarchical=False).slice_bytes == best
+
+
+def test_slice_bytes_autotune_sweeps_aggregate_axis():
+    """The same sweep parameterizes over the new aggregate axis — the
+    channel-flush pipeline is measurable per mesh too."""
+    from benchmarks.latency import autotune_slice_bytes
+    best, rows = autotune_slice_bytes(payload_bytes=64 * 1024,
+                                      slice_sizes=(16384,), channels=2,
+                                      aggregate="channel", iters=1)
+    assert best == 16384 and rows

@@ -71,6 +71,27 @@ def test_slice_plan_invariants(total, slice_bytes, cap_mult):
         assert sp.slice_bytes == slice_bytes
 
 
+def test_clamped_slice_plan_is_512_aligned():
+    """Capacity clamping grows slices by ceil-division, which can land on
+    any byte count; the plan rounds the effective slice up to 512-byte
+    alignment (so the pallas pack/unpack tiling never degrades to gcd-1
+    tiles) and records the rounding."""
+    c = CommConfig(mode="hadronio", slice_bytes=777,
+                   ring_capacity_bytes=777 * 3)
+    sp = plan_slices(12345, c)
+    assert sp.clamped and sp.n_slices == 3
+    raw = -(-12345 // 3)                      # 4115: what clamping alone gives
+    assert sp.slice_bytes % 512 == 0
+    assert sp.slice_bytes == -(-raw // 512) * 512
+    assert sp.align_pad_bytes == sp.slice_bytes - raw
+    assert sp.slice_bytes * sp.n_slices >= 12345
+    # unclamped plans honor the request exactly and record no rounding
+    sp2 = plan_slices(100, CommConfig(mode="hadronio", slice_bytes=777,
+                                      ring_capacity_bytes=1 << 20))
+    assert not sp2.clamped and sp2.slice_bytes == 777
+    assert sp2.align_pad_bytes == 0
+
+
 def test_slice_alignment_for_any_ring():
     """slice_elems is 512-aligned so reduce-scatter shards evenly over any
     DP ring up to 512 peers (the multi-pod mesh size)."""
