@@ -81,6 +81,16 @@ def write_rows(rows: Iterable[Row], path: str | None):
     return text
 
 
+def write_json(rows: Iterable[Row], path: str):
+    """Machine-readable row dump (the CI benchmark-smoke artifact —
+    BENCH_*.json files accumulate the cross-commit trajectory)."""
+    import json
+    data = [dataclasses.asdict(r) for r in rows]
+    with open(path, "w") as f:
+        json.dump(data, f, indent=1, sort_keys=True)
+    return data
+
+
 def slice_view(flat, comm):
     """Shared prologue of the slice benchmarks: zero-pad a flat f32
     payload to the ring-buffer plan and view it as (n_slices,

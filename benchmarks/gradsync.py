@@ -32,7 +32,7 @@ MODES = PAPER_MODES + tuple(m for m in available_modes()
 
 def run(mesh=None, *, arch: str = "qwen1.5-4b-reduced",
         seq_len: int = 64, modes=MODES, slice_bytes: int = 256 * 1024,
-        iters: int = 5):
+        iters: int = 5, flush_evidence: bool = True):
     if mesh is None:
         n = len(jax.devices())
         mesh = make_mesh((n,), ("data",))
@@ -93,4 +93,50 @@ def run(mesh=None, *, arch: str = "qwen1.5-4b-reduced",
             rows.append(Row("gradsync", "table-gradsync", mode, 0, n_dev,
                             "n_grad_tensors", n_grads, "tensors",
                             "derived"))
+
+        if flush_evidence:
+            rows.extend(_flush_evidence_rows(mesh, cfg, shape, n_dev,
+                                             slice_bytes))
+    return rows
+
+
+def _flush_evidence_rows(mesh, cfg, shape, n_dev: int,
+                         slice_bytes: int) -> list:
+    """The flush-axis evidence table: for the overlap modes under
+    ``aggregate="channel"`` with fewer channels than buckets, compare
+    ``flush="step"`` vs ``"ready"`` on the EMITTED program — collective
+    op count (same sync flushes either way; for ``hadronio_overlap_rs``
+    the count DROPS under ``ready`` because the ZeRO-1 update epilogue
+    legitimately merges its all-gathers per channel flush,
+    ``gather_flush_groups``) and the position of the first collective
+    among all emitted ops
+    (``hlo_analysis.first_collective_position``): the readiness-driven
+    schedule emits the first gathering write before the later buckets'
+    pack ops, which is the overlap the ROADMAP follow-up asked for."""
+    rows = []
+    overlap_modes = [m for m in MODES if m.startswith("hadronio_overlap")]
+    for mode in overlap_modes:
+        for flush in ("step", "ready"):
+            run_cfg = RunConfig(
+                model=cfg, shape=shape,
+                comm=CommConfig(mode=mode, slice_bytes=slice_bytes,
+                                channels=2, aggregate="channel",
+                                flush=flush, hierarchical=False))
+            step_fn, state_sh, batch_sh_fn = steps_mod.make_train_step(
+                run_cfg, mesh)
+            state_sds = steps_mod.abstract_tac_state(run_cfg, n_dev)
+            batch_sds = {
+                "tokens": jax.ShapeDtypeStruct(
+                    (n_dev, shape.seq_len), jnp.int32),
+                "labels": jax.ShapeDtypeStruct(
+                    (n_dev, shape.seq_len), jnp.int32)}
+            text = jax.jit(step_fn).lower(state_sds, batch_sds).as_text()
+            emitted = hlo.stablehlo_collective_stats(text)
+            first, total = hlo.first_collective_position(text)
+            rows.append(Row("gradsync", "flush-evidence", mode, 0, 2,
+                            f"emitted_collective_ops:{flush}",
+                            emitted.total_ops, "ops", "derived"))
+            rows.append(Row("gradsync", "flush-evidence", mode, 0, 2,
+                            f"first_collective_pos:{flush}",
+                            first / max(total, 1), "frac", "derived"))
     return rows

@@ -52,6 +52,10 @@ def _pingpong_fn(mesh, n_channels: int, msg_elems: int, n_dev: int):
     return jax.jit(f)
 
 
+FLUSHES = ("step", "ready")
+AGGREGATES = ("slice", "channel")
+
+
 def recommend_channels(rtt_by_channels: dict[int, float], msg_size: int,
                        mode: str = "hadronio") -> tuple[int, list[Row]]:
     """Pick the channel count maximizing aggregate round-trip throughput
@@ -74,13 +78,25 @@ def recommend_channels(rtt_by_channels: dict[int, float], msg_size: int,
 
 def autotune_channels(mesh=None, *, msg_size: int = 64 * 1024,
                       channels=CHANNELS, iters: int = 10,
-                      mode: str = "hadronio"):
+                      mode: str = "hadronio", joint: bool = False):
     """Channel-count autotune (ROADMAP item): sweep ``comm.channels``
     over the ping-pong microbenchmark ON THIS MESH and pick a per-mesh
     default. Returns ``(best_channels, rows)``; feed ``best_channels``
     into ``CommConfig(channels=...)``. ``run()`` derives the same
     recommendation from its own sweep without re-measuring. ``mode`` is
-    the row label only (the ping-pong primitive is mode-agnostic)."""
+    the row label only (the ping-pong primitive is mode-agnostic).
+
+    ``joint=True`` recommends over the JOINT ``flush`` × ``aggregate`` ×
+    ``channels`` space instead, driving the LIVE wire pipeline
+    (:func:`autotune_flush_schedule`): the aggregation-vs-latency
+    trade-off the benchmark paper shows must be tunable is three-axis
+    once the flush schedule exists, so the channel count is only
+    meaningful per (flush, aggregate) point. Returns
+    ``((flush, aggregate, channels), rows)``."""
+    if joint:
+        return autotune_flush_schedule(mesh, payload_bytes=8 * msg_size,
+                                       channels=channels, iters=iters,
+                                       mode=mode)
     if mesh is None:
         n = len(jax.devices())
         mesh = make_mesh((n,), ("data",))
@@ -168,8 +184,71 @@ def autotune_slice_bytes(mesh=None, *, payload_bytes: int = 4 * 1024 * 1024,
     return best, rows + rec_rows
 
 
+# ---------------------------------------------------------------------------
+# Joint flush-schedule autotune (flush x aggregate x channels — the
+# three-axis coalescing trade-off once the flush-when-ready schedule
+# exists)
+# ---------------------------------------------------------------------------
+
+
+def recommend_flush_schedule(goodput_by_combo: dict,
+                             payload_bytes: int,
+                             mode: str = "hadronio") -> tuple:
+    """Pick the (flush, aggregate, channels) combo maximizing goodput
+    from already-measured points. The recommended-default row encodes
+    the combo in its metric name (CSV stays one-value-per-row):
+    ``recommended_flush_schedule:<flush>:<aggregate>`` with the channel
+    count as the value."""
+    best = max(sorted(goodput_by_combo), key=goodput_by_combo.get)
+    flush, aggregate, ch = best
+    row = Row("latency", "autotune", mode, payload_bytes, ch,
+              f"recommended_flush_schedule:{flush}:{aggregate}", ch,
+              "channels", "derived")
+    return best, [row]
+
+
+def autotune_flush_schedule(mesh=None, *,
+                            payload_bytes: int = 512 * 1024,
+                            slice_bytes: int = 32 * 1024,
+                            channels=(1, 2, 4), flushes=FLUSHES,
+                            aggregates=AGGREGATES, iters: int = 10,
+                            mode: str = "hadronio"):
+    """The joint sweep the flush axis makes necessary: exchange a fixed
+    payload through the LIVE wire pipeline once per (flush, aggregate,
+    channels) combo ON THIS MESH — the paper's aggregation-vs-latency
+    trade-off (§V-B) plus the readiness schedule from
+    ``core/flush_scheduler`` — and recommend the best combo. Returns
+    ``((flush, aggregate, channels), rows)``; each measured row's metric
+    is ``sweep_flush_goodput:<flush>:<aggregate>``."""
+    if mesh is None:
+        n = len(jax.devices())
+        mesh = make_mesh((n,), ("data",))
+    payload_elems = max(1, payload_bytes // 4)
+    rows, goodput = [], {}
+    for flush in flushes:
+        for aggregate in aggregates:
+            for ch in channels:
+                comm = CommConfig(
+                    mode=mode, slice_bytes=slice_bytes, channels=ch,
+                    aggregate=aggregate, flush=flush, hierarchical=False,
+                    ring_capacity_bytes=max(64 * slice_bytes,
+                                            2 * payload_bytes))
+                fn = _slice_exchange_fn(mesh, comm, payload_elems)
+                x = jnp.ones((payload_elems,), jnp.float32)
+                t = timeit(lambda: block(fn(x)), warmup=1, iters=iters)
+                goodput[(flush, aggregate, ch)] = \
+                    payload_bytes / max(t, 1e-12)
+                rows.append(Row(
+                    "latency", "autotune", mode, payload_bytes, ch,
+                    f"sweep_flush_goodput:{flush}:{aggregate}",
+                    goodput[(flush, aggregate, ch)] / 1e6, "MB/s",
+                    "measured"))
+    best, rec_rows = recommend_flush_schedule(goodput, payload_bytes, mode)
+    return best, rows + rec_rows
+
+
 def run(mesh=None, *, msg_sizes=MSG_SIZES, channels=CHANNELS,
-        iters: int = 10):
+        iters: int = 10, quick: bool = False):
     if mesh is None:
         n = len(jax.devices())
         mesh = make_mesh((n,), ("data",))
@@ -203,6 +282,16 @@ def run(mesh=None, *, msg_sizes=MSG_SIZES, channels=CHANNELS,
     _, rec_rows = recommend_channels(rtts_at_max, max(msg_sizes))
     rows.extend(rec_rows)
     # per-mesh recommended comm.slice_bytes default (the granularity sweep)
-    _, sb_rows = autotune_slice_bytes(mesh, iters=max(1, iters // 2))
+    sb_kw = dict(payload_bytes=256 * 1024,
+                 slice_sizes=(16 * 1024, 64 * 1024)) if quick else {}
+    _, sb_rows = autotune_slice_bytes(mesh, iters=max(1, iters // 2),
+                                      **sb_kw)
     rows.extend(sb_rows)
+    # joint flush x aggregate x channels sweep + recommended combo (the
+    # flush-when-ready schedule makes coalescing a three-axis trade-off)
+    fl_kw = dict(payload_bytes=128 * 1024, channels=(1, 2)) if quick \
+        else {}
+    _, fl_rows = autotune_flush_schedule(mesh, iters=max(1, iters // 2),
+                                         **fl_kw)
+    rows.extend(fl_rows)
     return rows

@@ -17,7 +17,7 @@ import argparse                # noqa: E402
 import sys                     # noqa: E402
 import time                    # noqa: E402
 
-from benchmarks.common import write_rows   # noqa: E402
+from benchmarks.common import write_json, write_rows   # noqa: E402
 
 BENCHES = ("latency", "throughput", "gradsync", "roofline")
 
@@ -26,6 +26,9 @@ def main() -> int:
     p = argparse.ArgumentParser(description=__doc__)
     p.add_argument("--only", choices=BENCHES, nargs="*", default=None)
     p.add_argument("--csv", default="", help="also write CSV here")
+    p.add_argument("--json", default="",
+                   help="also write the rows as JSON here (the CI "
+                        "benchmark-smoke artifact)")
     p.add_argument("--quick", action="store_true",
                    help="fewer sweep points (CI mode)")
     args = p.parse_args()
@@ -36,13 +39,18 @@ def main() -> int:
         t0 = time.time()
         mod = __import__(f"benchmarks.{name}", fromlist=["run"])
         kw = {}
-        if args.quick and name in ("latency", "throughput"):
+        if args.quick and name == "latency":
+            kw = {"msg_sizes": [16, 1024], "channels": [1, 4], "iters": 3,
+                  "quick": True}
+        if args.quick and name == "throughput":
             kw = {"msg_sizes": [16, 1024], "channels": [1, 4], "iters": 3}
         if args.quick and name == "gradsync":
             kw = {"iters": 2}
         rows.extend(mod.run(**kw))
         print(f"# {name}: {time.time() - t0:.1f}s", file=sys.stderr)
     text = write_rows(rows, args.csv or None)
+    if args.json:
+        write_json(rows, args.json)
     print(text)
     return 0
 

@@ -212,15 +212,32 @@ class CommConfig:
       slice   — one collective per ring slice / bucket; same-channel
                 collectives are chained in order.
       channel — gathering write at connection granularity: every slice
-                round-robin-assigned to a channel is coalesced into ONE
-                contiguous wire buffer and flushed with a single
-                collective per channel. Bit-identical numerics; the
-                reduce-scatter flush interleaves per-slice shard chunks
-                so the ZeRO-1 flat-shard ordering is unchanged.
+                assigned to a channel is coalesced into ONE contiguous
+                wire buffer and flushed with a single collective per
+                channel. Bit-identical numerics; the reduce-scatter
+                flush interleaves per-slice shard chunks so the ZeRO-1
+                flat-shard ordering is unchanged.
+
+    ``flush`` is the channel SCHEDULE (core/flush_scheduler.py —
+    hadroNIO flushes a connection the moment the selector reports it
+    writable, §III-B, instead of at a global barrier):
+
+      step    — slices/buckets land on channels round-robin and every
+                coalesced flush is emitted in one end-of-exchange loop.
+      ready   — flush-when-ready: buckets are grouped onto channels
+                contiguously in gradient-production (reverse-layer)
+                order and each channel's flush is emitted the moment its
+                last bucket is staged — mid-backward, so under
+                ``aggregate="channel"`` with channels < n_buckets the
+                overlap modes keep per-channel independence that the
+                ``step`` schedule forfeits. Bit-identical numerics (the
+                schedule moves the same bytes; only the emission
+                structure changes).
 
     Modes without a channel schedule (gspmd / sockets / vma) have nothing
-    to coalesce; ``aggregate`` is a documented no-op there (unlike
-    ``compress``, it never changes numerics, so no rejection is needed).
+    to coalesce; ``aggregate`` and ``flush`` are documented no-ops there
+    (unlike ``compress``, they never change numerics, so no rejection is
+    needed).
 
     The authoritative mode list is the backend registry
     (``repro.core.backends.available_modes``) — new modes register
@@ -234,11 +251,13 @@ class CommConfig:
     compress: str = "none"             # none | bf16 | int8_ef
     pack: str = "jnp"                  # pack/unpack-stage impl: jnp | pallas
     aggregate: str = "slice"           # wire-flush granularity: slice | channel
+    flush: str = "step"                # channel schedule: step | ready
     hierarchical: bool = True          # pod-aware two-level collectives
 
     COMPRESS_CODECS = ("none", "bf16", "int8_ef")
     PACK_IMPLS = ("jnp", "pallas")
     AGGREGATES = ("slice", "channel")
+    FLUSHES = ("step", "ready")
 
     def __post_init__(self):
         # the backend registry is the single source of truth for modes
@@ -265,6 +284,12 @@ class CommConfig:
                 f"unknown comm.aggregate {self.aggregate!r}: expected one "
                 f"of {self.AGGREGATES} ('channel' coalesces every slice on "
                 "a channel into one wire flush per collective)")
+        if self.flush not in self.FLUSHES:
+            raise ValueError(
+                f"unknown comm.flush {self.flush!r}: expected one of "
+                f"{self.FLUSHES} ('ready' emits each channel's flush the "
+                "moment its last assigned bucket is staged; 'step' flushes "
+                "every channel at one end-of-exchange loop)")
         assert self.slice_bytes > 0 and self.ring_capacity_bytes >= self.slice_bytes
 
 

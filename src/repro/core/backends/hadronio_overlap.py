@@ -137,6 +137,30 @@ def pack_buckets_wire(leaves: list, plan: BucketPlan, ctx: SyncContext):
     return wires, new_efs, scales
 
 
+def stage_buckets(leaves: list, plan: BucketPlan, ctx: SyncContext,
+                  kind: str, *, group: int = 1):
+    """The readiness-driven gathering write: pack each bucket and stage
+    it with the channel emitter IN PRODUCTION ORDER (bucket 0 holds the
+    gradients backward produces first), so under ``comm.flush="ready"``
+    each channel's coalesced collective is emitted the moment the last
+    bucket assigned to it is staged — mid-exchange, before later buckets
+    are packed. Returns ``(per-bucket f32 results, new_efs)``; the unpack
+    stage runs inside the emitter, per flush."""
+    efs = list(ctx.ef) if ctx.ef is not None else [None] * plan.n_buckets
+    assert len(efs) == plan.n_buckets, (len(efs), plan.n_buckets)
+    st = pipeline.begin_emission(ctx, plan.n_buckets, kind, group=group,
+                                 unpack=True)
+    new_efs = []
+    for b in range(plan.n_buckets):
+        flat = pack_bucket(leaves, plan, b)
+        ef_b = None if efs[b] is None else efs[b][None]
+        wire, nef, scale = pipeline.pack_wire(flat[None], ef_b, ctx.comm)
+        assert scale is None      # int8 never reaches the emitter
+        new_efs.append(None if nef is None else nef[0])
+        pipeline.stage_slices(st, b, wire)
+    return pipeline.finish_emission(st), new_efs
+
+
 def bucket_ef_result(new_efs: list):
     return tuple(new_efs) if any(e is not None for e in new_efs) else None
 
@@ -164,23 +188,23 @@ class HadronioOverlapBackend(CommBackend):
     def sync(self, grads, ctx: SyncContext) -> SyncResult:
         leaves, treedef = jax.tree.flatten(grads)
         plan = make_bucket_plan(grads, ctx.comm)
-        wires, new_efs, scales = pack_buckets_wire(leaves, plan, ctx)
 
         if ctx.comm.compress == "int8_ef":
             # per-bucket all-gather + local dequant-sum; every bucket's
             # exchange still depends only on its own leaves
+            wires, new_efs, scales = pack_buckets_wire(leaves, plan, ctx)
             reduced = [comp.int8_allreduce(q, s, ctx.flat_axes)
                        for q, s in zip(wires, scales)]
         else:
-            # channel schedule (one collective per bucket, or one
-            # coalesced flush per channel under aggregate="channel"),
-            # then the fused unpack stage PER BUCKET — keeping the cast
-            # bucket-local preserves the overlap property through to the
-            # optimizer (a merged unpack would join every bucket)
-            reduced = [
-                pipeline.unpack_wire(r, ctx.comm)
-                for r in pipeline.emit_through_channels(
-                    wires, ctx, "all_reduce")]
+            # staged emission through the channel schedule: each bucket
+            # is packed AND staged in production order, so under
+            # comm.flush="ready" a channel's coalesced flush is emitted
+            # the moment its last bucket's wire bytes exist — before the
+            # later buckets are even packed. The fused unpack stage runs
+            # per FLUSH (channel-local keeps the cast inside the flush's
+            # own dataflow; a merged unpack would join every bucket).
+            reduced, new_efs = stage_buckets(leaves, plan, ctx,
+                                             "all_reduce")
 
         out: list = [None] * len(leaves)
         for b, red in enumerate(reduced):

@@ -33,7 +33,8 @@ from repro.core.backends.base import (CommBackend, StateSpecs, SyncContext,
                                       scatter_group_size)
 from repro.core.backends.hadronio_overlap import (
     _ALIGN, BucketPlan, bucket_ef_result, bucket_ef_specs, make_bucket_plan,
-    pack_bucket, pack_buckets_wire, unpack_bucket)
+    pack_bucket, pack_buckets_wire, stage_buckets, unpack_bucket)
+from repro.core.flush_scheduler import make_flush_plan
 from repro.core.hierarchical import all_gather_data
 from repro.optim import adamw
 from repro.optim.flat import flat_adamw_update, reshard_ring_segments
@@ -78,6 +79,22 @@ def bucket_decay_mask(plan: BucketPlan) -> jax.Array:
     return mask
 
 
+def gather_flush_groups(plan: BucketPlan, comm: CommConfig) -> tuple:
+    """Bucket ids per all-gather flush of the ZeRO-1 update epilogue.
+    Under the flush-when-ready channel schedule the epilogue mirrors the
+    sync's flush structure — keyed to CHANNEL FLUSHES rather than
+    buckets: the ready groups are contiguous bucket runs, so each
+    flush's chunk is contiguous in the flat-shard layout and one
+    all-gather per flush returns the identical bytes as one per bucket
+    (n_channels epilogue collectives instead of n_buckets). Every other
+    schedule keeps the per-bucket epilogue."""
+    if comm.aggregate == "channel" and comm.flush == "ready":
+        fp = make_flush_plan(plan.n_buckets, comm.channels, "ready")
+        if fp.contiguous:
+            return fp.groups
+    return tuple((b,) for b in range(plan.n_buckets))
+
+
 def shard_of_buckets(vectors_by_bucket, plan: BucketPlan, group: int, my):
     """Concatenate this peer's contiguous chunk of every bucket vector —
     the flat-shard layout (bucket-major, ring-ordered chunks)."""
@@ -97,10 +114,10 @@ class HadronioOverlapRsBackend(CommBackend):
         leaves, _ = jax.tree.flatten(grads)
         gather_axes, group = pipeline.scatter_group(ctx)
         plan = rs_bucket_plan(grads, ctx.comm, group)
-        wires, new_efs, scales = pack_buckets_wire(leaves, plan, ctx)
 
         if ctx.comm.compress == "int8_ef":
             # per-bucket dequant-sum everywhere, keep this peer's chunk
+            wires, new_efs, scales = pack_buckets_wire(leaves, plan, ctx)
             my = jax.lax.axis_index(gather_axes)
             shards = [
                 jax.lax.dynamic_slice_in_dim(
@@ -109,15 +126,16 @@ class HadronioOverlapRsBackend(CommBackend):
                     plan.padded[b] // group, axis=0)
                 for b, (q, s) in enumerate(zip(wires, scales))]
         else:
-            # per-bucket reduce-scatter through the channel schedule
-            # (coalesced one-flush-per-channel under aggregate="channel",
-            # peer-major interleaved so each bucket's shard — and the
-            # flat-shard bucket ordering — is unchanged), then the fused
-            # unpack stage per bucket (bucket-local keeps the overlap)
-            shards = [
-                pipeline.unpack_wire(s, ctx.comm).reshape(-1)
-                for s in pipeline.emit_through_channels(
-                    wires, ctx, "reduce_scatter", group=group)]
+            # staged per-bucket reduce-scatter through the channel
+            # schedule: buckets are packed and staged in production
+            # order, so under flush="ready" each channel's coalesced
+            # flush (peer-major interleaved — each bucket's shard and
+            # the flat-shard bucket ordering are unchanged) goes out the
+            # moment its last bucket exists; the fused unpack stage runs
+            # per flush inside the emitter.
+            reduced, new_efs = stage_buckets(leaves, plan, ctx,
+                                             "reduce_scatter", group=group)
+            shards = [r.reshape(-1) for r in reduced]
         flat_shard = jnp.concatenate(shards)
         return SyncResult(None, flat_shard, plan, bucket_ef_result(new_efs),
                           gather_axes)
@@ -171,12 +189,24 @@ class HadronioOverlapRsBackend(CommBackend):
         out: list = [None] * len(leaves_p)
         off = 0
         new_psl = new_psl.astype(jnp.float32)
-        for b in range(plan.n_buckets):
-            c = plan.padded[b] // eff
-            shard_b = jax.lax.slice_in_dim(new_psl, off, off + c, axis=0)
-            full_b = all_gather_data(shard_b, res.gather_axes)
-            unpack_bucket(full_b, plan, b, leaves_p, out)
-            off += c
+        # epilogue all-gathers keyed to the flush schedule: one gather
+        # per channel flush under flush="ready" (contiguous bucket runs
+        # in the flat layout), one per bucket otherwise — identical
+        # bytes either way
+        for grp in gather_flush_groups(plan, run.comm):
+            glen = sum(plan.padded[b] // eff for b in grp)
+            shard_g = jax.lax.slice_in_dim(new_psl, off, off + glen,
+                                           axis=0)
+            full_g = all_gather_data(shard_g, res.gather_axes)
+            mat = full_g.reshape(eff, glen)
+            coff = 0
+            for b in grp:
+                c = plan.padded[b] // eff
+                full_b = jax.lax.slice_in_dim(
+                    mat, coff, coff + c, axis=1).reshape(-1)
+                unpack_bucket(full_b, plan, b, leaves_p, out)
+                coff += c
+            off += glen
         new_params = jax.tree.unflatten(treedef, out)
         new_opt = adamw.AdamState(new_mu[None], new_nu[None], count)
         metrics = {"grad_norm": gnorm, "lr": adamw.schedule(run, count)}

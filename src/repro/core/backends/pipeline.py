@@ -20,16 +20,23 @@ write); this module owns the wire stages:
   :func:`repro.compat.pallas_available` so pallas-less environments run
   every backend unchanged. int8 needs a per-slice amax reduction the
   kernel does not fuse, so it always takes the jnp path.
-* :func:`emit_through_channels` — the worker-per-connection schedule:
-  slices are assigned to channels round-robin (paper §IV-C) and the
-  flush granularity is ``comm.aggregate``. Under ``"slice"`` each
-  channel issues its collectives IN ORDER (an ``optimization_barrier``
-  chains consecutive ops on the same channel — the selector's ordering
-  lever from :mod:`repro.core.selector`), while different channels stay
+* :func:`begin_emission` / :func:`stage_slices` / :func:`flush_ready` /
+  :func:`finish_emission` — the worker-per-connection schedule as a
+  STAGED emission: wire buffers are staged one at a time in production
+  order and flushed per the bucket->channel schedule from
+  :mod:`repro.core.flush_scheduler` (``comm.flush``: round-robin with
+  one end-of-exchange flush loop under ``"step"``; contiguous
+  production-order groups flushed the moment they fill under
+  ``"ready"`` — hadroNIO's flush-on-writable, §III-B). The flush
+  granularity is ``comm.aggregate``. Under ``"slice"`` each channel
+  issues its collectives IN ORDER (an ``optimization_barrier`` chains
+  consecutive ops on the same channel — the selector's ordering lever
+  from :mod:`repro.core.selector`), while different channels stay
   data-independent. Under ``"channel"`` every channel coalesces its
   slices into ONE contiguous wire buffer and flushes a single collective
   — hadroNIO's ring-buffer gathering write (§III-C, §V-B), where many
   small application writes become one large UCX request per connection.
+  :func:`emit_through_channels` is the one-shot wrapper over the four.
 * :func:`unpack_wire` — the unpack stage (the scattering-read
   counterpart of the pack stage): one fused cast-from-wire-dtype +
   re-slice HBM pass over the stacked collective results, replacing the
@@ -44,15 +51,17 @@ Backends compose these; none of them re-implements a stage.
 """
 from __future__ import annotations
 
+from dataclasses import dataclass
+
 import jax
 import jax.numpy as jnp
 
 from repro import compat
 from repro.configs.base import CommConfig
 from repro.core import compress as comp
-from repro.core.channels import (CommChannel, channel_groups, make_channels,
-                                 round_robin)
-from repro.core.selector import barrier, emission_order
+from repro.core.channels import ChannelFill, CommChannel, make_channels
+from repro.core.flush_scheduler import FlushPlan, make_flush_plan
+from repro.core.selector import barrier
 
 from repro.core.backends.base import SyncContext
 
@@ -135,33 +144,144 @@ def _scattered_shape(shape: tuple, group: int) -> tuple:
     return shape[:-1] + (shape[-1] // group,)
 
 
-def _flush_channel(ch: CommChannel, items: list, idx: list, kind: str,
-                   group: int, outs: list) -> None:
-    """One coalesced wire flush: concatenate the channel's items into a
-    single contiguous buffer, issue ONE collective, carve the results
-    back out (the scattering read)."""
-    flats = [items[i].reshape(-1) for i in idx]
-    if kind == "all_reduce":
+@dataclass
+class EmitState:
+    """In-flight state of one staged emission (built by
+    :func:`begin_emission`, driven by :func:`stage_slices` /
+    :func:`flush_ready`, closed by :func:`finish_emission`)."""
+    ctx: SyncContext
+    kind: str
+    group: int
+    unpack: bool                  # run the unpack stage per flush
+    plan: FlushPlan
+    chans: list                   # CommChannel pool
+    fills: list                   # per-channel ChannelFill watermark
+    staged: dict                  # item id -> wire array
+    outs: list                    # per-item results
+    last: dict                    # channel idx -> previous collective
+    #                               output (aggregate="slice" chaining)
+
+
+def _unpack_flush(buf: jax.Array, comm: CommConfig) -> jax.Array:
+    """Unpack stage over ONE flushed buffer (any shape): the fused
+    cast-from-wire-dtype pass keyed to the flush, not the bucket."""
+    if buf.dtype == jnp.float32:
+        return buf
+    return unpack_wire(buf.reshape(1, -1), comm).reshape(buf.shape)
+
+
+def _flush_channel(st: EmitState, c: int) -> None:
+    """One coalesced wire flush: concatenate the channel's staged items
+    into a single contiguous buffer, issue ONE collective, optionally run
+    the unpack stage on the flushed buffer, carve the results back out
+    (the scattering read)."""
+    idx = st.plan.groups[c]
+    items = [st.staged[i] for i in idx]
+    flats = [x.reshape(-1) for x in items]
+    if st.kind == "all_reduce":
         buf = flats[0] if len(flats) == 1 else jnp.concatenate(flats)
-        red = ch.all_reduce(buf)
+        red = st.chans[c].all_reduce(buf)
+        red = _unpack_flush(red, st.ctx.comm) if st.unpack else red
         off = 0
         for i, f in zip(idx, flats):
-            outs[i] = jax.lax.slice_in_dim(
-                red, off, off + f.shape[0]).reshape(items[i].shape)
+            st.outs[i] = jax.lax.slice_in_dim(
+                red, off, off + f.shape[0]).reshape(st.staged[i].shape)
             off += f.shape[0]
-        return
-    buf = interleave_for_scatter(flats, group)
-    sh = ch.reduce_scatter(buf)
-    off = 0
-    for i, f in zip(idx, flats):
-        c = f.shape[0] // group
-        outs[i] = jax.lax.slice_in_dim(sh, off, off + c).reshape(
-            _scattered_shape(items[i].shape, group))
-        off += c
+    else:
+        buf = interleave_for_scatter(flats, st.group)
+        sh = st.chans[c].reduce_scatter(buf)
+        sh = _unpack_flush(sh, st.ctx.comm) if st.unpack else sh
+        off = 0
+        for i, f in zip(idx, flats):
+            n = f.shape[0] // st.group
+            st.outs[i] = jax.lax.slice_in_dim(sh, off, off + n).reshape(
+                _scattered_shape(st.staged[i].shape, st.group))
+            off += n
+    st.fills[c].flushed = True
+
+
+def begin_emission(ctx: SyncContext, n_items: int, kind: str, *,
+                   group: int = 1, unpack: bool = False) -> EmitState:
+    """Open one staged emission of ``n_items`` wire buffers through the
+    connection pool. The bucket->channel schedule is ``comm.flush``
+    (``core/flush_scheduler``): round-robin + end-of-exchange flush loop
+    under ``"step"``, contiguous production-order groups flushed the
+    moment they fill under ``"ready"``. ``unpack=True`` additionally runs
+    the unpack stage per flush (channel-local instead of bucket-local —
+    the scattering read keyed to the flush that produced the bytes)."""
+    assert kind in _KINDS, kind
+    chans = channels_for(ctx, n_items)
+    plan = make_flush_plan(n_items, len(chans), ctx.comm.flush)
+    fills = [ChannelFill(frozenset(g)) for g in plan.groups]
+    return EmitState(ctx=ctx, kind=kind, group=group, unpack=unpack,
+                     plan=plan, chans=chans, fills=fills, staged={},
+                     outs=[None] * n_items, last={})
+
+
+def stage_slices(st: EmitState, i: int, wire: jax.Array) -> list:
+    """Stage item ``i``'s wire bytes (items MUST be staged in production
+    order, 0..n-1) and emit whatever that makes ready:
+
+    * ``aggregate="slice"`` — the item's own collective goes out
+      immediately, barrier-chained on the channel's previous op (one
+      in-flight collective per channel; the selector's ordering lever).
+    * ``aggregate="channel"``, ``flush="ready"`` — if ``i`` completes its
+      channel's assigned set, the channel's coalesced flush is emitted
+      NOW (mid-backward when driven from a bucketed backend).
+    * ``aggregate="channel"``, ``flush="step"`` — staging only; every
+      flush waits for :func:`finish_emission` (the step barrier).
+
+    Returns the item ids flushed by this call."""
+    st.staged[i] = wire
+    c = st.plan.assign[i]
+    st.fills[c].stage(i)
+    if st.ctx.comm.aggregate == "slice":
+        ch = st.chans[c]
+        x = wire
+        if ch.index in st.last:
+            x, _ = barrier(x, st.last[ch.index])
+        y = ch.all_reduce(x) if st.kind == "all_reduce" \
+            else ch.reduce_scatter(x)
+        st.last[ch.index] = y
+        st.outs[i] = _unpack_flush(y, st.ctx.comm) if st.unpack else y
+        if st.fills[c].ready:
+            st.fills[c].flushed = True
+        return [i]
+    if st.ctx.comm.flush == "ready":
+        return flush_ready(st)
+    return []
+
+
+def flush_ready(st: EmitState) -> list:
+    """Flush every channel whose fill watermark reached its assigned set
+    (the selector reporting writable channels). Returns the item ids
+    flushed."""
+    flushed: list = []
+    for c, fill in enumerate(st.fills):
+        if fill.ready:
+            _flush_channel(st, c)
+            flushed.extend(st.plan.groups[c])
+    return flushed
+
+
+def finish_emission(st: EmitState) -> list:
+    """Close the emission: under ``flush="step"`` this is the
+    end-of-exchange flush loop (every channel flushed at one barrier, in
+    channel order — PR 3's schedule); under ``"ready"`` everything
+    already went out and this only asserts completeness. Returns the
+    per-item results."""
+    if st.ctx.comm.aggregate == "channel":
+        for c, fill in enumerate(st.fills):
+            if not fill.flushed:
+                assert fill.ready or st.ctx.comm.flush == "step", \
+                    (c, fill.watermark)
+                _flush_channel(st, c)
+    assert all(o is not None for o in st.outs), "emission incomplete"
+    return st.outs
 
 
 def emit_through_channels(items: list, ctx: SyncContext, kind: str,
-                          *, group: int = 1) -> list:
+                          *, group: int = 1, unpack: bool = False) -> list:
     """Issue the collective ``kind`` ("all_reduce" | "reduce_scatter")
     for every item through the connection pool, at the flush granularity
     ``ctx.comm.aggregate``:
@@ -169,38 +289,30 @@ def emit_through_channels(items: list, ctx: SyncContext, kind: str,
     * ``"slice"`` — one collective per item. Items on the SAME channel
       are chained (each op's input is barrier-pinned on the channel's
       previous output, so the compiler must run them in order — one
-      in-flight collective per channel); different channels carry no
-      data dependencies and may overlap freely.
+      in-flight collective per channel); different channels stay
+      data-independent and may overlap freely.
     * ``"channel"`` — one coalesced wire flush per channel: all items
-      round-robin-assigned to a channel become ONE contiguous buffer and
-      ONE collective (n_channels collectives per exchange instead of
+      assigned to a channel become ONE contiguous buffer and ONE
+      collective (n_channels collectives per exchange instead of
       n_slices). Reduce-scatter flushes are peer-major interleaved
       (:func:`interleave_for_scatter`) so each item's shard is unchanged.
 
+    ``comm.flush`` picks the schedule (``core/flush_scheduler``):
+    ``"step"`` is the round-robin assignment with one end-of-exchange
+    flush loop; ``"ready"`` groups items contiguously in production
+    order and flushes each channel the moment its last item is staged.
+    This one-shot wrapper stages everything before finishing, so the
+    dataflow (not the Python order) is what ``"ready"`` improves here;
+    bucketed backends drive :func:`stage_slices` incrementally instead.
+
     Returns per-item results: reduced arrays in the item's own shape
     (all_reduce), or the item's scatter shard with the trailing dim
-    divided by ``group`` (reduce_scatter). Both granularities return
-    bit-identical values."""
-    assert kind in _KINDS, kind
-    chans = channels_for(ctx, len(items))
-    outs: list = [None] * len(items)
-    if ctx.comm.aggregate == "channel":
-        for ch, idx in zip(chans, channel_groups(len(items), len(chans))):
-            if idx:
-                _flush_channel(ch, items, idx, kind, group, outs)
-        return outs
-    assign = round_robin(len(items), len(chans))
-    last: dict[int, jax.Array] = {}
-    for i in emission_order(len(items), reverse=False):
-        ch = chans[assign[i]]
-        x = items[i]
-        if ch.index in last:
-            x, _ = barrier(x, last[ch.index])
-        y = ch.all_reduce(x) if kind == "all_reduce" \
-            else ch.reduce_scatter(x)
-        outs[i] = y
-        last[ch.index] = y
-    return outs
+    divided by ``group`` (reduce_scatter). All four granularity/schedule
+    combinations return bit-identical values."""
+    st = begin_emission(ctx, len(items), kind, group=group, unpack=unpack)
+    for i, x in enumerate(items):
+        stage_slices(st, i, x)
+    return finish_emission(st)
 
 
 def scatter_group(ctx: SyncContext):

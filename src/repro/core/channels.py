@@ -16,9 +16,13 @@ Within one channel the collectives are CHAINED in order (an
 so ``comm.channels`` genuinely bounds the number of in-flight
 collectives — 1 serializes the whole exchange, >= n_slices is fully
 independent. Under ``comm.aggregate="channel"`` the chain collapses
-entirely: each channel's slices are coalesced (:func:`channel_groups`)
-into one contiguous buffer and flushed with a SINGLE collective — the
-paper's gathering write at connection granularity. A channel built with a ``pod_axis`` issues pod-aware
+entirely: each channel's slices are coalesced (:func:`channel_groups`,
+or contiguously in production order under ``comm.flush="ready"`` —
+``core/flush_scheduler``) into one contiguous buffer and flushed with a
+SINGLE collective — the paper's gathering write at connection
+granularity. :class:`ChannelFill` is the per-channel fill watermark the
+flush-when-ready schedule polls (the selector's writable signal,
+§III-B). A channel built with a ``pod_axis`` issues pod-aware
 two-level collectives (the multi-rail analogue); otherwise it reduces
 over the flattened DP ring. The microbenchmarks (benchmarks/latency.py,
 throughput.py) sweep channel count 1..16, reproducing the paper's
@@ -26,7 +30,7 @@ connection-count axis.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass
+from dataclasses import dataclass, field
 from typing import Any, Optional
 
 import jax
@@ -63,6 +67,33 @@ class CommChannel:
         """One ring hop (the ping-pong primitive for the latency bench)."""
         perm = [(i, (i + 1) % n_shards) for i in range(n_shards)]
         return jax.lax.ppermute(x, axis, perm)
+
+
+@dataclass
+class ChannelFill:
+    """Fill watermark of one channel's gathering write — the selector's
+    readiness signal (paper §III-B: a channel is reported writable when
+    its ring-buffer data is ready to go out). The emitter stages each
+    bucket/slice as its wire bytes exist; ``ready`` flips the moment the
+    LAST assigned item lands, which is the flush trigger under
+    ``comm.flush="ready"`` (``core/flush_scheduler``)."""
+    assigned: frozenset           # item ids this channel carries
+    staged: set = field(default_factory=set)
+    flushed: bool = False
+
+    def stage(self, i: int) -> None:
+        assert i in self.assigned and i not in self.staged, \
+            (i, sorted(self.assigned), sorted(self.staged))
+        self.staged.add(i)
+
+    @property
+    def ready(self) -> bool:
+        return not self.flushed and self.staged == set(self.assigned)
+
+    @property
+    def watermark(self) -> float:
+        """Fill fraction in [0, 1] — 1.0 means flushable."""
+        return len(self.staged) / max(1, len(self.assigned))
 
 
 def make_channels(n: int, axes: tuple, *, pod_axis: Optional[str] = None,

@@ -1,0 +1,100 @@
+"""Flush-when-ready channel scheduling (paper §III-B/III-C).
+
+hadroNIO flushes a connection's ring buffer the moment its data is ready:
+the selector reports the channel writable and the gathering write goes
+out immediately, which is how 5 µs round trips survive aggregation.
+Ibdxnet makes the same point with dedicated send threads draining
+per-connection ORBs as soon as they fill (arXiv:1812.01963). The XLA
+analogue, and the ROADMAP follow-up this module closes: under
+``comm.aggregate="channel"`` with fewer channels than buckets, PR 3's
+one-barrier flush loop made every channel's coalesced collective depend
+on a LATE bucket (round-robin puts some last-produced bucket on each
+channel), forfeiting the overlap that the ``hadronio_overlap*`` modes
+exist for.
+
+``comm.flush`` selects the schedule:
+
+* ``"step"`` — PR 3 behavior: buckets land on channels round-robin and
+  every channel flushes in one end-of-exchange loop (the Netty analogue:
+  a single ``flush()`` at the step barrier).
+* ``"ready"`` — buckets are grouped onto channels CONTIGUOUSLY in
+  gradient-production order (:func:`repro.core.selector.ready_groups`),
+  and a channel's coalesced collective is emitted the moment the LAST
+  bucket assigned to it is staged — mid-backward, before the loss
+  epilogue. The first channel's flush then depends only on the
+  first-produced buckets, so the latency-hiding scheduler can issue it
+  while the remaining backward compute is still running.
+
+Both schedules move identical bytes per item and produce bit-identical
+results (a psum is elementwise; grouping never changes any element's
+sum) — the trade-off is purely emission structure, which is why it is a
+config axis and not a cliff (PAPERS.md: "A Benchmark to Evaluate
+InfiniBand Solutions for Java Applications").
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+from repro.core.channels import channel_groups
+from repro.core.selector import ready_groups
+
+FLUSHES = ("step", "ready")
+
+
+class FlushPlan(NamedTuple):
+    """Static bucket->channel schedule of one exchange (shape-only,
+    computed at trace time — the scheduling counterpart of
+    ``BucketPlan``/``PackPlan``)."""
+    n_items: int
+    flush: str                # "step" | "ready"
+    groups: tuple             # per channel: item ids, in staging order
+    triggers: tuple           # per channel: item id whose staging makes
+    #                           the channel ready (max of the group —
+    #                           items are staged in production order)
+    assign: tuple             # item id -> channel index
+
+    @property
+    def n_channels(self) -> int:
+        return len(self.groups)
+
+    @property
+    def readiness_depth(self) -> int:
+        """Items that must be produced before the FIRST flush can go out
+        (the overlap metric: lower = earlier emission). ``step`` flushes
+        nothing before the end of the exchange."""
+        if self.flush != "ready":
+            return self.n_items
+        return min(self.triggers) + 1
+
+    @property
+    def contiguous(self) -> bool:
+        """True when every channel's items are one contiguous run of ids
+        (the ``ready`` layout) — the property the ZeRO-1 epilogue needs
+        to all-gather per flush instead of per bucket."""
+        return all(g == tuple(range(g[0], g[0] + len(g)))
+                   for g in self.groups if g)
+
+
+def make_flush_plan(n_items: int, n_channels: int,
+                    flush: str = "step") -> FlushPlan:
+    """Map ``n_items`` buckets/slices onto at most ``n_channels``
+    channels under the given flush schedule. Items are always staged in
+    production order (0..n-1: bucket 0 holds the gradients backward
+    produces first), so a channel's readiness trigger is the max id it
+    carries."""
+    assert flush in FLUSHES, flush
+    assert n_items >= 1, n_items
+    n_channels = max(1, min(n_channels, n_items))
+    if flush == "ready":
+        groups = ready_groups(n_items, n_channels)
+    else:
+        groups = tuple(tuple(g)
+                       for g in channel_groups(n_items, n_channels))
+    assign = [0] * n_items
+    triggers = []
+    for c, g in enumerate(groups):
+        for i in g:
+            assign[i] = c
+        triggers.append(max(g))
+    return FlushPlan(n_items, flush, groups, tuple(triggers),
+                     tuple(assign))

@@ -10,6 +10,12 @@ are emitted. This module decides both:
   produced first in backward), so early slices' collectives can overlap
   the remaining backward compute — DDP-style bucketing, expressed to XLA
   by emitting those psums before the loss epilogue.
+* ``ready_groups``: the bucket->channel grouping for the flush-when-ready
+  schedule (``comm.flush="ready"``): readiness order IS the scheduling
+  input — buckets are partitioned onto channels as contiguous runs of
+  the production order, so each channel becomes flushable as soon as its
+  own run of the backward pass has completed (hadroNIO's
+  flush-on-writable, §III-B; consumed by ``core/flush_scheduler``).
 * ``barrier``: ``optimization_barrier`` pinning, used by the benchmarks to
   force (or forbid) overlap when measuring — the paper's warmup barrier.
 """
@@ -25,6 +31,24 @@ PyTree = Any
 def emission_order(n_slices: int, reverse: bool = True) -> list[int]:
     order = list(range(n_slices))
     return order[::-1] if reverse else order
+
+
+def ready_groups(n_slices: int, n_channels: int,
+                 reverse: bool = False) -> tuple:
+    """Partition ``emission_order(n_slices, reverse)`` into at most
+    ``n_channels`` CONTIGUOUS runs — the bucket->channel grouping of the
+    flush-when-ready schedule. Sizes are balanced to within one item,
+    with the smaller runs FIRST so the first channel reaches readiness
+    (all of its items produced) after the fewest buckets possible."""
+    order = emission_order(n_slices, reverse)
+    n_channels = max(1, min(n_channels, n_slices))
+    base, rem = divmod(n_slices, n_channels)
+    groups, off = [], 0
+    for c in range(n_channels):
+        size = base + (1 if c >= n_channels - rem else 0)
+        groups.append(tuple(order[off:off + size]))
+        off += size
+    return tuple(groups)
 
 
 def barrier(*trees: PyTree):

@@ -221,7 +221,7 @@ def build_run(args) -> RunConfig:
     comm = CommConfig(mode=args.mode, slice_bytes=args.slice_bytes,
                       hierarchical=not args.flat_collectives,
                       compress=args.compress, pack=args.pack,
-                      aggregate=args.aggregate)
+                      aggregate=args.aggregate, flush=args.flush)
     return RunConfig(model=cfg, shape=shape, comm=comm,
                      lr=args.lr, total_steps=args.steps,
                      warmup_steps=max(args.steps // 10, 1),
@@ -253,6 +253,14 @@ def main() -> int:
                         "per ring slice/bucket; 'channel' = coalesce each "
                         "channel's slices into one flush (paper §III-C "
                         "gathering write; bit-identical numerics)")
+    p.add_argument("--flush", default="step",
+                   choices=list(CommConfig.FLUSHES),
+                   help="channel schedule: 'step' = round-robin groups "
+                        "flushed at one end-of-exchange loop; 'ready' = "
+                        "flush-when-ready (contiguous production-order "
+                        "groups, each emitted the moment its last bucket "
+                        "is staged — recovers overlap under "
+                        "--aggregate channel; bit-identical numerics)")
     p.add_argument("--slice-bytes", type=int, default=4 * 1024 * 1024)
     p.add_argument("--flat-collectives", action="store_true")
     p.add_argument("--microbatches", type=int, default=1)

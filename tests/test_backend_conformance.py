@@ -30,11 +30,21 @@ without declaring its conformance expectations fails collection.
   drop from n_slices to n_channels (checked on the emitted StableHLO via
   ``launch/hlo_analysis``).
 
+* **flush parity** — ``comm.flush="ready"`` (the flush-when-ready
+  channel schedule from ``core/flush_scheduler``) must be BIT-identical
+  to the ``"step"`` schedule for every hadronio-family mode × codec ×
+  pack at BOTH aggregate granularities, and the jaxpr-level evidence
+  tests prove the overlap recovery: under ``aggregate="channel"`` with
+  channels < n_buckets the first channel's collective is emitted before
+  the last bucket's pack (and depends only on its own contiguous run of
+  first-produced buckets), which ``"step"`` structurally cannot do.
+
 Set ``REPRO_CONFORMANCE_PACK=jnp|pallas`` to pin the pack-stage
-implementation (CI runs the jnp fallback explicitly) and
+implementation (CI runs the jnp fallback explicitly),
 ``REPRO_CONFORMANCE_AGG=slice|channel`` to pin the wire-flush
-granularity the whole matrix runs under (CI runs the suite again with
-``channel``).
+granularity, and ``REPRO_CONFORMANCE_FLUSH=step|ready`` to pin the
+channel schedule the whole matrix runs under — CI runs one conformance
+leg per pin (a workflow matrix with fail-fast off).
 """
 import functools
 import os
@@ -60,9 +70,14 @@ _PACK_ENV = os.environ.get("REPRO_CONFORMANCE_PACK")
 PACKS = (_PACK_ENV,) if _PACK_ENV else ("jnp", "pallas")
 assert all(p in ("jnp", "pallas") for p in PACKS), _PACK_ENV
 # wire-flush granularity the whole matrix runs under (the aggregate-parity
-# tests below always exercise BOTH, so the default leg stays "slice")
-AGG = os.environ.get("REPRO_CONFORMANCE_AGG", "slice")
+# tests below always exercise BOTH, so the default leg stays "slice");
+# empty values (unset legs of the CI matrix) fall back to the default
+AGG = os.environ.get("REPRO_CONFORMANCE_AGG") or "slice"
 assert AGG in ("slice", "channel"), AGG
+# channel schedule the whole matrix runs under (the flush-parity tests
+# below always exercise BOTH, so the default leg stays "step")
+FLUSH = os.environ.get("REPRO_CONFORMANCE_FLUSH") or "step"
+assert FLUSH in ("step", "ready"), FLUSH
 
 # Which codecs each registered mode must honor; everything not listed
 # must be rejected by validate(). EVERY registered mode needs an entry —
@@ -117,6 +132,7 @@ def _comm(mode, compress="none", pack="jnp", **kw):
     kw.setdefault("slice_bytes", 4096)
     kw.setdefault("hierarchical", False)
     kw.setdefault("aggregate", AGG)
+    kw.setdefault("flush", FLUSH)
     return CommConfig(mode=mode, compress=compress, pack=pack, **kw)
 
 
@@ -386,6 +402,172 @@ def test_channel_flush_preserves_scatter_layout(np_rng):
     np.testing.assert_array_equal(
         np.asarray(pipeline.interleave_for_scatter(flats[:1], group)),
         np.asarray(flats[0]))
+
+
+# ---------------------------------------------------------------------------
+# Flush-when-ready channel schedule (comm.flush="ready",
+# core/flush_scheduler): bit-identical numerics, overlap recovered under
+# aggregate="channel" with fewer channels than buckets
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("mode,compress,pack", AGG_CASES)
+def test_flush_ready_parity(mode, compress, pack):
+    """flush="ready" (contiguous production-order groups, each flushed
+    the moment its last bucket is staged) is BIT-identical to the
+    flush="step" barrier loop at BOTH aggregate granularities, for every
+    hadronio-family mode, codec and pack impl — synced grads, ZeRO-1
+    flat-shard ordering and EF residuals. The schedule moves the same
+    bytes; only the emission structure may differ."""
+    grads = _grad_tree()
+    for aggregate in ("slice", "channel"):
+        outs = {}
+        for flush in ("step", "ready"):
+            comm = _comm(mode, compress, pack, channels=2,
+                         slice_bytes=1024, ring_capacity_bytes=1 << 20,
+                         aggregate=aggregate, flush=flush)
+            outs[flush], _ = _sync_outputs(mode, comm, grads)
+        assert len(outs["step"]) == len(outs["ready"])
+        for a, b in zip(outs["step"], outs["ready"]):
+            assert a.dtype == b.dtype
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def _sync_trace(mode, flush):
+    """Inner-jaxpr eqn list of one backend.sync under
+    aggregate="channel" with channels < n_buckets, plus the bucket plan
+    and the per-eqn transitive gradient-leaf dependency sets."""
+    comm = _comm(mode, "none", PACKS[0], channels=2, slice_bytes=1024,
+                 ring_capacity_bytes=1 << 20, aggregate="channel",
+                 flush=flush)
+    grads = _grad_tree()
+    leaves, treedef = jax.tree.flatten(grads)
+    backend = get_backend(mode)
+    plan = ho.make_bucket_plan(grads, comm) if mode == "hadronio_overlap" \
+        else hors.rs_bucket_plan(grads, comm, 1)
+    mesh = make_mesh((1,), ("data",))
+
+    def body(*args):
+        g = jax.tree.unflatten(treedef, list(args))
+        ctx = SyncContext.resolve(comm, ("data",), None)
+        r = backend.sync(g, ctx)
+        outs = jax.tree.leaves(r.grads) if r.grads is not None \
+            else [r.flat_shard]
+        return tuple(outs)
+
+    n_out = len(leaves) if not backend.zero1 else 1
+    f = compat.shard_map(body, mesh=mesh, in_specs=(P(),) * len(leaves),
+                         out_specs=(P(),) * n_out)
+    jaxpr = jax.make_jaxpr(f)(*leaves)
+    inner = next(e for e in jaxpr.jaxpr.eqns
+                 if e.primitive.name == "shard_map").params["jaxpr"]
+
+    Literal = jax.core.Literal
+    deps = {v: frozenset([i]) for i, v in enumerate(inner.invars)}
+    for v in inner.constvars:
+        deps[v] = frozenset()
+    eqn_deps = []
+    for eqn in inner.eqns:
+        d = frozenset().union(
+            *[deps.get(a, frozenset()) for a in eqn.invars
+              if not isinstance(a, Literal)]) if eqn.invars else frozenset()
+        eqn_deps.append((eqn.primitive.name, d))
+        for ov in eqn.outvars:
+            deps[ov] = d
+    return plan, eqn_deps
+
+
+def _is_collective(name: str) -> bool:
+    return any(k in name for k in ("psum", "all_gather", "all_to_all",
+                                   "ppermute", "reduce_scatter"))
+
+
+@pytest.mark.parametrize("mode", BUCKET_MODES)
+def test_flush_ready_recovers_channel_overlap(mode):
+    """The tentpole acceptance, on the real sync dataflow: under
+    aggregate="channel" with channels < n_buckets, flush="ready" makes
+    the FIRST-emitted channel collective (a) appear in the jaxpr BEFORE
+    any op that reads the last bucket's leaves — the flush goes out
+    mid-exchange, before the later buckets are even packed — and (b)
+    depend ONLY on the first contiguous run of production-order buckets,
+    so the latency-hiding scheduler may start it while the remaining
+    backward compute runs. flush="step" structurally forfeits both: every
+    flush follows every pack, and round-robin puts a late bucket on the
+    channel that carries bucket 0."""
+    for flush in ("step", "ready"):
+        plan, eqn_deps = _sync_trace(mode, flush)
+        assert plan.n_buckets >= 3
+        last_leaves = set(plan.buckets[-1])
+        colls = [(i, d) for i, (n, d) in enumerate(eqn_deps)
+                 if _is_collective(n)]
+        assert colls, "sync emitted no collectives"
+        first_coll_idx, first_coll_deps = colls[0]
+        reads_last = [i for i, (n, d) in enumerate(eqn_deps)
+                      if set(d) & last_leaves and not _is_collective(n)]
+        if flush == "ready":
+            # (a) emitted before the FIRST op that touches the last
+            # bucket's leaves (its pack hasn't even been traced yet)
+            assert first_coll_idx < min(reads_last), \
+                (first_coll_idx, min(reads_last))
+            # (b) depends exactly on the first-produced bucket(s), never
+            # on the last bucket
+            assert set(first_coll_deps) == set(plan.buckets[0])
+            assert not set(first_coll_deps) & last_leaves
+        else:
+            # the barrier loop: the first flush comes after the last
+            # bucket's pack started
+            assert first_coll_idx > min(reads_last), \
+                (first_coll_idx, min(reads_last))
+            # round-robin: bucket 0's channel also waits on the last
+            # bucket (n_buckets=3, channels=2 -> channel 0 = {0, 2})
+            with_b0 = [d for _, d in colls
+                       if set(plan.buckets[0]) <= set(d)]
+            assert with_b0 and any(set(d) & last_leaves for d in with_b0)
+
+
+def test_flush_ready_first_flush_precedes_final_bucket_grad():
+    """The mid-backward emission property, stated positionally: drive
+    the staged emission API (pipeline.begin_emission / stage_slices /
+    finish_emission) with bucket "gradients" produced by a sequential
+    chain (g_b = tanh(g_{b-1}) — the backward-pass analogue: bucket b's
+    grads exist only after bucket b-1's), staging each one the moment it
+    is produced. Under flush="ready" the traced program emits the first
+    channel's collective BEFORE the eqn computing the LAST bucket's
+    gradient; under flush="step" every collective comes after it."""
+    from repro.core.backends import pipeline
+    n_buckets, n_channels, elems = 6, 2, 512
+    mesh = make_mesh((1,), ("data",))
+
+    def positions(flush):
+        comm = _comm("hadronio_overlap", channels=n_channels,
+                     aggregate="channel", flush=flush)
+
+        def body(x):
+            ctx = SyncContext.resolve(comm, ("data",), None)
+            st = pipeline.begin_emission(ctx, n_buckets, "all_reduce",
+                                         unpack=True)
+            g = x
+            for b in range(n_buckets):
+                g = jnp.tanh(g)            # bucket b's gradient
+                pipeline.stage_slices(st, b, g[None])
+            outs = pipeline.finish_emission(st)
+            return jnp.stack([o.reshape(-1) for o in outs])
+
+        f = compat.shard_map(body, mesh=mesh, in_specs=(P(),),
+                             out_specs=P())
+        jaxpr = jax.make_jaxpr(f)(jnp.ones((elems,), jnp.float32))
+        inner = next(e for e in jaxpr.jaxpr.eqns
+                     if e.primitive.name == "shard_map").params["jaxpr"]
+        names = [e.primitive.name for e in inner.eqns]
+        first_coll = min(i for i, n in enumerate(names) if "psum" in n)
+        last_grad = max(i for i, n in enumerate(names) if n == "tanh")
+        return first_coll, last_grad
+
+    first_ready, last_grad_ready = positions("ready")
+    assert first_ready < last_grad_ready, \
+        (first_ready, last_grad_ready)
+    first_step, last_grad_step = positions("step")
+    assert first_step > last_grad_step, (first_step, last_grad_step)
 
 
 @pytest.mark.parametrize("mode", BUCKET_MODES)
