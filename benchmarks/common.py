@@ -103,9 +103,10 @@ def slice_view(flat, comm):
     return flat.reshape(sp.n_slices, elems), sp
 
 
-def timeit(fn: Callable[[], object], *, warmup: int = 2, iters: int = 10
-           ) -> float:
-    """Median wall-clock seconds of fn() (which must block)."""
+def timeit_samples(fn: Callable[[], object], *, warmup: int = 2,
+                   iters: int = 10) -> list:
+    """Raw per-iteration wall-clock seconds of fn() (which must block) —
+    the sample stream the percentile reporting is built from."""
     for _ in range(warmup):
         fn()
     ts = []
@@ -113,7 +114,63 @@ def timeit(fn: Callable[[], object], *, warmup: int = 2, iters: int = 10
         t0 = time.perf_counter()
         fn()
         ts.append(time.perf_counter() - t0)
-    return float(np.median(ts))
+    return ts
+
+
+def timeit(fn: Callable[[], object], *, warmup: int = 2, iters: int = 10
+           ) -> float:
+    """Median wall-clock seconds of fn() (which must block)."""
+    return float(np.median(timeit_samples(fn, warmup=warmup, iters=iters)))
+
+
+# ---------------------------------------------------------------------------
+# Percentile reporting (the hhu benchmark methodology, arXiv:1910.02245:
+# latency distributions are characterized by p50/p99/p99.9, not means) —
+# shared by latency.py, gradsync.py and serving_rtt.py.
+# ---------------------------------------------------------------------------
+
+PERCENTILE_QS = (50.0, 99.0, 99.9)
+PERCENTILE_LABELS = {50.0: "p50", 99.0: "p99", 99.9: "p99.9"}
+
+
+def percentiles(samples, qs=PERCENTILE_QS) -> dict:
+    """``{q: value}`` over a possibly RAGGED sample collection (a flat
+    sequence, or nested per-loop/per-connection sequences of different
+    lengths — the multi-threaded benchmark's natural shape). Small
+    samples degrade gracefully to order statistics (linear
+    interpolation; one sample makes every percentile that sample).
+    Values are monotone in q by construction. Raises on empty input —
+    an empty distribution has no percentiles and silently reporting one
+    would fabricate a latency."""
+    def _flatten(s):
+        if isinstance(s, (list, tuple)) or (isinstance(s, np.ndarray)
+                                            and s.ndim > 0):
+            out = []
+            for item in s:
+                out.extend(_flatten(item))
+            return out
+        return [float(s)]
+
+    flat = np.asarray(_flatten(samples), np.float64)
+    if flat.size == 0:
+        raise ValueError("percentiles() of an empty sample set")
+    vals = np.percentile(flat, list(qs))
+    return dict(zip(qs, (float(v) for v in vals)))
+
+
+def percentile_rows(benchmark: str, figure: str, mode: str, msg_bytes: int,
+                    channels: int, samples, *, metric: str = "rtt",
+                    unit: str = "us", scale: float = 1e6,
+                    suffix: str = "", kind: str = "measured") -> list:
+    """One Row per percentile of ``samples`` (seconds; ``scale`` converts
+    to ``unit``), metric-named ``<metric>_p50[:<suffix>]`` etc. — the
+    shared shape of every RTT/step-time distribution table."""
+    ps = percentiles(samples)
+    sfx = f":{suffix}" if suffix else ""
+    return [Row(benchmark, figure, mode, msg_bytes, channels,
+                f"{metric}_{PERCENTILE_LABELS[q]}{sfx}", ps[q] * scale,
+                unit, kind)
+            for q in PERCENTILE_QS]
 
 
 def block(tree):

@@ -12,7 +12,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from benchmarks.common import Row, block, derived_collective_time, timeit
+from benchmarks.common import (Row, block, derived_collective_time,
+                               percentile_rows, timeit_samples)
 from repro import compat
 from repro.core.backends import available_modes, get_backend
 from repro.configs.base import CommConfig, RunConfig, ShapeConfig
@@ -71,7 +72,8 @@ def run(mesh=None, *, arch: str = "qwen1.5-4b-reduced",
                 state, m = jitted(state, batch)
                 jax.block_until_ready(m["loss"])
 
-            t = timeit(one, warmup=1, iters=iters)
+            samples = timeit_samples(one, warmup=1, iters=iters)
+            t = float(np.median(samples))
             rows.append(Row("gradsync", "table-gradsync", mode, 0, n_dev,
                             "emitted_collective_ops", emitted.total_ops,
                             "ops", "derived"))
@@ -86,6 +88,10 @@ def run(mesh=None, *, arch: str = "qwen1.5-4b-reduced",
                             "derived"))
             rows.append(Row("gradsync", "table-gradsync", mode, 0, n_dev,
                             "step_time", t * 1e3, "ms", "measured"))
+            rows.extend(percentile_rows("gradsync", "table-gradsync", mode,
+                                        0, n_dev, samples,
+                                        metric="step_time", unit="ms",
+                                        scale=1e3))
             rows.append(Row("gradsync", "table-gradsync", mode, 0, n_dev,
                             "sync_v5e_model",
                             derived_collective_time(stats) * 1e3, "ms",
@@ -132,11 +138,13 @@ def _flush_evidence_rows(mesh, cfg, shape, n_dev: int,
                     (n_dev, shape.seq_len), jnp.int32)}
             text = jax.jit(step_fn).lower(state_sds, batch_sds).as_text()
             emitted = hlo.stablehlo_collective_stats(text)
-            first, total = hlo.first_collective_position(text)
+            pos = hlo.first_collective_position(text)
             rows.append(Row("gradsync", "flush-evidence", mode, 0, 2,
                             f"emitted_collective_ops:{flush}",
                             emitted.total_ops, "ops", "derived"))
-            rows.append(Row("gradsync", "flush-evidence", mode, 0, 2,
-                            f"first_collective_pos:{flush}",
-                            first / max(total, 1), "frac", "derived"))
+            if pos is not None:          # None = no collectives emitted
+                first, total = pos
+                rows.append(Row("gradsync", "flush-evidence", mode, 0, 2,
+                                f"first_collective_pos:{flush}",
+                                first / max(total, 1), "frac", "derived"))
     return rows

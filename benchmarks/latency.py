@@ -20,7 +20,8 @@ import numpy as np
 from jax.sharding import PartitionSpec as P
 
 from benchmarks.common import (Row, block, derived_collective_time,
-                               slice_view, timeit)
+                               percentile_rows, slice_view, timeit,
+                               timeit_samples)
 from repro import compat
 from repro.configs.base import CommConfig
 from repro.core.backends import pipeline
@@ -264,12 +265,16 @@ def run(mesh=None, *, msg_sizes=MSG_SIZES, channels=CHANNELS,
             lowered = fn.lower(*([jax.ShapeDtypeStruct((n_dev, elems),
                                                        jnp.float32)] * ch))
             stats = hlo.stablehlo_collective_stats(lowered.as_text())
-            t = timeit(lambda: block(fn(*xs)), iters=iters)
+            samples = timeit_samples(lambda: block(fn(*xs)), iters=iters)
+            t = float(np.median(samples))
             if msg == max(msg_sizes):
                 rtts_at_max[ch] = t
             rtt_us = t * 1e6
             rows.append(Row("latency", "fig3/5/7", "hadronio", msg, ch,
                             "rtt", rtt_us, "us", "measured"))
+            # the hhu-benchmark percentile view of the same sample stream
+            rows.extend(percentile_rows("latency", "fig3/5/7", "hadronio",
+                                        msg, ch, samples))
             rows.append(Row("latency", "fig3/5/7", "hadronio", msg, ch,
                             "emitted_collective_ops", stats.total_ops,
                             "ops", "derived"))

@@ -7,6 +7,8 @@ Benchmarks (see DESIGN.md §6):
   latency     Fig. 3/5/7 — ping-pong RTT vs channels x msg size
   throughput  Fig. 4/6/8 — aggregated-stream goodput vs channels x msg size
   gradsync    (new) per-mode collective ops/bytes on real model grads
+  serving_rtt Figs. 5-8 (multi-threaded) — uni/bi RTT percentiles through
+              the EventLoopGroup (event loops x connections x msg size)
   roofline    §Roofline — three-term table from the dry-run artifacts
 """
 from benchmarks import common
@@ -19,7 +21,7 @@ import time                    # noqa: E402
 
 from benchmarks.common import write_json, write_rows   # noqa: E402
 
-BENCHES = ("latency", "throughput", "gradsync", "roofline")
+BENCHES = ("latency", "throughput", "gradsync", "serving_rtt", "roofline")
 
 
 def main() -> int:
@@ -46,6 +48,8 @@ def main() -> int:
             kw = {"msg_sizes": [16, 1024], "channels": [1, 4], "iters": 3}
         if args.quick and name == "gradsync":
             kw = {"iters": 2}
+        if args.quick and name == "serving_rtt":
+            kw = {"smoke": True, "iters": 3}
         rows.extend(mod.run(**kw))
         print(f"# {name}: {time.time() - t0:.1f}s", file=sys.stderr)
     text = write_rows(rows, args.csv or None)

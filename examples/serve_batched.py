@@ -1,8 +1,13 @@
 """Batched serving example — the inference-side netty analogue: many
-concurrent "connections" (requests) multiplexed onto one engine, with
-round-robin admission and mixed prompt lengths.
+concurrent "connections" (requests) multiplexed onto an EventLoopGroup,
+round-robin admission, mixed prompt lengths, continuous batching at
+flush boundaries, and the serving collectives (KV gathering writes,
+tensor-parallel logit reductions) flowing through the configured
+CommBackend wire.
 
-  PYTHONPATH=src python examples/serve_batched.py [--arch rwkv6-7b-reduced]
+  PYTHONPATH=src python examples/serve_batched.py \
+      [--arch qwen2-0.5b-reduced] [--event-loops 2] [--poll adaptive] \
+      [--comm-mode hadronio]
 """
 import argparse
 import time
@@ -11,8 +16,10 @@ import jax
 import numpy as np
 
 from repro.configs.registry import get_config
+from repro.configs.base import CommConfig, ServeConfig
+from repro.core.backends import available_modes
 from repro.models import api
-from repro.serving import DecodeEngine, Request
+from repro.serving import Request, make_engine_group
 
 
 def main():
@@ -21,12 +28,21 @@ def main():
     p.add_argument("--requests", type=int, default=12)
     p.add_argument("--max-batch", type=int, default=4)
     p.add_argument("--max-new", type=int, default=16)
+    p.add_argument("--event-loops", type=int, default=2)
+    p.add_argument("--poll", default="adaptive", choices=ServeConfig.POLLS)
+    p.add_argument("--comm-mode", default="hadronio",
+                   choices=available_modes())
+    p.add_argument("--channels", type=int, default=4)
     args = p.parse_args()
 
     cfg = get_config(args.arch)
     params = api.init(jax.random.PRNGKey(0), cfg)
-    engine = DecodeEngine(cfg, params, max_batch=args.max_batch,
-                          max_len=256)
+    serve = ServeConfig(
+        event_loops=args.event_loops, poll=args.poll,
+        max_batch=args.max_batch, max_len=256,
+        comm=CommConfig(mode=args.comm_mode, channels=args.channels,
+                        hierarchical=False))
+    group = make_engine_group(cfg, params, serve)
 
     rng = np.random.default_rng(0)
     reqs = [Request(uid=i,
@@ -37,11 +53,19 @@ def main():
             for i in range(args.requests)]
 
     t0 = time.time()
-    results = engine.generate(reqs)
+    group.submit(reqs)
+    results = sorted(group.run(threads=args.event_loops > 1),
+                     key=lambda r: r.uid)
     dt = time.time() - t0
     n_tok = sum(len(r.tokens) for r in results)
+    st = group.poll_stats()
     print(f"{len(results)} requests -> {n_tok} tokens in {dt:.2f}s "
-          f"({n_tok/dt:.1f} tok/s on {jax.default_backend()})")
+          f"({n_tok/dt:.1f} tok/s on {jax.default_backend()}) | "
+          f"{args.event_loops} loops, poll={args.poll} "
+          f"(spins={st.spins} parks={st.parks}), comm={args.comm_mode}")
+    for loop in group.loops:
+        print(f"  loop {loop.index}: owns channels {loop.channels}, "
+              f"served {len(loop.results)}")
     for r in results[:5]:
         print(f"  uid={r.uid:2d} len={r.prompt_len:2d} "
               f"-> {r.tokens[:10].tolist()}")

@@ -294,6 +294,60 @@ class CommConfig:
 
 
 @dataclass(frozen=True)
+class ServeConfig:
+    """Event-loop serving (the paper's §IV benchmark topology, applied to
+    inference): an ``EventLoopGroup`` of ``event_loops`` loops, each
+    owning a DISJOINT contiguous run of the ``comm.channels`` pool
+    (Ibdxnet's per-thread connection ownership) and a run queue of
+    in-flight requests; new requests are admitted at flush boundaries
+    (continuous batching). ``poll`` mirrors hadroNIO's completion
+    polling:
+
+      busy     — spin on readiness; lowest latency, one core per loop
+                 (the paper's busy-polling optimization).
+      park     — block until complete (the epoll / selector.select
+                 fallback).
+      adaptive — spin for ``spin_us`` then park (hadroNIO's bounded
+                 busy-poll before yielding).
+
+    ``comm`` is the SAME config the training path uses — serving
+    collectives (KV gathering writes, tensor-parallel logit reductions)
+    flow through the registered CommBackend's wire path, so
+    mode/channels/slice_bytes/aggregate/flush all apply to inference
+    traffic (see docs/SERVING.md). Serving payloads are activations, not
+    gradients: wire compression (an error-feedback feature) is rejected
+    by the dispatch layer.
+    """
+
+    event_loops: int = 1
+    poll: str = "busy"                 # busy | park | adaptive
+    spin_us: float = 50.0              # adaptive: spin budget before parking
+    max_batch: int = 8                 # decode slots per event loop
+    max_len: int = 256                 # prompt + generation bound (KV alloc)
+    comm: CommConfig = field(default_factory=CommConfig)
+
+    POLLS = ("busy", "park", "adaptive")
+
+    def __post_init__(self):
+        if self.event_loops < 1:
+            raise ValueError(
+                f"serve.event_loops must be >= 1 (got {self.event_loops})")
+        if self.poll not in self.POLLS:
+            raise ValueError(
+                f"unknown serve.poll {self.poll!r}: expected one of "
+                f"{self.POLLS} (busy spins, park blocks, adaptive spins "
+                f"for spin_us then parks)")
+        if self.event_loops > self.comm.channels:
+            raise ValueError(
+                f"serve.event_loops={self.event_loops} exceeds "
+                f"comm.channels={self.comm.channels}: each event loop "
+                "must OWN a disjoint non-empty run of the channel pool "
+                "(raise comm.channels or lower event_loops)")
+        if self.spin_us < 0:
+            raise ValueError(f"serve.spin_us must be >= 0 ({self.spin_us})")
+
+
+@dataclass(frozen=True)
 class RunConfig:
     """Everything a launcher needs beyond the model itself."""
 

@@ -61,10 +61,16 @@ class SyncContext:
     ef: Optional[PyTree] = None   # error-feedback residual (local): an
     #                           array (global ring keying) or a pytree
     #                           keyed by bucket id (per-bucket keying)
+    channel_indices: Optional[tuple] = None   # channel-affinity override:
+    #                           the disjoint run of the global channel
+    #                           pool this emission may use (set by the
+    #                           event-loop serving subsystem; None = the
+    #                           full comm.channels pool)
 
     @classmethod
     def resolve(cls, comm: CommConfig, data_axis, pod_axis: Optional[str],
-                ef: Optional[PyTree] = None) -> "SyncContext":
+                ef: Optional[PyTree] = None,
+                channel_indices: Optional[tuple] = None) -> "SyncContext":
         """``data_axis`` may be one axis name or a tuple of names (a
         flattened DP ring). Pod-awareness applies only when the config
         asks for hierarchical collectives AND a pod axis exists; in flat
@@ -73,11 +79,11 @@ class SyncContext:
         data = data[0] if len(data) == 1 else data
         if pod_axis is None:
             flat = data if isinstance(data, tuple) else (data,)
-            return cls(comm, None, data, flat, ef)
+            return cls(comm, None, data, flat, ef, channel_indices)
         flat = (pod_axis,) + (data if isinstance(data, tuple) else (data,))
         if comm.hierarchical:
-            return cls(comm, pod_axis, data, flat, ef)
-        return cls(comm, None, data, flat, ef)
+            return cls(comm, pod_axis, data, flat, ef, channel_indices)
+        return cls(comm, None, data, flat, ef, channel_indices)
 
     @property
     def data_axes_tuple(self) -> tuple:
@@ -165,6 +171,27 @@ class CommBackend(abc.ABC):
     def validate(self, comm: CommConfig) -> None:
         """Reject config combinations this strategy cannot honor (called
         at step-build time, before any tracing)."""
+
+    # -- serving wire path ----------------------------------------------
+
+    def serve_emit(self, flat: jax.Array, ctx: SyncContext,
+                   kind: str) -> jax.Array:
+        """Emit ONE flat f32 serving payload (a tensor-parallel partial
+        logit sum, or a coalesced KV-cache gathering write) through this
+        strategy's wire path — the inference-side transparency boundary:
+        ``serving/dispatch.py`` never branches on mode names, it calls
+        this. Default: the staged slice-pipeline emission the
+        hadronio-family backends share (``pipeline.emit_flat`` — ring
+        slices through the channel schedule at the configured
+        aggregate/flush granularity, honoring ``ctx.channel_indices``
+        affinity). ``kind`` is ``"all_reduce"`` (sum over the ring; the
+        result is replicated) or ``"all_gather"`` (peer-major
+        concatenation: the result's leading factor is the ring size).
+        All strategies return bit-identical values — only the emission
+        structure differs (conformance-tested)."""
+        from repro.core.backends import pipeline
+        group = jax.lax.psum(1, ctx.flat_axes) if kind == "all_gather" else 1
+        return pipeline.emit_flat(flat, ctx, kind, group=group)
 
     # -- reconstruction / resharding hooks ------------------------------
 

@@ -29,3 +29,9 @@ class GspmdBackend(CommBackend):
                 "gspmd cannot honor wire compression "
                 f"(compress={comm.compress!r}): XLA owns the collectives "
                 "— there is no manual wire stage; use a TAC mode")
+
+    def serve_emit(self, flat, ctx, kind):
+        """Serving reference path: one whole-payload collective, XLA owns
+        the schedule (no ring-buffer slicing, no channel pool)."""
+        from repro.core.backends import pipeline
+        return pipeline.raw_emit(flat, ctx, kind)

@@ -65,12 +65,19 @@ from repro.core.selector import barrier
 
 from repro.core.backends.base import SyncContext
 
-_KINDS = ("all_reduce", "reduce_scatter")
+_KINDS = ("all_reduce", "reduce_scatter", "all_gather")
 
 
 def channels_for(ctx: SyncContext, n_slices: int) -> list[CommChannel]:
     """The connection pool: at most ``comm.channels`` workers, pod-aware
-    when the context resolved a pod axis."""
+    when the context resolved a pod axis. A context carrying
+    ``channel_indices`` (the event-loop channel-affinity API) gets
+    exactly that disjoint run of the global pool instead — the emitting
+    event loop OWNS those channels (serving/event_loop.py)."""
+    if ctx.channel_indices:
+        idx = tuple(ctx.channel_indices)[:max(1, n_slices)]
+        return make_channels(len(idx), ctx.flat_axes, pod_axis=ctx.pod_axis,
+                             data_axis=ctx.data_axis, indices=idx)
     n = max(1, min(ctx.comm.channels, n_slices))
     return make_channels(n, ctx.flat_axes, pod_axis=ctx.pod_axis,
                          data_axis=ctx.data_axis)
@@ -187,6 +194,21 @@ def _flush_channel(st: EmitState, c: int) -> None:
             st.outs[i] = jax.lax.slice_in_dim(
                 red, off, off + f.shape[0]).reshape(st.staged[i].shape)
             off += f.shape[0]
+    elif st.kind == "all_gather":
+        # the serving gathering write: ONE coalesced gather per channel;
+        # the tiled result is peer-major over the whole coalesced buffer,
+        # so item i's gathered bytes are the same column range of every
+        # peer block (the scattering-read carve, no interleave needed)
+        buf = flats[0] if len(flats) == 1 else jnp.concatenate(flats)
+        g = st.chans[c].all_gather(buf)
+        g = (_unpack_flush(g, st.ctx.comm) if st.unpack
+             else g).reshape(st.group, -1)
+        off = 0
+        for i, f in zip(idx, flats):
+            n = f.shape[0]
+            st.outs[i] = jax.lax.slice(g, (0, off),
+                                       (st.group, off + n)).reshape(-1)
+            off += n
     else:
         buf = interleave_for_scatter(flats, st.group)
         sh = st.chans[c].reduce_scatter(buf)
@@ -240,8 +262,12 @@ def stage_slices(st: EmitState, i: int, wire: jax.Array) -> list:
         x = wire
         if ch.index in st.last:
             x, _ = barrier(x, st.last[ch.index])
-        y = ch.all_reduce(x) if st.kind == "all_reduce" \
-            else ch.reduce_scatter(x)
+        if st.kind == "all_reduce":
+            y = ch.all_reduce(x)
+        elif st.kind == "all_gather":
+            y = ch.all_gather(x.reshape(-1))
+        else:
+            y = ch.reduce_scatter(x)
         st.last[ch.index] = y
         st.outs[i] = _unpack_flush(y, st.ctx.comm) if st.unpack else y
         if st.fills[c].ready:
@@ -313,6 +339,59 @@ def emit_through_channels(items: list, ctx: SyncContext, kind: str,
     for i, x in enumerate(items):
         stage_slices(st, i, x)
     return finish_emission(st)
+
+
+def emit_flat(flat: jax.Array, ctx: SyncContext, kind: str, *,
+              group: int = 1) -> jax.Array:
+    """The serving wire path: carve ONE flat f32 payload (a partial logit
+    sum, a coalesced KV-cache write) into ring-buffer slices and emit
+    them through the staged channel schedule — the same gathering write
+    the gradient path uses, applied to inference traffic. ``kind`` is
+    ``"all_reduce"`` (returns the summed payload, ``flat``'s own shape)
+    or ``"all_gather"`` (``group`` = ring size; returns the peer-major
+    concatenation, shape ``(group * len,)``). Zero-padding added by the
+    slice plan is trimmed from the result (per peer block for gathers),
+    so callers see exactly their payload."""
+    assert flat.ndim == 1, flat.shape
+    assert kind in ("all_reduce", "all_gather"), \
+        f"serving payloads are replicated or gathered, never scattered: {kind}"
+    from repro.core.ring_buffer import plan_slices
+    n_elems = flat.shape[0]
+    itemsize = jnp.dtype(flat.dtype).itemsize
+    sp = plan_slices(n_elems * itemsize, ctx.comm)
+    elems = max(1, sp.slice_bytes // itemsize)
+    # the plan's slice count IS the emitted-collective prediction
+    # (dispatch.logit_payload_slices, evidence rows) — never recompute it
+    n = sp.n_slices
+    pad = n * elems - n_elems
+    assert pad >= 0, (sp, n_elems)
+    if pad:
+        flat = jnp.pad(flat, (0, pad))
+    slices = flat.reshape(n, elems)
+    st = begin_emission(ctx, n, kind, group=group)
+    for i in range(n):
+        stage_slices(st, i, slices[i])
+    outs = finish_emission(st)
+    if kind == "all_gather":
+        g = outs[0].reshape(group, -1) if len(outs) == 1 else \
+            jnp.concatenate([o.reshape(group, -1) for o in outs], axis=1)
+        return g[:, :n_elems].reshape(-1)
+    out = outs[0].reshape(-1) if len(outs) == 1 else \
+        jnp.concatenate([o.reshape(-1) for o in outs])
+    return out[:n_elems]
+
+
+def raw_emit(flat: jax.Array, ctx: SyncContext, kind: str) -> jax.Array:
+    """The unsliced serving emission (gspmd / sockets / vma overrides of
+    ``CommBackend.serve_emit``): one collective for the whole payload —
+    per-buffer sends with no ring-buffer aggregation. Bit-identical
+    values to :func:`emit_flat` (summing per element and concatenating
+    peer-major commute with slicing); only the emission structure
+    differs."""
+    if kind == "all_reduce":
+        return jax.lax.psum(flat, ctx.flat_axes)
+    assert kind == "all_gather", kind
+    return jax.lax.all_gather(flat, ctx.flat_axes, axis=0, tiled=True)
 
 
 def scatter_group(ctx: SyncContext):

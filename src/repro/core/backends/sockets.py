@@ -29,3 +29,9 @@ class SocketsBackend(CommBackend):
         synced = jax.tree.map(lambda g: jax.lax.psum(g, ctx.flat_axes),
                               grads)
         return SyncResult(synced, None, None, None)
+
+    def serve_emit(self, flat, ctx, kind):
+        """Per-buffer serving sends: one unsliced collective per payload
+        tensor — the plain-sockets baseline, no aggregation."""
+        from repro.core.backends import pipeline
+        return pipeline.raw_emit(flat, ctx, kind)

@@ -43,3 +43,9 @@ class VmaBackend(CommBackend):
             return SyncResult(synced, None, plan, new_ef)
         red = jax.lax.psum(flat, ctx.flat_axes)
         return SyncResult(agg.unpack(red, plan, grads), None, plan, None)
+
+    def serve_emit(self, flat, ctx, kind):
+        """Monolithic serving send: the payload arrives pre-flattened, so
+        the libvma one-big-psum schedule IS the raw whole-payload
+        collective (coincides with sockets for a single buffer)."""
+        return pipeline.raw_emit(flat, ctx, kind)

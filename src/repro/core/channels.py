@@ -97,7 +97,17 @@ class ChannelFill:
 
 
 def make_channels(n: int, axes: tuple, *, pod_axis: Optional[str] = None,
-                  data_axis: Any = None) -> list[CommChannel]:
+                  data_axis: Any = None,
+                  indices: Optional[tuple] = None) -> list[CommChannel]:
+    """Build the channel pool. ``indices`` is the channel-affinity API
+    (the event-loop serving subsystem, serving/event_loop.py): an event
+    loop that OWNS a disjoint contiguous run of the global pool passes
+    its run here and gets exactly those channels — ``n`` is ignored, the
+    pool is the affinity set (Ibdxnet's per-thread connection ownership,
+    arXiv:1812.01963 — no two loops ever emit on the same channel)."""
+    if indices is not None:
+        return [CommChannel(int(i), axes, pod_axis, data_axis)
+                for i in indices]
     return [CommChannel(i, axes, pod_axis, data_axis) for i in range(n)]
 
 

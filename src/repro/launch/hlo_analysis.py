@@ -129,21 +129,24 @@ def stablehlo_collective_stats(mlir_text: str) -> CollectiveStats:
 _MLIR_ANY_OP_RE = re.compile(r"stablehlo\.\w+")
 
 
-def first_collective_position(mlir_text: str) -> tuple:
+def first_collective_position(mlir_text: str):
     """Emission-position evidence: ``(first, total)`` where ``first`` is
     the index of the FIRST collective among all emitted StableHLO ops
-    and ``total`` the op count (``first == total`` when no collective is
-    emitted). The flush-when-ready schedule (``comm.flush="ready"``)
-    moves the first gathering-write flush ahead of the later buckets'
-    pack ops, so ``first/total`` drops measurably vs ``"step"`` — the
-    §III-B flush-on-writable property read off the emitted program."""
+    and ``total`` the op count — or ``None`` when the program emits no
+    collective at all (a serving jaxpr on 1 device, a local decode step:
+    there is no emission position to report, and callers must not treat
+    an arbitrary sentinel as one). The flush-when-ready schedule
+    (``comm.flush="ready"``) moves the first gathering-write flush ahead
+    of the later buckets' pack ops, so ``first/total`` drops measurably
+    vs ``"step"`` — the §III-B flush-on-writable property read off the
+    emitted program."""
     first, total = None, 0
     for line in mlir_text.splitlines():
         for m in _MLIR_ANY_OP_RE.finditer(line):
             if first is None and _MLIR_OP_RE.match(m.group(0)):
                 first = total
             total += 1
-    return (total if first is None else first), total
+    return None if first is None else (first, total)
 
 
 def collective_stats(hlo_text: str) -> CollectiveStats:

@@ -1,9 +1,14 @@
-"""Serving launcher: load (or init) params, run the batched decode engine.
+"""Serving launcher: load (or init) params, run the event-loop serving
+subsystem (EventLoopGroup of decode engines over the CommBackend wire).
 
 CLI::
 
   python -m repro.launch.serve --arch qwen2-0.5b-reduced --requests 8 \
       --max-new 16 --ckpt /tmp/run1        # params from a train checkpoint
+
+  # paper §IV topology: 2 event loops, busy polling, hadronio wire
+  python -m repro.launch.serve --arch qwen2-0.5b-reduced --requests 16 \
+      --event-loops 2 --poll busy --comm-mode hadronio --channels 4
 """
 from __future__ import annotations
 
@@ -14,9 +19,11 @@ import jax
 import numpy as np
 
 from repro.configs.registry import get_config
+from repro.configs.base import CommConfig, ServeConfig
 from repro.checkpoint import CheckpointStore
+from repro.core.backends import available_modes
 from repro.models import api
-from repro.serving import DecodeEngine, Request
+from repro.serving import Request, make_engine_group
 
 
 def load_params(args, cfg):
@@ -45,12 +52,37 @@ def main() -> int:
     p.add_argument("--temperature", type=float, default=0.0)
     p.add_argument("--ckpt", default="")
     p.add_argument("--seed", type=int, default=0)
+    # the event-loop serving subsystem (ServeConfig)
+    p.add_argument("--event-loops", type=int, default=1,
+                   help="EventLoopGroup size; each loop owns a disjoint "
+                        "run of the channel pool")
+    p.add_argument("--poll", default="busy",
+                   choices=ServeConfig.POLLS,
+                   help="completion polling: busy spins, park blocks, "
+                        "adaptive spins then parks (hadroNIO §IV-B)")
+    p.add_argument("--comm-mode", default="gspmd",
+                   choices=available_modes(),
+                   help="CommBackend the serving collectives (KV gathers, "
+                        "TP logit reductions) flow through")
+    p.add_argument("--channels", type=int, default=4,
+                   help="global CommChannel pool partitioned across loops")
+    p.add_argument("--aggregate", default="slice",
+                   choices=CommConfig.AGGREGATES)
+    p.add_argument("--flush", default="step", choices=CommConfig.FLUSHES)
     args = p.parse_args()
 
     cfg = get_config(args.arch)
     params = load_params(args, cfg)
-    engine = DecodeEngine(cfg, params, max_batch=args.batch,
-                          max_len=args.max_len)
+    # no silent clamping: ServeConfig raises its own clear error when
+    # event_loops > channels (each loop must own a disjoint run)
+    serve = ServeConfig(
+        event_loops=args.event_loops, poll=args.poll,
+        max_batch=args.batch, max_len=args.max_len,
+        comm=CommConfig(mode=args.comm_mode, channels=args.channels,
+                        aggregate=args.aggregate, flush=args.flush,
+                        hierarchical=False))
+    group = make_engine_group(cfg, params, serve, seed=args.seed)
+
     rng = np.random.default_rng(args.seed)
     reqs = [Request(uid=i,
                     prompt=rng.integers(0, cfg.vocab_size,
@@ -58,11 +90,19 @@ def main() -> int:
                     max_new=args.max_new, temperature=args.temperature)
             for i in range(args.requests)]
     t0 = time.time()
-    results = engine.generate(reqs)
+    group.submit(reqs)
+    results = sorted(group.run(threads=args.event_loops > 1),
+                     key=lambda r: r.uid)
     dt = time.time() - t0
     tok = sum(len(r.tokens) for r in results)
+    st = group.poll_stats()
     print(f"[serve] {len(results)} requests, {tok} tokens in {dt:.2f}s "
-          f"({tok / dt:.1f} tok/s)")
+          f"({tok / dt:.1f} tok/s) | {serve.event_loops} event loop(s), "
+          f"poll={serve.poll} (spins={st.spins} parks={st.parks}), "
+          f"comm={args.comm_mode}")
+    for loop in group.loops:
+        print(f"  loop {loop.index}: channels={loop.channels} "
+              f"results={len(loop.results)}")
     for r in results[:4]:
         print(f"  uid={r.uid} prompt_len={r.prompt_len} -> "
               f"{r.tokens[:12].tolist()}")

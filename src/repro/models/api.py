@@ -142,7 +142,12 @@ def loss(params: PyTree, batch: dict, cfg: ModelConfig,
 
 
 def prefill(params: PyTree, batch: dict, cfg: ModelConfig,
-            shard_fn: ShardFn = no_shard):
+            shard_fn: ShardFn = no_shard, logits_fn=None):
+    """``logits_fn`` overrides the LM head (signature of
+    :func:`repro.models.layers.lm_logits`) — the serving dispatch layer
+    passes a tensor-parallel head whose partial-logit reduction flows
+    through the registered CommBackend wire (serving/dispatch.py)."""
+    head = logits_fn or lm_logits
     dtype = jnp.dtype(cfg.compute_dtype)
     if cfg.family == "encdec":
         enc_out = whi.encode(params, batch["frames"].astype(dtype), cfg,
@@ -154,7 +159,7 @@ def prefill(params: PyTree, batch: dict, cfg: ModelConfig,
                                     cross_k=cross_k, cross_v=cross_v,
                                     shard_fn=shard_fn)
         cache = {"self": cache, "cross_k": cross_k, "cross_v": cross_v}
-        logits = lm_logits(params["embed"], x[:, -1:], shard_fn)[:, 0]
+        logits = head(params["embed"], x[:, -1:], shard_fn)[:, 0]
         return logits, cache
 
     x, _ = _embed_inputs(params, batch, cfg, dtype)
@@ -166,7 +171,7 @@ def prefill(params: PyTree, batch: dict, cfg: ModelConfig,
         x_last = x[b_idx, batch["last_pos"]][:, None]
     else:
         x_last = x[:, -1:]
-    logits = lm_logits(params["embed"], x_last, shard_fn)[:, 0]
+    logits = head(params["embed"], x_last, shard_fn)[:, 0]
     return logits, cache
 
 
@@ -176,8 +181,10 @@ def prefill(params: PyTree, batch: dict, cfg: ModelConfig,
 
 
 def decode_step(params: PyTree, cache: PyTree, batch: dict, cfg: ModelConfig,
-                shard_fn: ShardFn = no_shard):
-    """One token for the whole batch. batch: {"token": (B,), "pos": ()}."""
+                shard_fn: ShardFn = no_shard, logits_fn=None):
+    """One token for the whole batch. batch: {"token": (B,), "pos": ()}.
+    ``logits_fn`` overrides the LM head exactly as in :func:`prefill`."""
+    head = logits_fn or lm_logits
     dtype = jnp.dtype(cfg.compute_dtype)
     pos = batch["pos"]
     tok = batch["token"][:, None]                        # (B,1)
@@ -194,7 +201,7 @@ def decode_step(params: PyTree, cache: PyTree, batch: dict, cfg: ModelConfig,
                                        cross_v=cache["cross_v"],
                                        shard_fn=shard_fn,
                                        cache=cache["self"], pos=pos)
-        logits = lm_logits(params["embed"], x, shard_fn)[:, 0]
+        logits = head(params["embed"], x, shard_fn)[:, 0]
         new_cache = dict(cache, self=new_self)
         return logits, new_cache
 
@@ -204,7 +211,7 @@ def decode_step(params: PyTree, cache: PyTree, batch: dict, cfg: ModelConfig,
     x, new_cache, _ = _trunk(params, x, cfg, mode="decode",
                              shard_fn=shard_fn, cache=cache, pos=pos)
     x = apply_norm(params["ln_f"], x, cfg.norm_kind)
-    logits = lm_logits(params["embed"], x, shard_fn)[:, 0]
+    logits = head(params["embed"], x, shard_fn)[:, 0]
     return logits, new_cache
 
 

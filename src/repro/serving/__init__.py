@@ -1,3 +1,8 @@
-from repro.serving.engine import DecodeEngine, Request, Result
+from repro.serving.engine import (DecodeEngine, Request, Result,
+                                  make_engine_group)
+from repro.serving.event_loop import (EventLoop, EventLoopGroup, Poller,
+                                      PollStats, channel_affinity)
 
-__all__ = ["DecodeEngine", "Request", "Result"]
+__all__ = ["DecodeEngine", "Request", "Result", "make_engine_group",
+           "EventLoop", "EventLoopGroup", "Poller", "PollStats",
+           "channel_affinity"]

@@ -1,0 +1,190 @@
+"""Serve-step dispatch: inference collectives through the CommBackend wire.
+
+The training path's transparency boundary (callers never branch on mode
+names; the registered backend owns the wire) applied to serving. A
+:class:`ServeStep` is a pair of jitted functions with the engine's exact
+call signatures — ``prefill(params, batch)`` / ``decode(params, cache,
+dec)`` — that run inside a fully-manual ``shard_map`` over the mesh and
+emit their collectives via ``CommBackend.serve_emit``:
+
+* **prefill** — batch-sharded: each ring peer prefills its contiguous
+  run of the request batch locally, then every KV-cache leaf plus the
+  last-token logits are coalesced into ONE flat wire payload and
+  all-gathered — the serving gathering write (paper §III-C applied to
+  inference: many small cache buffers become one large request), carved
+  back per leaf with the batch dimension re-merged peer-major.
+* **decode** — tensor-parallel LM head: every peer runs the (replicated)
+  trunk, computes partial logits from its contiguous ``d_model`` shard,
+  and the partial-logit sum is all-reduced — the serving logit
+  reduction. The reduction flows through the SAME staged emission API
+  the gradient path uses (``pipeline.begin_emission`` / ``stage_slices``
+  / ``flush_ready`` via ``pipeline.emit_flat``), so ``comm.mode`` /
+  ``channels`` / ``slice_bytes`` / ``aggregate`` / ``flush`` all shape
+  serving traffic, and an event loop's channel affinity
+  (``ctx.channel_indices``) bounds which connections it may emit on.
+
+All registered modes return bit-identical logits (per-element sums and
+peer-major gathers commute with slicing — conformance-tested in
+``tests/test_backend_conformance.py``); only the emitted program
+structure differs. Serving payloads are activations: wire compression is
+an error-feedback (training-state) feature and is rejected here.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro import compat
+from repro.configs.base import CommConfig, ModelConfig
+from repro.core.backends import get_backend
+from repro.core.backends.base import SyncContext
+from repro.launch.mesh import make_mesh
+from repro.models import api
+from repro.models.layers import no_shard
+
+PyTree = Any
+
+
+class ServeStep(NamedTuple):
+    """Jitted serve entry points (engine-compatible signatures) plus the
+    resolved topology facts the engine needs for batch padding."""
+    prefill: Callable             # (params, batch) -> (logits, cache)
+    decode: Callable              # (params, cache, dec) -> (logits, cache)
+    n_shards: int                 # ring size: batch rows padded to a multiple
+    mesh: Any
+    comm: CommConfig
+    channel_indices: Optional[tuple]
+
+
+def validate_serve_comm(comm: CommConfig):
+    """Serving-path config validation; returns the backend."""
+    backend = get_backend(comm.mode)
+    if comm.compress != "none":
+        raise ValueError(
+            f"serving cannot honor compress={comm.compress!r}: the wire "
+            "carries activations (logit partial sums, KV gathers), not "
+            "gradients — there is no error-feedback state to make a lossy "
+            "codec unbiased; use compress='none'")
+    return backend
+
+
+def make_serve_step(cfg: ModelConfig, comm: CommConfig, mesh=None, *,
+                    channel_indices: Optional[tuple] = None) -> ServeStep:
+    """Build the TAC serve step for one (model, comm, mesh, affinity)
+    combination. ``channel_indices`` is the emitting event loop's owned
+    run of the global channel pool (None = the full pool)."""
+    backend = validate_serve_comm(comm)
+    if mesh is None:
+        mesh = make_mesh((jax.device_count(),), ("data",))
+    axes = tuple(mesh.axis_names)
+    n_shards = int(np.prod([mesh.shape[a] for a in axes]))
+    if n_shards > 1 and cfg.family in ("ssm", "hybrid"):
+        raise ValueError(
+            f"{cfg.family} serving is single-shard only: recurrent state "
+            "caches carry no uniform batch axis to re-merge after the "
+            "gathering write (attention-family KV caches do)")
+    chans = tuple(channel_indices) if channel_indices is not None else None
+    ctx = SyncContext.resolve(comm, axes, None, channel_indices=chans)
+
+    # -- tensor-parallel LM head (the serving logit reduction) ----------
+
+    def tp_head(embed: dict, x: jax.Array, shard_fn=no_shard) -> jax.Array:
+        w = embed.get("out")
+        if w is None:
+            w = embed["tok"].T                       # tied: (d, V)
+        d = x.shape[-1]
+        ds = -(-d // n_shards)                       # ceil: zero-pad shards
+        pad = ds * n_shards - d
+        xp = jnp.pad(x, [(0, 0)] * (x.ndim - 1) + [(0, pad)]) if pad else x
+        wp = jnp.pad(w, ((0, pad), (0, 0))) if pad else w
+        p = jax.lax.axis_index(axes)
+        xs = jax.lax.dynamic_slice_in_dim(xp, p * ds, ds, axis=x.ndim - 1)
+        ws = jax.lax.dynamic_slice_in_dim(wp, p * ds, ds, axis=0)
+        partial = jnp.einsum("...d,dv->...v", xs, ws.astype(x.dtype))
+        red = backend.serve_emit(
+            partial.astype(jnp.float32).reshape(-1), ctx, "all_reduce")
+        return red.reshape(partial.shape).astype(x.dtype)
+
+    # -- batch-sharded prefill + coalesced KV gathering write -----------
+
+    def prefill_body(params: PyTree, batch: dict):
+        b = batch["tokens"].shape[0]
+        assert b % n_shards == 0, \
+            f"serve batch {b} not padded to the ring size {n_shards}"
+        bs = b // n_shards
+        p = jax.lax.axis_index(axes)
+        local = jax.tree.map(
+            lambda t: jax.lax.dynamic_slice_in_dim(t, p * bs, bs, axis=0),
+            batch)
+        logits, cache = api.prefill(params, local, cfg, no_shard)
+        if n_shards == 1 and not chans and comm.mode == "gspmd":
+            return logits, cache       # pure local reference, nothing to wire
+
+        # ONE gathering write for the whole prefill result: every cache
+        # leaf + the last-token logits coalesced into a single flat f32
+        # payload, gathered peer-major, carved back per leaf with the
+        # batch axis re-merged (slot k of the full batch = peer k//bs,
+        # local row k%bs — matching the engine's row padding).
+        leaves, treedef = jax.tree.flatten((cache, logits))
+        flats = [l.astype(jnp.float32).reshape(-1) for l in leaves]
+        sizes = [f.shape[0] for f in flats]
+        wire = flats[0] if len(flats) == 1 else jnp.concatenate(flats)
+        g = backend.serve_emit(wire, ctx, "all_gather").reshape(n_shards, -1)
+
+        outs, off = [], 0
+        n_cache = len(leaves) - 1      # flatten order: cache leaves, logits
+        for j, (leaf, n) in enumerate(zip(leaves, sizes)):
+            seg = g[:, off:off + n].reshape((n_shards,) + leaf.shape)
+            off += n
+            ba = 0 if j == n_cache else min(1, leaf.ndim - 1)
+            m = jnp.moveaxis(seg, 0, ba)
+            shape = leaf.shape
+            merged = m.reshape(shape[:ba] + (n_shards * shape[ba],)
+                               + shape[ba + 1:])
+            outs.append(merged.astype(leaf.dtype))
+        full_cache, full_logits = jax.tree.unflatten(treedef, outs)
+        return full_logits, full_cache
+
+    # -- replicated decode + TP logit reduction -------------------------
+
+    def decode_body(params: PyTree, cache: PyTree, dec: dict):
+        head = None if (n_shards == 1 and not chans
+                        and comm.mode == "gspmd") else tp_head
+        return api.decode_step(params, cache, dec, cfg, no_shard,
+                               logits_fn=head)
+
+    prefill = jax.jit(compat.shard_map(
+        prefill_body, mesh=mesh, in_specs=(P(), P()),
+        out_specs=(P(), P()), check_vma=False))
+    decode = jax.jit(compat.shard_map(
+        decode_body, mesh=mesh, in_specs=(P(), P(), P()),
+        out_specs=(P(), P()), check_vma=False))
+    return ServeStep(prefill=prefill, decode=decode, n_shards=n_shards,
+                     mesh=mesh, comm=comm, channel_indices=chans)
+
+
+def lowered_decode_text(cfg: ModelConfig, comm: CommConfig, *,
+                        batch: int = 2, max_len: int = 32, mesh=None,
+                        channel_indices: Optional[tuple] = None) -> str:
+    """Emitted StableHLO of one serve decode step (shape-only lowering) —
+    the evidence surface for 'serving collectives flow through the staged
+    emission API' (conformance tests + benchmark evidence rows count its
+    collectives with ``launch/hlo_analysis``)."""
+    step = make_serve_step(cfg, comm, mesh, channel_indices=channel_indices)
+    params = api.abstract(cfg)
+    cache = api.cache_specs(cfg, batch, max_len)
+    dec = {"token": jax.ShapeDtypeStruct((batch,), jnp.int32),
+           "pos": jax.ShapeDtypeStruct((batch,), jnp.int32)}
+    return step.decode.lower(params, cache, dec).as_text()
+
+
+def logit_payload_slices(cfg: ModelConfig, batch: int,
+                         comm: CommConfig) -> int:
+    """How many ring-buffer slices one decode logit reduction carves into
+    (the expected per-step collective count under ``aggregate="slice"``)."""
+    from repro.core.ring_buffer import plan_slices
+    return plan_slices(batch * cfg.vocab_size * 4, comm).n_slices

@@ -14,22 +14,42 @@ Mechanics:
   so the batcher groups requests into *equal-length* buckets (exact, no
   pads) — noted limitation vs. paged attention, acceptable at this scope.
 * Sampling: greedy or temperature; stop on ``eos_id`` or ``max_new``.
+* **Continuous batching**: the engine runs ``max_batch`` decode SLOTS.
+  When a request finishes, its slot is freed and the next request from
+  the run queue is admitted AT THE FLUSH BOUNDARY (the decode-step
+  boundary where the staged emission's channel flushes have completed
+  and been polled): it is prefilled solo (exactness is per-row, so solo
+  and batched prefill agree bit-for-bit), its cache rows are written
+  into the freed slot, and it decodes alongside the residents.
+* **Serving through the comm stack**: constructed with a
+  :class:`~repro.configs.base.ServeConfig`, the engine's prefill/decode
+  steps come from ``serving/dispatch.py`` — KV gathering writes and
+  tensor-parallel logit reductions flow through the registered
+  CommBackend wire (staged emission API), honoring the owning event
+  loop's channel affinity. Completion waits go through the loop's
+  :class:`~repro.serving.event_loop.Poller` (busy/park/adaptive).
 """
 from __future__ import annotations
 
 import dataclasses
-from collections import defaultdict
-from typing import Any, Callable, Optional, Sequence
+from collections import defaultdict, deque
+from typing import Any, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.configs.base import ModelConfig, RunConfig
+from repro.configs.base import ModelConfig, ServeConfig
 from repro.models import api
 from repro.models.layers import no_shard
+from repro.serving import dispatch
+from repro.serving.event_loop import (EventLoop, EventLoopGroup, Poller,
+                                      channel_affinity)
 
 PyTree = Any
+
+ADMIT_PAD = 16      # solo-prefill prompts pad to this granularity, so
+#                     continuous admission compiles O(max_len/16) shapes
 
 
 @dataclasses.dataclass
@@ -51,17 +71,32 @@ class Result:
     steps: int
 
 
+@dataclasses.dataclass
+class _Slot:
+    """One in-flight request occupying a decode slot."""
+    req: Request
+    admitted_step: int
+    toks: list
+    done: bool = False
+
+
 class DecodeEngine:
     """Synchronous batched engine around prefill/decode_step.
 
-    ``max_batch`` bounds the decode batch; ``max_len`` bounds prompt+gen
-    length (the KV-cache allocation).
+    ``max_batch`` bounds the decode slots; ``max_len`` bounds prompt+gen
+    length (the KV-cache allocation). With ``serve`` set, the steps are
+    built by :func:`repro.serving.dispatch.make_serve_step` and every
+    serving collective flows through ``serve.comm``'s backend wire;
+    ``channel_indices`` is the owning event loop's channel affinity.
     """
 
     def __init__(self, cfg: ModelConfig, params: PyTree, *,
                  max_batch: int = 8, max_len: int = 256,
                  eos_id: Optional[int] = None, shard_fn=no_shard,
-                 rng: Optional[jax.Array] = None):
+                 rng: Optional[jax.Array] = None,
+                 serve: Optional[ServeConfig] = None, mesh=None,
+                 channel_indices: Optional[tuple] = None,
+                 poller: Optional[Poller] = None):
         self.cfg = cfg
         self.params = params
         self.max_batch = max_batch
@@ -69,22 +104,33 @@ class DecodeEngine:
         self.eos_id = eos_id
         self.shard_fn = shard_fn
         self.rng = rng if rng is not None else jax.random.PRNGKey(0)
+        self.serve = serve
         self._recurrent = cfg.family in ("ssm", "hybrid")
+        self.poller = poller or Poller(
+            serve.poll if serve else "park",
+            serve.spin_us * 1e-6 if serve else 50e-6)
 
-        self._prefill = jax.jit(
-            lambda p, b: api.prefill(p, b, cfg, shard_fn))
-        self._decode = jax.jit(
-            lambda p, c, b: api.decode_step(p, c, b, cfg, shard_fn))
+        if serve is not None:
+            self.step = dispatch.make_serve_step(
+                cfg, serve.comm, mesh, channel_indices=channel_indices)
+            self._prefill = self.step.prefill
+            self._decode = self.step.decode
+            self.n_shards = self.step.n_shards
+        else:
+            self.step = None
+            self.n_shards = 1
+            self._prefill = jax.jit(
+                lambda p, b: api.prefill(p, b, cfg, shard_fn))
+            self._decode = jax.jit(
+                lambda p, c, b: api.decode_step(p, c, b, cfg, shard_fn))
 
     # -- batching ------------------------------------------------------
 
-    def _buckets(self, reqs: Sequence[Request]) -> list[list[Request]]:
-        """Split requests into decode batches (round-robin admission).
-        Recurrent archs additionally bucket by exact prompt length."""
+    def _buckets(self, reqs: Sequence[Request]) -> list:
+        """Recurrent archs bucket by exact prompt length (no pads)."""
         groups = defaultdict(list)
         for r in reqs:
-            key = len(r.prompt) if self._recurrent else 0
-            groups[key].append(r)
+            groups[len(r.prompt)].append(r)
         out = []
         for _, rs in sorted(groups.items()):
             for i in range(0, len(rs), self.max_batch):
@@ -103,26 +149,28 @@ class DecodeEngine:
 
     # -- main entry ----------------------------------------------------
 
-    def generate(self, reqs: Sequence[Request]) -> list[Result]:
-        results: list[Result] = []
-        for bucket in self._buckets(reqs):
-            results.extend(self._run_bucket(bucket))
+    def generate(self, reqs: Sequence[Request]) -> list:
+        reqs = list(reqs)
+        results: list = []
+        if self._recurrent:
+            # equal-length buckets; no mid-flight admission (the
+            # recurrence has no pad-exactness to admit against)
+            for bucket in self._buckets(reqs):
+                results.extend(self._run_wave(bucket, deque()))
+        elif reqs:
+            initial = reqs[: self.max_batch]
+            pending = deque(reqs[self.max_batch:])   # the run queue
+            results.extend(self._run_wave(initial, pending))
         results.sort(key=lambda r: r.uid)
         return results
 
-    def _run_bucket(self, bucket: list[Request]) -> list[Result]:
-        b = len(bucket)
-        lens = np.array([len(r.prompt) for r in bucket], np.int32)
-        pad_to = int(lens.max())
-        assert pad_to + max(r.max_new for r in bucket) <= self.max_len, \
-            "prompt + max_new exceeds engine max_len"
-        toks = np.zeros((b, pad_to), np.int32)
-        for i, r in enumerate(bucket):
-            toks[i, : lens[i]] = r.prompt
+    # -- batch assembly ------------------------------------------------
 
+    def _prefill_batch(self, toks: np.ndarray, lens: np.ndarray) -> dict:
+        b = toks.shape[0]
         batch = {"tokens": jnp.asarray(toks)}
         if not self._recurrent:
-            batch["last_pos"] = jnp.asarray(lens - 1)
+            batch["last_pos"] = jnp.asarray(np.maximum(lens - 1, 0))
         if self.cfg.family == "vlm":
             batch["patches"] = jnp.zeros(
                 (b, self.cfg.num_patches, self.cfg.d_model),
@@ -131,43 +179,170 @@ class DecodeEngine:
             batch["frames"] = jnp.zeros(
                 (b, self.cfg.num_frames, self.cfg.d_model),
                 jnp.dtype(self.cfg.compute_dtype))
+        return batch
 
-        logits, cache = self._prefill(self.params, batch)
-        cache = self._grow_cache(cache, b)
+    # -- the slot loop -------------------------------------------------
 
-        temps = np.array([r.temperature for r in bucket], np.float32)
-        max_new = max(r.max_new for r in bucket)
+    def _run_wave(self, initial: list, pending: deque) -> list:
+        b = len(initial)
+        R = self.n_shards
+        b_pad = max(R, -(-b // R) * R)    # rows padded to the ring size
+        lens = np.zeros((b_pad,), np.int32)
+        for i, r in enumerate(initial):
+            lens[i] = len(r.prompt)
+        pad_to = int(lens.max())
+        assert pad_to + max(r.max_new for r in initial) <= self.max_len, \
+            "prompt + max_new exceeds engine max_len"
+        toks = np.zeros((b_pad, pad_to), np.int32)
+        for i, r in enumerate(initial):
+            toks[i, : lens[i]] = r.prompt
+
+        logits, cache = self._prefill(self.params,
+                                      self._prefill_batch(toks, lens))
+        self.poller.wait(logits)
+        cache = api.grow_cache(self.cfg, cache, self.max_len)
+
+        slots: list = [_Slot(r, 0, []) for r in initial] \
+            + [None] * (b_pad - b)
+        temps = np.zeros((b_pad,), np.float32)
+        for i, r in enumerate(initial):
+            temps[i] = r.temperature
         pos = jnp.asarray(lens)           # next write slot per request
-        out = np.full((b, max_new), -1, np.int64)
-        done = np.zeros((b,), bool)
         tok = self._sample(logits, temps)
         steps = 0
-        for t in range(max_new):
+        results: list = []
+
+        while True:
+            # flush boundary: the staged emission's channel flushes for
+            # this step are complete once the sampled tokens are ready
+            self.poller.wait(tok)
             tok_np = np.asarray(tok)
-            for i, r in enumerate(bucket):
-                if not done[i] and t < r.max_new:
-                    out[i, t] = tok_np[i]
-                    if self.eos_id is not None and tok_np[i] == self.eos_id:
-                        done[i] = True
-                elif t >= r.max_new:
-                    done[i] = True
+            for i, s in enumerate(slots):
+                if s is None:
+                    continue
+                if s.req.max_new > 0:    # max_new=0: prefill-only, no token
+                    s.toks.append(int(tok_np[i]))
+                    if self.eos_id is not None \
+                            and s.toks[-1] == self.eos_id:
+                        s.done = True
+                if len(s.toks) >= s.req.max_new:
+                    s.done = True
+                if s.done:
+                    results.append(Result(
+                        uid=s.req.uid,
+                        tokens=np.asarray(s.toks, np.int64),
+                        prompt_len=len(s.req.prompt),
+                        steps=steps + 1 - s.admitted_step))
+                    slots[i] = None
             steps += 1
-            if done.all() or t == max_new - 1:
+            # continuous batching: admit from the run queue into freed
+            # slots, at this flush boundary. Only the first max_batch
+            # slots are admission-eligible — ring-padding rows beyond the
+            # configured bound carry no requests (max_batch stays the
+            # true per-loop in-flight limit even when b_pad > max_batch).
+            if pending and not self._recurrent:
+                for i in range(min(b_pad, self.max_batch)):
+                    # while, not if: a request finishing AT admission
+                    # (eos / max_new==1) leaves the slot free for the
+                    # next queued request in the same boundary
+                    while slots[i] is None and pending:
+                        tok, cache, pos = self._admit(
+                            i, pending.popleft(), cache, pos, temps, tok,
+                            steps, slots, results)
+            if not any(s is not None for s in slots) and not pending:
                 break
+            active = np.array([s is not None for s in slots])
             dec = {"token": tok, "pos": pos}
             logits, cache = self._decode(self.params, cache, dec)
             tok = self._sample(logits, temps)
-            pos = pos + 1
-
-        results = []
-        for i, r in enumerate(bucket):
-            gen = out[i][out[i] >= 0][: r.max_new]
-            results.append(Result(uid=r.uid, tokens=gen.astype(np.int64),
-                                  prompt_len=int(lens[i]), steps=steps))
+            pos = jnp.where(jnp.asarray(active), pos + 1, pos)
         return results
 
-    # -- cache management ----------------------------------------------
+    def _admit(self, i: int, req: Request, cache: PyTree, pos: jax.Array,
+               temps: np.ndarray, tok: jax.Array, steps: int,
+               slots: list, results: list):
+        """Admit one queued request into freed slot ``i``: solo prefill
+        (rows padded to the ring size; exactness is per-row), cache rows
+        written into the slot, first token sampled from its own prefill
+        logits AND recorded immediately (it is the request's first
+        generated token — the main loop's append phase has already run
+        this step, and the next one records the token sampled AFTER
+        it). A request done at its first token (eos, or max_new == 1)
+        finishes here and leaves the slot free. Mutates ``temps`` /
+        ``slots`` / ``results`` in place; returns the new
+        (tok, cache, pos)."""
+        plen = len(req.prompt)
+        assert plen + req.max_new <= self.max_len, \
+            "prompt + max_new exceeds engine max_len"
+        R = self.n_shards
+        # round for bounded recompiles, but never past the resident
+        # cache's sequence capacity (max_len, or the rolling window) —
+        # an over-rounded prefill cache could not fit the slot write
+        limit = self.max_len
+        if self.cfg.sliding_window:
+            limit = min(limit, self.cfg.sliding_window)
+        pad_to = min(-(-plen // ADMIT_PAD) * ADMIT_PAD, max(plen, limit))
+        toks = np.zeros((R, pad_to), np.int32)
+        toks[0, :plen] = req.prompt
+        lens = np.zeros((R,), np.int32)
+        lens[0] = plen
+        logits1, cache1 = self._prefill(self.params,
+                                        self._prefill_batch(toks, lens))
+        self.poller.wait(logits1)
+        t0_arr = self._sample(logits1,
+                              np.full((R,), req.temperature, np.float32))[0]
+        t0 = int(np.asarray(t0_arr))
+        if req.max_new <= 0:              # prefill-only: zero tokens
+            results.append(Result(uid=req.uid,
+                                  tokens=np.asarray([], np.int64),
+                                  prompt_len=plen, steps=0))
+            return tok, cache, pos
+        done = (self.eos_id is not None and t0 == self.eos_id) \
+            or req.max_new == 1
+        if done:                          # finished at its first token
+            results.append(Result(uid=req.uid,
+                                  tokens=np.asarray([t0], np.int64),
+                                  prompt_len=plen, steps=1))
+            return tok, cache, pos
+        cache1 = api.grow_cache(self.cfg, cache1, self.max_len)
+        # attention-family caches carry batch at axis 1 (L, B, S, KV, Dh)
+        cache = jax.tree.map(lambda c, n: c.at[:, i].set(n[:, 0]),
+                             cache, cache1)
+        temps[i] = req.temperature
+        slots[i] = _Slot(req, steps, [t0])
+        return tok.at[i].set(t0_arr), cache, pos.at[i].set(plen)
 
-    def _grow_cache(self, cache: PyTree, b: int) -> PyTree:
-        """Prefill caches are prompt-sized; decode needs max_len slots."""
-        return api.grow_cache(self.cfg, cache, self.max_len)
+
+# ---------------------------------------------------------------------------
+# Event-loop glue: one engine per loop, channel affinity baked in
+# ---------------------------------------------------------------------------
+
+
+def make_engine_group(cfg: ModelConfig, params: PyTree, serve: ServeConfig,
+                      *, mesh=None, eos_id: Optional[int] = None,
+                      seed: int = 0) -> EventLoopGroup:
+    """The serving subsystem's front door: an
+    :class:`~repro.serving.event_loop.EventLoopGroup` of
+    ``serve.event_loops`` loops, each owning a disjoint contiguous run of
+    the ``serve.comm.channels`` pool (``channel_affinity``) and driving
+    its OWN :class:`DecodeEngine` whose serve step emits only on those
+    channels. Requests submitted to the group are assigned round-robin;
+    results merge by uid. GREEDY outputs are bit-identical for any
+    ``event_loops`` (the affinity changes emission structure, never
+    logits — conformance-tested); temperature>0 requests draw from each
+    engine's own PRNG stream, so sampled tokens legitimately vary with
+    the loop assignment."""
+    affinity = channel_affinity(serve.comm.channels, serve.event_loops)
+    loops = []
+    for i, chans in enumerate(affinity):
+        loop = EventLoop(i, channels=chans, poll=serve.poll,
+                         spin_s=serve.spin_us * 1e-6)
+        eng = DecodeEngine(cfg, params, max_batch=serve.max_batch,
+                           max_len=serve.max_len, eos_id=eos_id,
+                           rng=jax.random.PRNGKey(seed + i), serve=serve,
+                           mesh=mesh, channel_indices=chans,
+                           poller=loop.poller)
+        loop.engine = eng
+        loop.runner = lambda _loop, items, eng=eng: eng.generate(items)
+        loops.append(loop)
+    return EventLoopGroup(loops)

@@ -1,0 +1,218 @@
+"""EventLoopGroup — the netty worker-group analogue (paper §IV).
+
+The paper's microbenchmarks run an ``EventLoopGroup`` of worker threads:
+each event loop OWNS a set of connections, polls their completions
+(hadroNIO busy-polls the UCX worker instead of parking in epoll — the
+single biggest latency lever, §IV-B), and drains a run queue of
+in-flight requests. Ibdxnet (arXiv:1812.01963) shows the same design
+scales concurrent Java/IB: dedicated per-thread connection ownership,
+no shared mutable transport state between threads.
+
+This module is that subsystem, transport-agnostic:
+
+* :class:`Poller` — the completion-polling strategy (``busy`` spins on
+  ``Array.is_ready``, ``park`` blocks — the epoll/selector fallback,
+  ``adaptive`` spins for a bounded budget then parks), with counters so
+  benchmarks can report how often each path was taken.
+* :class:`EventLoop` — one loop: an index, the contiguous run of the
+  global CommChannel pool it OWNS (the channel-affinity invariant: no
+  two loops ever emit on the same channel), its own poller, and a run
+  queue drained by a pluggable ``runner``.
+* :class:`EventLoopGroup` — N loops; requests/connections are assigned
+  round-robin (paper §IV-C assigns connections to selectors
+  round-robin); ``run()`` drains every loop, one OS thread per loop
+  when ``threads=True``.
+* :func:`channel_affinity` — the bucket→channel grouping rule reused at
+  the loop layer: ``selector.ready_groups``-style CONTIGUOUS runs of
+  the channel pool, disjoint and covering, balanced to within one.
+
+The engine glue (per-loop :class:`~repro.serving.engine.DecodeEngine`
+with the loop's channel affinity baked into its serve step) lives in
+``serving/engine.py`` (``make_engine_group``); the RTT microbenchmark
+(``benchmarks/serving_rtt.py``) drives the same loops with raw
+ping-pong connections.
+"""
+from __future__ import annotations
+
+import threading
+import time
+from collections import deque
+from dataclasses import dataclass, field
+from typing import Any, Callable, Optional, Sequence
+
+import jax
+
+from repro.core import selector
+
+POLLS = ("busy", "park", "adaptive")
+
+
+def channel_affinity(n_channels: int, n_loops: int) -> tuple:
+    """Partition the global channel pool ``0..n_channels-1`` into
+    ``n_loops`` DISJOINT contiguous runs — each event loop's owned
+    connections (``selector.ready_groups`` is exactly this grouping rule,
+    applied to channels instead of buckets). Raises when a loop would own
+    nothing: ownership is the invariant the subsystem is built on."""
+    if n_loops > n_channels:
+        raise ValueError(
+            f"{n_loops} event loops over {n_channels} channels: every "
+            "loop must own at least one channel (disjoint ownership); "
+            "raise comm.channels or lower event_loops")
+    return selector.ready_groups(n_channels, n_loops)
+
+
+@dataclass
+class PollStats:
+    """How the loop waited: ``spins`` = readiness probes that came back
+    not-ready, ``parks`` = blocking waits entered, ``waits`` = completed
+    wait calls. ``busy`` keeps parks at 0; ``park`` keeps spins at 0."""
+    spins: int = 0
+    parks: int = 0
+    waits: int = 0
+
+    def merge(self, other: "PollStats") -> "PollStats":
+        return PollStats(self.spins + other.spins,
+                         self.parks + other.parks,
+                         self.waits + other.waits)
+
+
+class Poller:
+    """Completion polling for one event loop (hadroNIO §IV-B: busy-poll
+    the worker vs. park in epoll; ``adaptive`` is the bounded spin)."""
+
+    def __init__(self, poll: str = "busy", spin_s: float = 50e-6):
+        assert poll in POLLS, poll
+        self.poll = poll
+        self.spin_s = spin_s
+        self.stats = PollStats()
+
+    @staticmethod
+    def _handles(tree: Any) -> list:
+        return [l for l in jax.tree.leaves(tree) if hasattr(l, "is_ready")]
+
+    @staticmethod
+    def _ready(handles: list) -> bool:
+        return all(h.is_ready() for h in handles)
+
+    def _park(self, handles: list) -> None:
+        self.stats.parks += 1
+        for h in handles:
+            h.block_until_ready()
+
+    def wait(self, tree: Any) -> Any:
+        """Wait for every jax array in ``tree`` per the strategy; returns
+        ``tree`` so call sites can chain."""
+        handles = self._handles(tree)
+        self.stats.waits += 1
+        if self.poll == "park":
+            self._park(handles)
+            return tree
+        deadline = (time.perf_counter() + self.spin_s
+                    if self.poll == "adaptive" else None)
+        while not self._ready(handles):
+            self.stats.spins += 1
+            if deadline is not None and time.perf_counter() >= deadline:
+                self._park(handles)     # adaptive: bounded spin, then epoll
+                break
+        return tree
+
+
+class EventLoop:
+    """One event loop: owned channels, a poller, and a run queue drained
+    by ``runner(loop, items) -> list`` (the engine batches its items
+    through the decode engine; the RTT bench ping-pongs them)."""
+
+    def __init__(self, index: int, *, channels: Sequence[int] = (),
+                 poll: str = "busy", spin_s: float = 50e-6,
+                 runner: Optional[Callable] = None):
+        self.index = index
+        self.channels = tuple(channels)   # owned run of the global pool
+        self.poller = Poller(poll, spin_s)
+        self.runner = runner
+        self.queue: deque = deque()       # run queue of in-flight items
+        self.results: list = []
+        self.error: Optional[BaseException] = None
+
+    def submit(self, item: Any) -> None:
+        self.queue.append(item)
+
+    def drain(self) -> list:
+        """Run everything queued through the runner (new submissions made
+        while draining land in the queue and are picked up too). A
+        runner failure is recorded in ``error`` (and re-raised) so a
+        threaded group can propagate it instead of silently dropping the
+        loop's requests."""
+        out: list = []
+        self.error = None
+        try:
+            while self.queue:
+                items = list(self.queue)
+                self.queue.clear()
+                assert self.runner is not None, "event loop has no runner"
+                out.extend(self.runner(self, items))
+        except BaseException as e:
+            self.error = e
+            raise
+        finally:
+            self.results = out
+        return out
+
+
+class EventLoopGroup:
+    """N event loops over one disjoint channel partition. ``submit``
+    assigns items round-robin (paper §IV-C); ``run`` drains every loop —
+    one OS thread per loop under ``threads=True`` (the multi-threaded
+    benchmark topology), in-line otherwise (deterministic debugging)."""
+
+    def __init__(self, loops: Sequence[EventLoop]):
+        assert loops, "an EventLoopGroup needs at least one loop"
+        owned = [c for l in loops for c in l.channels]
+        assert len(owned) == len(set(owned)), \
+            f"channel ownership must be disjoint: {[l.channels for l in loops]}"
+        self.loops = list(loops)
+        self._rr = 0
+
+    @property
+    def n_loops(self) -> int:
+        return len(self.loops)
+
+    def submit(self, items: Any) -> None:
+        """Round-robin connection→loop assignment; accepts one item or a
+        sequence."""
+        if not isinstance(items, (list, tuple)):
+            items = [items]
+        for it in items:
+            self.loops[self._rr % self.n_loops].submit(it)
+            self._rr += 1
+
+    def run(self, *, threads: bool = True) -> list:
+        """Drain every loop; returns the concatenated results (loop
+        order — callers sort by uid where ordering matters). A failure
+        in ANY loop propagates (after every thread has joined) — a
+        partial result set must never look like success."""
+        if threads and self.n_loops > 1:
+            def guarded(loop):
+                try:
+                    loop.drain()
+                except BaseException:
+                    pass              # recorded in loop.error; raised below
+            ts = [threading.Thread(target=guarded, args=(l,),
+                                   name=f"event-loop-{l.index}")
+                  for l in self.loops]
+            for t in ts:
+                t.start()
+            for t in ts:
+                t.join()
+            for l in self.loops:
+                if l.error is not None:
+                    raise l.error
+        else:
+            for l in self.loops:
+                l.drain()
+        return [r for l in self.loops for r in l.results]
+
+    def poll_stats(self) -> PollStats:
+        st = PollStats()
+        for l in self.loops:
+            st = st.merge(l.poller.stats)
+        return st

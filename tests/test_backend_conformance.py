@@ -570,6 +570,143 @@ def test_flush_ready_first_flush_precedes_final_bucket_grad():
     assert first_step > last_grad_step, (first_step, last_grad_step)
 
 
+# ---------------------------------------------------------------------------
+# Serving conformance (the event-loop serving subsystem): identical
+# logits per comm mode × channel affinity × event-loop count, plus jaxpr
+# evidence that serving collectives flow through the staged emission API.
+# Parametrized straight from available_modes(), so a newly registered
+# backend is serving-conformance-tested without edits here.
+# ---------------------------------------------------------------------------
+
+
+def _serve_model():
+    return _serve_model_cached()
+
+
+@functools.lru_cache(maxsize=None)
+def _serve_model_cached():
+    cfg = get_config("qwen2-0.5b-reduced")
+    from repro.models import api
+    params = api.init(jax.random.PRNGKey(0), cfg)
+    return cfg, params
+
+
+def _serve_comm(mode, **kw):
+    kw.setdefault("channels", 4)
+    kw.setdefault("slice_bytes", 512)     # logit payload -> several slices
+    return _comm(mode, "none", PACKS[0], **kw)
+
+
+@functools.lru_cache(maxsize=None)
+def _serve_logits(mode, affinity):
+    """(prefill logits, one-step decode logits) of the dispatch-built
+    serve step for (mode, channel affinity), on fixed inputs."""
+    from repro.models import api
+    from repro.serving import dispatch as serve_dispatch
+    cfg, params = _serve_model()
+    step = serve_dispatch.make_serve_step(cfg, _serve_comm(mode),
+                                          channel_indices=affinity)
+    toks = np.zeros((2, 8), np.int32)
+    toks[0, :6] = (np.arange(6) * 3) % cfg.vocab_size
+    toks[1, :8] = (np.arange(8) * 5) % cfg.vocab_size
+    batch = {"tokens": jnp.asarray(toks),
+             "last_pos": jnp.asarray([5, 7])}
+    logits_p, cache = step.prefill(params, batch)
+    cache = api.grow_cache(cfg, cache, 32)
+    dec = {"token": jnp.argmax(logits_p, -1).astype(jnp.int32),
+           "pos": jnp.asarray([6, 8], jnp.int32)}
+    logits_d, _ = step.decode(params, cache, dec)
+    return np.asarray(logits_p), np.asarray(logits_d)
+
+
+@pytest.mark.parametrize("mode", available_modes())
+def test_serving_logits_identical_across_modes(mode):
+    """The serving transparency claim: every registered strategy's wire
+    path (raw whole-payload collectives for gspmd/sockets/vma, the staged
+    slice pipeline for the hadronio family) yields BIT-identical prefill
+    and decode logits — summing per element and gathering peer-major
+    commute with slicing."""
+    ref_p, ref_d = _serve_logits("gspmd", None)
+    got_p, got_d = _serve_logits(mode, None)
+    np.testing.assert_array_equal(got_p, ref_p)
+    np.testing.assert_array_equal(got_d, ref_d)
+
+
+@pytest.mark.parametrize("affinity", [(0, 1), (2, 3), (1,)])
+def test_serving_logits_invariant_to_channel_affinity(affinity):
+    """Channel affinity (which disjoint run of the pool an event loop
+    emits on) changes the emission structure, never the logits — the
+    dispatch-level statement of event-loop-count invariance."""
+    ref_p, ref_d = _serve_logits("hadronio", None)
+    got_p, got_d = _serve_logits("hadronio", affinity)
+    np.testing.assert_array_equal(got_p, ref_p)
+    np.testing.assert_array_equal(got_d, ref_d)
+
+
+def test_serving_tokens_identical_across_event_loops():
+    """The subsystem-level acceptance row: greedy tokens are identical
+    for event_loops ∈ {1, 2, 4} (with continuous admission in play:
+    more requests than slots per loop at el=1)."""
+    from repro.configs.base import ServeConfig
+    from repro.serving import Request, make_engine_group
+    cfg, params = _serve_model()
+    rng = np.random.default_rng(11)
+    reqs = [Request(i, rng.integers(0, cfg.vocab_size,
+                                    size=int(rng.integers(4, 16))),
+                    max_new=3) for i in range(6)]
+    outs = {}
+    for el in (1, 2, 4):
+        serve = ServeConfig(event_loops=el, poll="busy", max_batch=2,
+                            max_len=48, comm=_serve_comm("hadronio"))
+        grp = make_engine_group(cfg, params, serve)
+        grp.submit(reqs)
+        res = sorted(grp.run(threads=False), key=lambda r: r.uid)
+        outs[el] = [tuple(r.tokens.tolist()) for r in res]
+    assert outs[1] == outs[2] == outs[4]
+
+
+@pytest.mark.parametrize("mode", HADRONIO_FAMILY)
+def test_serving_collectives_flow_through_staged_emission(mode):
+    """Jaxpr-level evidence: the serve decode's logit reduction is the
+    staged emission API's schedule — one collective per ring slice under
+    aggregate="slice", exactly min(channels, n_slices) coalesced flushes
+    under "channel" — while sockets emits ONE unsliced op and gspmd
+    none (1-device local reference)."""
+    from repro.launch import hlo_analysis as hlo
+    from repro.serving import dispatch as serve_dispatch
+    cfg, _ = _serve_model()
+    n_channels = 2
+    counts = {}
+    for aggregate in ("slice", "channel"):
+        comm = _serve_comm(mode, channels=n_channels, aggregate=aggregate)
+        text = serve_dispatch.lowered_decode_text(cfg, comm, batch=2,
+                                                  max_len=32)
+        counts[aggregate] = hlo.stablehlo_collective_stats(text).total_ops
+    n_slices = serve_dispatch.logit_payload_slices(
+        cfg, 2, _serve_comm(mode, channels=n_channels))
+    assert n_slices > n_channels, (n_slices, n_channels)
+    assert counts["slice"] == n_slices, counts
+    assert counts["channel"] == n_channels, counts
+    # baselines: per-buffer (1 op) and XLA-owned (0 ops on 1 device)
+    sockets = serve_dispatch.lowered_decode_text(
+        cfg, _serve_comm("sockets"), batch=2, max_len=32)
+    assert hlo.stablehlo_collective_stats(sockets).total_ops == 1
+    local = serve_dispatch.lowered_decode_text(
+        cfg, _serve_comm("gspmd"), batch=2, max_len=32)
+    assert hlo.stablehlo_collective_stats(local).total_ops == 0
+
+
+@pytest.mark.parametrize("mode", available_modes())
+def test_serving_rejects_wire_compression(mode):
+    """Serving payloads are activations — a lossy codec has no EF state
+    to stay unbiased against, so the dispatch layer must reject it for
+    EVERY mode (never silently ignore it)."""
+    from repro.serving import dispatch as serve_dispatch
+    with pytest.raises(ValueError, match="compress"):
+        serve_dispatch.validate_serve_comm(
+            CommConfig(mode=mode, compress="bf16", hierarchical=False))
+
+
 @pytest.mark.parametrize("mode", BUCKET_MODES)
 @pytest.mark.parametrize("compress", COMPRESS)
 @pytest.mark.parametrize("pack", PACKS)

@@ -1,0 +1,238 @@
+"""Event-loop serving subsystem units: channel affinity invariants, poll
+strategies, round-robin assignment, percentile helpers, RTT bench rows."""
+import numpy as np
+import pytest
+
+from benchmarks.common import (PERCENTILE_QS, percentile_rows, percentiles)
+from repro.serving.event_loop import (EventLoop, EventLoopGroup, Poller,
+                                      PollStats, channel_affinity)
+
+
+# ---------------------------------------------------------------------------
+# Channel affinity (the ownership invariant)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("n_channels,n_loops", [(4, 1), (4, 2), (4, 4),
+                                                (8, 3), (5, 2), (16, 4)])
+def test_affinity_disjoint_contiguous_covering(n_channels, n_loops):
+    """Every loop owns a non-empty CONTIGUOUS run; runs are disjoint,
+    cover the whole pool, and are balanced to within one channel."""
+    groups = channel_affinity(n_channels, n_loops)
+    assert len(groups) == n_loops
+    flat = [c for g in groups for c in g]
+    assert sorted(flat) == list(range(n_channels))      # disjoint + cover
+    for g in groups:
+        assert g, "a loop must own at least one channel"
+        assert list(g) == list(range(min(g), max(g) + 1))   # contiguous
+    sizes = [len(g) for g in groups]
+    assert max(sizes) - min(sizes) <= 1
+
+
+def test_affinity_rejects_more_loops_than_channels():
+    with pytest.raises(ValueError, match="own at least one channel"):
+        channel_affinity(2, 3)
+
+
+def test_group_rejects_overlapping_ownership():
+    loops = [EventLoop(0, channels=(0, 1)), EventLoop(1, channels=(1, 2))]
+    with pytest.raises(AssertionError, match="disjoint"):
+        EventLoopGroup(loops)
+
+
+# ---------------------------------------------------------------------------
+# Poll strategies
+# ---------------------------------------------------------------------------
+
+
+class _Handle:
+    """A completion handle that becomes ready after N probes."""
+
+    def __init__(self, ready_after: int):
+        self._left = ready_after
+        self.blocked = False
+
+    def is_ready(self):
+        self._left -= 1
+        return self._left <= 0
+
+    def block_until_ready(self):
+        self.blocked = True
+        self._left = 0
+
+
+def test_busy_poll_spins_never_parks():
+    p = Poller("busy")
+    h = _Handle(ready_after=5)
+    p.wait([h])
+    assert p.stats.parks == 0 and p.stats.spins >= 1 and p.stats.waits == 1
+    assert not h.blocked
+
+
+def test_park_blocks_never_spins():
+    p = Poller("park")
+    h = _Handle(ready_after=100)
+    p.wait([h])
+    assert p.stats.parks == 1 and p.stats.spins == 0
+    assert h.blocked
+
+
+def test_adaptive_spins_then_parks_on_slow_completion():
+    p = Poller("adaptive", spin_s=0.0)          # zero budget: park at once
+    h = _Handle(ready_after=10**9)
+    p.wait([h])
+    assert h.blocked and p.stats.parks == 1
+    # a fast completion is absorbed by the spin phase
+    p2 = Poller("adaptive", spin_s=10.0)
+    h2 = _Handle(ready_after=3)
+    p2.wait([h2])
+    assert not h2.blocked and p2.stats.parks == 0 and p2.stats.spins >= 1
+
+
+def test_poller_ignores_non_array_leaves():
+    p = Poller("busy")
+    p.wait({"a": 1, "b": [2.0, "x"]})            # nothing to wait on
+    assert p.stats.waits == 1 and p.stats.spins == 0
+
+
+def test_poll_stats_merge():
+    a, b = PollStats(1, 2, 3), PollStats(10, 20, 30)
+    m = a.merge(b)
+    assert (m.spins, m.parks, m.waits) == (11, 22, 33)
+
+
+# ---------------------------------------------------------------------------
+# Run queues + round-robin assignment
+# ---------------------------------------------------------------------------
+
+
+def test_round_robin_submit_and_drain():
+    seen = {}
+
+    def runner(loop, items):
+        seen.setdefault(loop.index, []).extend(items)
+        return [(loop.index, it) for it in items]
+
+    loops = [EventLoop(i, channels=(i,), runner=runner) for i in range(3)]
+    grp = EventLoopGroup(loops)
+    grp.submit(list(range(7)))
+    out = grp.run(threads=False)
+    # paper §IV-C: connections land on loops round-robin
+    assert seen == {0: [0, 3, 6], 1: [1, 4], 2: [2, 5]}
+    assert len(out) == 7
+
+
+def test_threaded_drain_matches_inline():
+    def runner(loop, items):
+        return [it * 2 for it in items]
+
+    def make():
+        loops = [EventLoop(i, channels=(i,), runner=runner)
+                 for i in range(4)]
+        g = EventLoopGroup(loops)
+        g.submit(list(range(10)))
+        return g
+
+    inline = sorted(make().run(threads=False))
+    threaded = sorted(make().run(threads=True))
+    assert inline == threaded == sorted(i * 2 for i in range(10))
+
+
+def test_threaded_run_propagates_loop_failure():
+    """A loop whose runner raises must fail the whole run AFTER every
+    thread joined — a partial result set must never look like success."""
+    def runner(loop, items):
+        if loop.index == 1:
+            raise RuntimeError("engine blew up")
+        return items
+
+    loops = [EventLoop(i, channels=(i,), runner=runner) for i in range(3)]
+    grp = EventLoopGroup(loops)
+    grp.submit(list(range(6)))
+    with pytest.raises(RuntimeError, match="engine blew up"):
+        grp.run(threads=True)
+    assert loops[1].error is not None
+    # inline drain propagates too
+    grp2 = EventLoopGroup([EventLoop(0, channels=(0,), runner=runner),
+                           EventLoop(1, channels=(1,), runner=runner)])
+    grp2.submit([0, 1])
+    with pytest.raises(RuntimeError, match="engine blew up"):
+        grp2.run(threads=False)
+
+
+def test_drain_picks_up_items_submitted_mid_drain():
+    """The run-queue contract: submissions landing while the loop drains
+    are processed in the same drain (continuous admission)."""
+    loop = EventLoop(0, channels=(0,))
+    fed = {"done": False}
+
+    def runner(l, items):
+        if not fed["done"]:
+            fed["done"] = True
+            l.submit("late")
+        return items
+
+    loop.runner = runner
+    loop.submit("early")
+    assert loop.drain() == ["early", "late"]
+
+
+# ---------------------------------------------------------------------------
+# Percentile helpers (benchmarks/common.py — shared by latency, gradsync,
+# serving_rtt)
+# ---------------------------------------------------------------------------
+
+
+def test_percentiles_ragged_nested_input():
+    ps = percentiles([[1.0, 2.0, 3.0], [4.0], [5.0, 6.0]])
+    assert ps[50.0] == pytest.approx(3.5)
+    assert ps[50.0] <= ps[99.0] <= ps[99.9]
+
+
+def test_percentiles_single_sample_degrades_gracefully():
+    ps = percentiles([7.25])
+    assert all(v == 7.25 for v in ps.values())
+
+
+def test_percentiles_small_sample_monotone():
+    ps = percentiles([3.0, 1.0])
+    assert ps[50.0] <= ps[99.0] <= ps[99.9] <= 3.0
+
+
+def test_percentiles_empty_raises():
+    with pytest.raises(ValueError, match="empty"):
+        percentiles([])
+    with pytest.raises(ValueError, match="empty"):
+        percentiles([[], []])
+
+
+def test_percentile_rows_shape_and_monotonicity():
+    rows = percentile_rows("serving_rtt", "fig5-8", "uni", 1024, 4,
+                           [[1e-6, 2e-6], [50e-6]], suffix="el2")
+    assert [r.metric for r in rows] == \
+        ["rtt_p50:el2", "rtt_p99:el2", "rtt_p99.9:el2"]
+    vals = [r.value for r in rows]
+    assert vals == sorted(vals)
+    assert all(r.unit == "us" and r.kind == "measured" for r in rows)
+    assert len(PERCENTILE_QS) == 3
+
+
+# ---------------------------------------------------------------------------
+# RTT benchmark smoke (tiny sweep, inline loops)
+# ---------------------------------------------------------------------------
+
+
+def test_serving_rtt_rows_smoke():
+    from benchmarks import serving_rtt
+    rows = serving_rtt.run(msg_sizes=[16], loops=[1, 2],
+                           conns_per_loop=[1], directions=("uni",),
+                           iters=2, threads=False, evidence=False)
+    p50 = [r for r in rows if r.metric.startswith("rtt_p50")]
+    assert {r.metric.split(":")[-1] for r in p50} == {"el1", "el2"}
+    by_key = {}
+    for r in rows:
+        if r.metric.startswith("rtt_p"):
+            by_key.setdefault(r.metric.split(":")[-1], {})[
+                r.metric.split(":")[0]] = r.value
+    for v in by_key.values():
+        assert v["rtt_p50"] <= v["rtt_p99"] <= v["rtt_p99.9"]

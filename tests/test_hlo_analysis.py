@@ -51,6 +51,58 @@ def test_parser_on_real_compiled_module():
     assert st.total_ops == 0            # no collectives in elementwise fn
 
 
+MLIR_WITH_COLLECTIVE = """
+module {
+  func.func @main(%arg0: tensor<4xf32>) -> tensor<4xf32> {
+    %0 = stablehlo.add %arg0, %arg0 : tensor<4xf32>
+    %1 = "stablehlo.all_reduce"(%0) ({
+    ^bb0(%a: tensor<f32>, %b: tensor<f32>):
+      %s = stablehlo.add %a, %b : tensor<f32>
+      stablehlo.return %s : tensor<f32>
+    }) : (tensor<4xf32>) -> tensor<4xf32>
+    return %1 : tensor<4xf32>
+  }
+}
+"""
+
+
+def test_first_collective_position_tuple():
+    pos = hlo.first_collective_position(MLIR_WITH_COLLECTIVE)
+    assert pos is not None
+    first, total = pos
+    assert 0 < first < total
+
+
+def test_first_collective_position_none_without_collectives():
+    """A program with no collectives has NO emission position — the
+    contract serving jaxprs on 1 device rely on (a local decode step
+    must not report a fabricated position)."""
+    f = jax.jit(lambda x: jnp.tanh(x) * 2)
+    text = f.lower(jnp.ones((4,))).as_text()
+    assert hlo.first_collective_position(text) is None
+    assert hlo.first_collective_position("") is None
+
+
+def test_first_collective_position_none_on_local_serve_decode():
+    """The motivating case: the 1-device local-reference serve decode
+    (gspmd mode) emits no collectives and must yield None, while the
+    hadronio serve decode on the same device yields a real position."""
+    from repro.configs.base import CommConfig
+    from repro.configs.registry import get_config
+    from repro.serving import dispatch
+
+    cfg = get_config("qwen2-0.5b-reduced")
+    local = dispatch.lowered_decode_text(
+        cfg, CommConfig(mode="gspmd", hierarchical=False), batch=2,
+        max_len=32)
+    assert hlo.first_collective_position(local) is None
+    wired = dispatch.lowered_decode_text(
+        cfg, CommConfig(mode="hadronio", slice_bytes=512, channels=2,
+                        hierarchical=False), batch=2, max_len=32)
+    pos = hlo.first_collective_position(wired)
+    assert pos is not None and 0 < pos[0] < pos[1]
+
+
 def test_roofline_terms_bottleneck():
     t = hlo.roofline_terms(flops=1e17, hbm_bytes=1e9, collective_bytes=1e9,
                            n_chips=256)

@@ -1,11 +1,13 @@
-"""Serving engine: batching exactness, eos, buckets, determinism."""
+"""Serving engine: batching exactness, eos, buckets, determinism,
+continuous batching, and the event-loop group."""
 import numpy as np
 import jax
 import pytest
 
+from repro.configs.base import CommConfig, ServeConfig
 from repro.configs.registry import get_config
 from repro.models import api
-from repro.serving import DecodeEngine, Request
+from repro.serving import DecodeEngine, Request, make_engine_group
 
 
 @pytest.fixture(scope="module")
@@ -64,3 +66,190 @@ def test_greedy_is_deterministic(qwen):
     a = eng.generate([Request(0, np.arange(6), max_new=6)])[0].tokens
     b = eng.generate([Request(0, np.arange(6), max_new=6)])[0].tokens
     np.testing.assert_array_equal(a, b)
+
+
+# ---------------------------------------------------------------------------
+# Continuous batching: admission at flush boundaries
+# ---------------------------------------------------------------------------
+
+
+def test_admitted_mid_flight_matches_solo(qwen):
+    """A request admitted into a freed slot at a flush boundary (the run
+    queue overflowing max_batch) generates exactly the tokens of a solo
+    run — the per-row exactness that makes continuous batching safe."""
+    cfg, params = qwen
+    rng = np.random.default_rng(3)
+    reqs = [Request(i, rng.integers(0, cfg.vocab_size,
+                                    size=int(rng.integers(4, 30))),
+                    max_new=3 + i % 3) for i in range(5)]
+    eng = DecodeEngine(cfg, params, max_batch=2, max_len=64)
+    batched = {r.uid: r.tokens.tolist() for r in eng.generate(reqs)}
+    assert sorted(batched) == list(range(5))
+    for r in reqs:
+        solo = DecodeEngine(cfg, params, max_batch=2,
+                            max_len=64).generate([r])[0]
+        assert batched[r.uid] == solo.tokens.tolist(), r.uid
+
+
+def _counting_engine(cfg, params, **kw):
+    """Engine whose (stubbed) model deterministically emits
+    ``(previous token + 1) % vocab`` — a NON-degenerate stream (the real
+    reduced model greedily repeats one constant token, which would hide
+    any off-by-one or reordering in the admission path)."""
+    import jax.numpy as jnp
+    eng = DecodeEngine(cfg, params, **kw)
+    V = cfg.vocab_size
+    eye = np.eye(V, dtype=np.float32) * 10.0
+
+    def fake_prefill(p, batch):
+        toks = np.asarray(batch["tokens"])
+        last = np.asarray(batch["last_pos"])
+        prev = toks[np.arange(toks.shape[0]), last]
+        cache = {"k": jnp.zeros((1, toks.shape[0], 4), jnp.float32)}
+        return jnp.asarray(eye[(prev + 1) % V]), cache
+
+    def fake_decode(p, cache, dec):
+        prev = np.asarray(dec["token"])
+        return jnp.asarray(eye[(prev + 1) % V]), cache
+
+    eng._prefill = fake_prefill
+    eng._decode = fake_decode
+    return eng
+
+
+def test_admission_exact_on_nondegenerate_stream(qwen):
+    """With a counting token stream, an admitted request must produce
+    EXACTLY [last+1, last+2, ...] — this catches the whole class of
+    'first prefill-sampled token consumed by decode but never recorded'
+    bugs that a constant-token model cannot see."""
+    cfg, params = qwen
+    eng = _counting_engine(cfg, params, max_batch=1, max_len=64)
+    reqs = [Request(0, np.asarray([5, 20]), max_new=4),
+            Request(1, np.asarray([7, 40]), max_new=4)]   # admitted
+    res = eng.generate(reqs)
+    assert [r.tokens.tolist() for r in res] == \
+        [[21, 22, 23, 24], [41, 42, 43, 44]]
+
+
+def test_admission_eos_on_first_token(qwen):
+    """A request whose FIRST generated token is eos finishes at
+    admission with exactly that one token (and the slot stays usable)."""
+    cfg, params = qwen
+    eng = _counting_engine(cfg, params, max_batch=1, max_len=64,
+                           eos_id=31)
+    reqs = [Request(0, np.asarray([3, 10]), max_new=3),
+            Request(1, np.asarray([4, 30]), max_new=5),   # t0 == eos
+            Request(2, np.asarray([6, 50]), max_new=2)]
+    res = eng.generate(reqs)
+    assert [r.tokens.tolist() for r in res] == \
+        [[11, 12, 13], [31], [51, 52]]
+
+
+def test_max_new_zero_generates_nothing(qwen):
+    """max_new=0 is prefill-only (score a prompt, warm a cache): zero
+    tokens, both as a resident and as an admitted request."""
+    cfg, params = qwen
+    eng = DecodeEngine(cfg, params, max_batch=1, max_len=64)
+    res = eng.generate([Request(0, np.arange(4), max_new=0),
+                        Request(1, np.arange(6), max_new=2),   # admitted
+                        Request(2, np.arange(5), max_new=0)])  # admitted
+    assert [len(r.tokens) for r in res] == [0, 2, 0]
+
+
+def test_admission_pad_never_exceeds_cache_capacity(qwen):
+    """An admitted prompt whose ADMIT_PAD rounding would pass max_len
+    must still fit the resident cache (the rounding clamps to the
+    sequence capacity): max_len=20, queued 17-token prompt."""
+    cfg, params = qwen
+    eng = DecodeEngine(cfg, params, max_batch=1, max_len=20)
+    reqs = [Request(0, np.arange(5), max_new=3),
+            Request(1, np.arange(17) % cfg.vocab_size, max_new=3)]
+    res = eng.generate(reqs)
+    assert [r.uid for r in res] == [0, 1]
+    solo = DecodeEngine(cfg, params, max_batch=1, max_len=20).generate(
+        [reqs[1]])[0]
+    np.testing.assert_array_equal(res[1].tokens, solo.tokens)
+
+
+def test_admission_respects_eos_freed_slots(qwen):
+    """Slots freed by eos (not just max_new) admit the next queued
+    request."""
+    cfg, params = qwen
+    first = DecodeEngine(cfg, params, max_batch=1, max_len=64).generate(
+        [Request(0, np.arange(5), max_new=8)])[0].tokens
+    eos = int(first[1])
+    eng = DecodeEngine(cfg, params, max_batch=1, max_len=64, eos_id=eos)
+    res = eng.generate([Request(0, np.arange(5), max_new=8),
+                        Request(1, np.arange(7), max_new=3)])
+    assert res[0].tokens[-1] == eos and len(res[0].tokens) <= 3
+    assert len(res[1].tokens) >= 1      # admitted after slot freed
+
+
+# ---------------------------------------------------------------------------
+# The event-loop group (serving through the comm stack)
+# ---------------------------------------------------------------------------
+
+
+def _group_tokens(cfg, params, serve, reqs, threads):
+    grp = make_engine_group(cfg, params, serve)
+    grp.submit(reqs)
+    res = sorted(grp.run(threads=threads), key=lambda r: r.uid)
+    return [tuple(r.tokens.tolist()) for r in res], grp
+
+
+def test_engine_group_matches_single_engine(qwen):
+    """The full subsystem (event loops + channel affinity + comm-backed
+    dispatch + continuous batching) returns exactly the legacy engine's
+    greedy tokens, threaded or not."""
+    cfg, params = qwen
+    rng = np.random.default_rng(0)
+    reqs = [Request(i, rng.integers(0, cfg.vocab_size,
+                                    size=int(rng.integers(4, 20))),
+                    max_new=4) for i in range(6)]
+    ref = [tuple(r.tokens.tolist())
+           for r in DecodeEngine(cfg, params, max_batch=4,
+                                 max_len=64).generate(reqs)]
+    serve = ServeConfig(event_loops=2, poll="adaptive", max_batch=4,
+                        max_len=64,
+                        comm=CommConfig(mode="hadronio", slice_bytes=1024,
+                                        channels=4, hierarchical=False))
+    got, grp = _group_tokens(cfg, params, serve, reqs, threads=True)
+    assert got == ref
+    # ownership facts: disjoint affinity, every loop served something
+    owned = [c for l in grp.loops for c in l.channels]
+    assert sorted(owned) == list(range(4))
+    assert all(l.results for l in grp.loops)
+    st = grp.poll_stats()
+    assert st.waits > 0
+
+
+def test_engine_group_poll_strategies_agree(qwen):
+    """busy / park / adaptive change HOW completions are awaited, never
+    the tokens."""
+    cfg, params = qwen
+    reqs = [Request(i, np.arange(5 + i) % cfg.vocab_size, max_new=3)
+            for i in range(3)]
+    outs = {}
+    for poll in ServeConfig.POLLS:
+        serve = ServeConfig(event_loops=1, poll=poll, max_batch=4,
+                            max_len=64,
+                            comm=CommConfig(mode="hadronio",
+                                            slice_bytes=2048, channels=2,
+                                            hierarchical=False))
+        outs[poll], grp = _group_tokens(cfg, params, serve, reqs,
+                                        threads=False)
+        st = grp.poll_stats()
+        if poll == "park":
+            assert st.spins == 0 and st.parks > 0
+    assert outs["busy"] == outs["park"] == outs["adaptive"]
+
+
+def test_serve_config_validation():
+    with pytest.raises(ValueError, match="poll"):
+        ServeConfig(poll="epoll")
+    with pytest.raises(ValueError, match="event_loops"):
+        ServeConfig(event_loops=0)
+    with pytest.raises(ValueError, match="disjoint"):
+        ServeConfig(event_loops=8,
+                    comm=CommConfig(mode="hadronio", channels=4,
+                                    hierarchical=False))

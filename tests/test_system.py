@@ -8,6 +8,10 @@ interpreters with XLA_FLAGS set — see tests/distributed/*.py):
   trajectories (the paper's transparency claim, end to end).
 * check_train_ft — fault injection -> supervised restart -> bitwise
   resume; elastic restore onto a smaller mesh.
+* check_serving — the multi-shard serving path (4 devices): prefill
+  gathering-write carve/re-merge, TP logit reduction, channel affinity,
+  engine-group continuous batching — bit-identical across modes,
+  affinities and event-loop counts.
 """
 import os
 import subprocess
@@ -42,4 +46,9 @@ def test_step_transparency_multidevice():
 
 def test_fault_tolerance_and_elastic():
     out = run_script("check_train_ft.py")
+    assert "ALL OK" in out
+
+
+def test_serving_multidevice():
+    out = run_script("check_serving.py")
     assert "ALL OK" in out
