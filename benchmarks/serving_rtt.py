@@ -35,6 +35,7 @@ from jax.sharding import PartitionSpec as P
 from benchmarks.common import (Row, block, percentile_rows, timeit_samples)
 from repro import compat
 from repro.configs.base import CommConfig
+from repro.core.backends import pipeline
 from repro.launch import hlo_analysis as hlo
 from repro.launch.mesh import make_mesh
 from repro.serving.event_loop import EventLoop, EventLoopGroup
@@ -129,6 +130,98 @@ def _dispatch_evidence_rows(channels: int = 2) -> list:
     return rows
 
 
+TOPO_MSG_SIZES = [1024, 64 * 1024]
+TOPO_MODE = "hadronio_overlap"
+
+
+def _topo_emit_fn(mesh, ctx, elems: int):
+    """One jitted serving logit-reduction through the staged emission
+    wire: every ring peer contributes a partial payload, the sum comes
+    back replicated (the decode TP-head exchange, isolated from model
+    compute so the rows measure emission structure only)."""
+    axes = tuple(mesh.axis_names)
+
+    def body(x):
+        return pipeline.emit_flat(x.reshape(-1), ctx, "all_reduce")
+
+    f = compat.shard_map(body, mesh=mesh, in_specs=P(axes),
+                         out_specs=P(), check_vma=False)
+    return jax.jit(f)
+
+
+def _topo_ctx(comm: CommConfig, mesh):
+    """Resolve the emission context for a serve mesh: pod-aware when the
+    mesh carries a pod axis (gated on ``comm.hierarchical``, exactly
+    like ``serving/dispatch.make_serve_step``)."""
+    from repro.core.backends.base import SyncContext
+    axes = tuple(mesh.axis_names)
+    if "pod" in axes:
+        data = tuple(a for a in axes if a != "pod")
+        return SyncContext.resolve(comm, data, "pod")
+    return SyncContext.resolve(comm, axes, None)
+
+
+def run_topo(*, msg_sizes=TOPO_MSG_SIZES, pod_counts=None,
+             channels: int = 4, leader_channels: int = 1,
+             iters: int = 20, smoke: bool = False) -> list:
+    """The mesh-growth sweep (the tentpole's headline table): RTT
+    percentiles of the serving logit reduction x pod count x emission
+    {flat, hierarchical leader-channel}, plus the cross-pod-collective
+    evidence rows — under leader emission the cross-pod count stays at
+    ``leader_channels`` as pods grow while flat emission keeps every
+    one of its ``channels`` collectives on the cross-pod link."""
+    from repro.configs.registry import get_config
+    from repro.launch.mesh import make_serve_mesh
+    from repro.serving import dispatch
+
+    n = len(jax.devices())
+    if pod_counts is None:
+        pod_counts = [p for p in (1, 2, 4) if p <= n and n % p == 0]
+    if smoke:
+        iters = min(iters, 5)
+        pod_counts = pod_counts[:2]
+    rows = []
+    cfg = get_config("qwen2-0.5b-reduced")
+    for pods in pod_counts:
+        mesh = make_serve_mesh(pods)
+        emissions = ("flat",) if pods == 1 else ("flat", "hierarchical")
+        for emission in emissions:
+            comm = CommConfig(
+                mode=TOPO_MODE, channels=channels,
+                aggregate="channel", flush="ready",
+                hierarchical=emission == "hierarchical",
+                leader_channels=leader_channels,
+                slice_bytes=max(64, min(msg_sizes) // channels))
+            ctx = _topo_ctx(comm, mesh)
+            for msg in msg_sizes:
+                elems = max(1, msg // 4)
+                fn = _topo_emit_fn(mesh, ctx, elems)
+                x = jnp.ones((n, elems), jnp.float32)
+
+                def once():
+                    block(fn(x))
+
+                samples = timeit_samples(once, warmup=2, iters=iters)
+                rows.extend(percentile_rows(
+                    "serving_rtt", "topo-sweep", emission, msg, channels,
+                    [samples], suffix=f"pods{pods}"))
+            if pods > 1:
+                # jaxpr evidence: in-pod vs cross-pod collective counts
+                # of one lowered decode step over this very mesh
+                text = dispatch.lowered_decode_text(cfg, comm, batch=n,
+                                                    mesh=mesh)
+                cp = hlo.cross_pod_collective_count(text, n // pods)
+                rows.append(Row(
+                    "serving_rtt", "topo-evidence", emission, 0, channels,
+                    f"cross_pod_collectives:pods{pods}",
+                    cp["cross_pod_total"], "ops", "derived"))
+                rows.append(Row(
+                    "serving_rtt", "topo-evidence", emission, 0, channels,
+                    f"in_pod_collectives:pods{pods}",
+                    cp["in_pod_total"], "ops", "derived"))
+    return rows
+
+
 def run(mesh=None, *, msg_sizes=MSG_SIZES, loops=LOOPS,
         conns_per_loop=CONNS_PER_LOOP, directions=DIRECTIONS,
         iters: int = 20, poll: str = "busy", smoke: bool = False,
@@ -191,8 +284,16 @@ def main() -> int:
     p.add_argument("--iters", type=int, default=20)
     p.add_argument("--csv", default="")
     p.add_argument("--json", default="")
+    p.add_argument("--topo", action="store_true",
+                   help="run the pod-topology sweep instead (RTT "
+                        "percentiles x pod count x emission "
+                        "{flat, hierarchical} + cross-pod collective "
+                        "evidence rows)")
     args = p.parse_args()
-    rows = run(iters=args.iters, poll=args.poll, smoke=args.smoke)
+    if args.topo:
+        rows = run_topo(iters=args.iters, smoke=args.smoke)
+    else:
+        rows = run(iters=args.iters, poll=args.poll, smoke=args.smoke)
     text = write_rows(rows, args.csv or None)
     if args.json:
         write_json(rows, args.json)

@@ -8,6 +8,13 @@ CommBackend wire.
   PYTHONPATH=src python examples/serve_batched.py \
       [--arch qwen2-0.5b-reduced] [--event-loops 2] [--poll adaptive] \
       [--comm-mode hadronio]
+
+  # two-level fabric (pods must divide the device count): pod-aware
+  # leader-channel emission with the leader lane pinned to loop 0
+  XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+  PYTHONPATH=src python examples/serve_batched.py --pods 2 \
+      --comm-mode hadronio_overlap --aggregate channel --flush ready \
+      --emission hierarchical
 """
 import argparse
 import time
@@ -33,6 +40,16 @@ def main():
     p.add_argument("--comm-mode", default="hadronio",
                    choices=available_modes())
     p.add_argument("--channels", type=int, default=4)
+    p.add_argument("--aggregate", default="slice",
+                   choices=CommConfig.AGGREGATES)
+    p.add_argument("--flush", default="step", choices=CommConfig.FLUSHES)
+    p.add_argument("--pods", type=int, default=1,
+                   help="two-level fabric pod count (must divide devices)")
+    p.add_argument("--pod-axis", default="pod")
+    p.add_argument("--leader-loops", type=int, default=1)
+    p.add_argument("--leader-channels", type=int, default=1)
+    p.add_argument("--emission", default="flat",
+                   choices=("flat", "hierarchical"))
     args = p.parse_args()
 
     cfg = get_config(args.arch)
@@ -40,9 +57,17 @@ def main():
     serve = ServeConfig(
         event_loops=args.event_loops, poll=args.poll,
         max_batch=args.max_batch, max_len=256,
+        pods=args.pods, pod_axis=args.pod_axis,
+        leader_loops=args.leader_loops,
         comm=CommConfig(mode=args.comm_mode, channels=args.channels,
-                        hierarchical=False))
+                        aggregate=args.aggregate, flush=args.flush,
+                        hierarchical=args.emission == "hierarchical",
+                        leader_channels=args.leader_channels))
     group = make_engine_group(cfg, params, serve)
+    if args.pods > 1:
+        print(f"two-level fabric: pods={args.pods}, "
+              f"emission={args.emission}, "
+              f"leader lanes={args.leader_channels}")
 
     rng = np.random.default_rng(0)
     reqs = [Request(uid=i,

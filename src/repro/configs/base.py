@@ -253,6 +253,15 @@ class CommConfig:
     aggregate: str = "slice"           # wire-flush granularity: slice | channel
     flush: str = "step"                # channel schedule: step | ready
     hierarchical: bool = True          # pod-aware two-level collectives
+    leader_channels: int = 1           # channels carved for cross-pod traffic
+    #   Under pod-aware hierarchical emission with aggregate="channel",
+    #   the LAST ``leader_channels`` channels of the pool are the leader
+    #   lanes: intra-pod stages ride the remaining (local) lanes and only
+    #   the 1/n_pod-reduced shards are coalesced onto leader lanes for the
+    #   cross-pod collective (UCX multi-rail: the scarce link gets its own
+    #   dedicated connections). Clamped at emission time to pool-1 so a
+    #   1-channel pool stays flat; ServeConfig validates the strict form
+    #   when pods are actually configured.
 
     COMPRESS_CODECS = ("none", "bf16", "int8_ef")
     PACK_IMPLS = ("jnp", "pallas")
@@ -290,6 +299,13 @@ class CommConfig:
                 f"{self.FLUSHES} ('ready' emits each channel's flush the "
                 "moment its last assigned bucket is staged; 'step' flushes "
                 "every channel at one end-of-exchange loop)")
+        if self.leader_channels < 1:
+            raise ValueError(
+                f"comm.leader_channels must be >= 1 (got "
+                f"{self.leader_channels}): the cross-pod stage of the "
+                "hierarchical emission needs at least one dedicated lane; "
+                "values >= comm.channels are clamped to channels-1 at "
+                "emission time (a 1-channel pool has no lane to carve)")
         assert self.slice_bytes > 0 and self.ring_capacity_bytes >= self.slice_bytes
 
 
@@ -317,6 +333,16 @@ class ServeConfig:
     traffic (see docs/SERVING.md). Serving payloads are activations, not
     gradients: wire compression (an error-feedback feature) is rejected
     by the dispatch layer.
+
+    ``pods`` configures the two-level serving fabric (docs/SERVING.md
+    §Topology): the serve mesh becomes ``(pods, devices//pods)`` over
+    ``(pod_axis, "data")``, and with ``comm.hierarchical`` the emission
+    decomposes so intra-pod traffic rides local channels and only the
+    1/n_pod-reduced shards cross pods on the ``comm.leader_channels``
+    leader lanes, which are pinned to the first ``leader_loops`` event
+    loops (topology-aware channel affinity). ``pods`` must divide the
+    device count — validated where the devices are known
+    (``launch/mesh.make_serve_mesh``), not here.
     """
 
     event_loops: int = 1
@@ -325,6 +351,9 @@ class ServeConfig:
     max_batch: int = 8                 # decode slots per event loop
     max_len: int = 256                 # prompt + generation bound (KV alloc)
     comm: CommConfig = field(default_factory=CommConfig)
+    pods: int = 1                      # two-level fabric: pod count
+    pod_axis: str = "pod"              # mesh axis name of the pod dimension
+    leader_loops: int = 1              # loops pinned to the leader lanes
 
     POLLS = ("busy", "park", "adaptive")
 
@@ -345,6 +374,33 @@ class ServeConfig:
                 "(raise comm.channels or lower event_loops)")
         if self.spin_us < 0:
             raise ValueError(f"serve.spin_us must be >= 0 ({self.spin_us})")
+        if self.pods < 1:
+            raise ValueError(f"serve.pods must be >= 1 (got {self.pods})")
+        if not self.pod_axis:
+            raise ValueError("serve.pod_axis must be a non-empty axis name")
+        if not 1 <= self.leader_loops <= self.event_loops:
+            raise ValueError(
+                f"serve.leader_loops={self.leader_loops} must be in "
+                f"[1, event_loops={self.event_loops}]: leader channels are "
+                "pinned to a designated subset of the loops, and at least "
+                "one loop must carry the cross-pod lanes")
+        if self.pods > 1 and self.comm.hierarchical:
+            if self.comm.leader_channels >= self.comm.channels:
+                raise ValueError(
+                    f"comm.leader_channels={self.comm.leader_channels} must "
+                    f"be < comm.channels={self.comm.channels} when serving "
+                    f"{self.pods} pods hierarchically: carving every lane "
+                    "for cross-pod traffic leaves no local lane for the "
+                    "in-pod stages (raise comm.channels or lower "
+                    "leader_channels)")
+            if self.event_loops > self.comm.channels - self.comm.leader_channels:
+                raise ValueError(
+                    f"serve.event_loops={self.event_loops} exceeds the "
+                    f"{self.comm.channels - self.comm.leader_channels} "
+                    f"LOCAL channels (channels={self.comm.channels} minus "
+                    f"leader_channels={self.comm.leader_channels}): under "
+                    "the two-level fabric every loop must own at least one "
+                    "local lane for its in-pod stages")
 
 
 @dataclass(frozen=True)

@@ -211,3 +211,19 @@ class HadronioOverlapBackend(CommBackend):
             unpack_bucket(red.reshape(-1), plan, b, leaves, out)
         synced = jax.tree.unflatten(treedef, out)
         return SyncResult(synced, None, plan, bucket_ef_result(new_efs))
+
+    def serve_emit(self, flat, ctx, kind):
+        """The overlap strategy's serving wire path always flushes when
+        ready: a serving payload's slices are staged in production order
+        and each channel's (or, pod-aware, each leader's) coalesced
+        collective goes out the moment its run completes — hadroNIO's
+        flush-on-writable applied to the latency-critical path. Pure
+        emission structure; values are bit-identical to the step
+        schedule (conformance-tested)."""
+        import dataclasses
+
+        from repro.core.backends import pipeline
+        ready = dataclasses.replace(ctx.comm, flush="ready")
+        rctx = dataclasses.replace(ctx, comm=ready)
+        group = jax.lax.psum(1, ctx.flat_axes) if kind == "all_gather" else 1
+        return pipeline.emit_flat(flat, rctx, kind, group=group)

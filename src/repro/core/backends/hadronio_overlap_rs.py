@@ -140,6 +140,18 @@ class HadronioOverlapRsBackend(CommBackend):
         return SyncResult(None, flat_shard, plan, bucket_ef_result(new_efs),
                           gather_axes)
 
+    def serve_emit(self, flat, ctx, kind):
+        """Serving payloads flush when ready (same rationale as the
+        tree-overlap mode: the latency-critical path never waits for the
+        step barrier). Emission structure only — bit-identical values."""
+        import dataclasses
+
+        from repro.core.backends import pipeline as pl
+        ready = dataclasses.replace(ctx.comm, flush="ready")
+        rctx = dataclasses.replace(ctx, comm=ready)
+        group = jax.lax.psum(1, ctx.flat_axes) if kind == "all_gather" else 1
+        return pl.emit_flat(flat, rctx, kind, group=group)
+
     def state_specs(self, run: RunConfig, n_shards: int,
                     pod_size: int = 1) -> StateSpecs:
         """Flat ZeRO-1 moment shards in bucketed layout (leading ring dim

@@ -47,11 +47,29 @@ write); this module owns the wire stages:
   all-reduce / reduce-scatter + unpack stage composed over the channel
   schedule.
 
+Under a pod-aware context with ``comm.aggregate="channel"`` the staged
+emission runs the TWO-LEVEL **leader-channel** schedule (the UCX
+multi-rail analogue: cross-pod links are the scarce resource and get
+dedicated connections): the pool is carved into LOCAL lanes and
+``comm.leader_channels`` LEADER lanes (:func:`channels_for`). A local
+lane's coalesced flush becomes the IN-POD stage only (reduce-scatter /
+gather over the data axis) and parks its 1/n_data intermediate; each
+leader lane coalesces the intermediates of its assigned local lanes
+(``flush_scheduler.make_leader_plan``) into ONE cross-pod collective,
+carves them back, and the in-pod return stage completes per lane. Under
+``comm.flush="ready"`` the leader flush fires the moment its last local
+lane stages (each pod's local flush triggers the leader flush —
+hadroNIO's flush-on-writable applied across the hierarchy), not at a
+global barrier. Cross-pod collective count drops from n_channels to
+n_leader_channels; numerics are bit-identical to the per-channel
+hierarchical path (identical per-element summation trees — concatenation
+before an elementwise psum changes nothing; gathers are data movement).
+
 Backends compose these; none of them re-implements a stage.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass
+from dataclasses import dataclass, field
 
 import jax
 import jax.numpy as jnp
@@ -60,7 +78,9 @@ from repro import compat
 from repro.configs.base import CommConfig
 from repro.core import compress as comp
 from repro.core.channels import ChannelFill, CommChannel, make_channels
-from repro.core.flush_scheduler import FlushPlan, make_flush_plan
+from repro.core.flush_scheduler import (FlushPlan, make_flush_plan,
+                                        make_leader_plan)
+from repro.core.hierarchical import in_group_size
 from repro.core.selector import barrier
 
 from repro.core.backends.base import SyncContext
@@ -68,19 +88,54 @@ from repro.core.backends.base import SyncContext
 _KINDS = ("all_reduce", "reduce_scatter", "all_gather")
 
 
+def leader_emission(ctx: SyncContext, pool_size: int) -> bool:
+    """True when the two-level leader-channel schedule applies: pod-aware
+    context, channel-granularity flushes, and a pool big enough to carve
+    (a 1-channel pool keeps the per-channel hierarchical path)."""
+    return (ctx.pod_axis is not None and ctx.comm.aggregate == "channel"
+            and pool_size >= 2)
+
+
+def _leader_split(ctx: SyncContext, idx: tuple) -> tuple:
+    """Carve the emitting pool into (local, leader) channel ids. The
+    GLOBAL leader lanes are the last ``comm.leader_channels`` ids of the
+    ``comm.channels`` pool (the topology-aware affinity pins exactly
+    those to the designated leader loops); an emitting pool that owns
+    none — a non-leader event loop — promotes its last owned lane, so
+    every loop can complete its cross-pod stage independently (numerics
+    are invariant to which lane carries it). A pool is never left
+    without a local lane."""
+    n_lead = min(ctx.comm.leader_channels, ctx.comm.channels - 1)
+    tail = range(ctx.comm.channels - n_lead, ctx.comm.channels)
+    leads = tuple(i for i in idx if i in tail)
+    locs = tuple(i for i in idx if i not in tail)
+    if not leads:
+        locs, leads = idx[:-1], (idx[-1],)
+    if not locs:
+        locs, leads = (leads[0],), leads[1:]
+    return locs, leads
+
+
 def channels_for(ctx: SyncContext, n_slices: int) -> list[CommChannel]:
     """The connection pool: at most ``comm.channels`` workers, pod-aware
     when the context resolved a pod axis. A context carrying
     ``channel_indices`` (the event-loop channel-affinity API) gets
     exactly that disjoint run of the global pool instead — the emitting
-    event loop OWNS those channels (serving/event_loop.py)."""
+    event loop OWNS those channels (serving/event_loop.py). Under the
+    two-level schedule (:func:`leader_emission`) the pool's leader lanes
+    come back flagged ``leader=True``, locals first."""
     if ctx.channel_indices:
         idx = tuple(ctx.channel_indices)[:max(1, n_slices)]
-        return make_channels(len(idx), ctx.flat_axes, pod_axis=ctx.pod_axis,
-                             data_axis=ctx.data_axis, indices=idx)
-    n = max(1, min(ctx.comm.channels, n_slices))
-    return make_channels(n, ctx.flat_axes, pod_axis=ctx.pod_axis,
-                         data_axis=ctx.data_axis)
+    else:
+        idx = tuple(range(max(1, min(ctx.comm.channels, n_slices))))
+    leaders = frozenset()
+    if leader_emission(ctx, len(idx)):
+        locs, leads = _leader_split(ctx, idx)
+        idx = locs + leads
+        leaders = frozenset(leads)
+    return make_channels(len(idx), ctx.flat_axes, pod_axis=ctx.pod_axis,
+                         data_axis=ctx.data_axis, indices=idx,
+                         leaders=leaders)
 
 
 def pack_impl(comm: CommConfig) -> str:
@@ -167,6 +222,14 @@ class EmitState:
     outs: list                    # per-item results
     last: dict                    # channel idx -> previous collective
     #                               output (aggregate="slice" chaining)
+    # -- two-level leader emission (empty leads = flat schedule) --------
+    leads: list = field(default_factory=list)   # leader CommChannels
+    lplan: FlushPlan = None       # local lane -> leader lane schedule
+    lfills: list = field(default_factory=list)  # per-leader ChannelFill
+    pending: dict = field(default_factory=dict)  # local lane id -> parked
+    #                               in-pod intermediate (awaiting leader)
+    lpad: dict = field(default_factory=dict)     # local lane id -> zero
+    #                               pad added for in-pod divisibility
 
 
 def _unpack_flush(buf: jax.Array, comm: CommConfig) -> jax.Array:
@@ -177,48 +240,133 @@ def _unpack_flush(buf: jax.Array, comm: CommConfig) -> jax.Array:
     return unpack_wire(buf.reshape(1, -1), comm).reshape(buf.shape)
 
 
+def _carve_reduce(st: EmitState, c: int, red: jax.Array) -> None:
+    """Carve one lane's fully reduced buffer back per item (all_reduce) —
+    the scattering read."""
+    red = _unpack_flush(red, st.ctx.comm) if st.unpack else red
+    off = 0
+    for i in st.plan.groups[c]:
+        n = st.staged[i].size
+        st.outs[i] = jax.lax.slice_in_dim(red, off, off + n).reshape(
+            st.staged[i].shape)
+        off += n
+
+
+def _carve_gather(st: EmitState, c: int, g: jax.Array) -> None:
+    """Carve one lane's gathered buffer back per item: the tiled result
+    is peer-major over the whole coalesced buffer, so item i's gathered
+    bytes are the same column range of every peer block."""
+    g = (_unpack_flush(g, st.ctx.comm) if st.unpack
+         else g).reshape(st.group, -1)
+    off = 0
+    for i in st.plan.groups[c]:
+        n = st.staged[i].size
+        st.outs[i] = jax.lax.slice(g, (0, off),
+                                   (st.group, off + n)).reshape(-1)
+        off += n
+
+
+def _carve_scatter(st: EmitState, c: int, sh: jax.Array) -> None:
+    """Carve one lane's scattered shard back per item (reduce_scatter:
+    each item contributes 1/group of its elements)."""
+    sh = _unpack_flush(sh, st.ctx.comm) if st.unpack else sh
+    off = 0
+    for i in st.plan.groups[c]:
+        n = st.staged[i].size // st.group
+        st.outs[i] = jax.lax.slice_in_dim(sh, off, off + n).reshape(
+            _scattered_shape(st.staged[i].shape, st.group))
+        off += n
+
+
+def _stage_local(st: EmitState, c: int, flats: list) -> None:
+    """The IN-POD stage of one local lane's coalesced flush (leader
+    emission): issue only the data-axis collective and park the 1/n_data
+    intermediate for the lane's leader. The all-reduce pad rule matches
+    ``psum_hierarchical`` exactly (zero tail scatters onto the last
+    shard), so the summation trees stay bit-identical."""
+    ch = st.chans[c]
+    if st.kind == "all_reduce":
+        buf = flats[0] if len(flats) == 1 else jnp.concatenate(flats)
+        pad = (-buf.shape[0]) % in_group_size(ch.data_axis)
+        if pad:
+            buf = jnp.pad(buf, (0, pad))
+        st.lpad[c] = pad
+        st.pending[c] = ch.in_pod_reduce_scatter(buf)
+    elif st.kind == "all_gather":
+        buf = flats[0] if len(flats) == 1 else jnp.concatenate(flats)
+        st.pending[c] = ch.in_pod_all_gather(buf)
+    else:
+        buf = interleave_for_scatter(flats, st.group)
+        st.pending[c] = ch.in_pod_reduce_scatter(buf)
+
+
+def _flush_leader(st: EmitState, l: int) -> None:
+    """The CROSS-POD stage: ONE coalesced leader-lane collective carrying
+    every parked in-pod intermediate of the local lanes assigned to
+    leader ``l``, carved back per lane, then the in-pod return stage
+    (all-reduce only) completes each lane's items. This is where the
+    cross-pod collective count drops from n_channels to
+    n_leader_channels."""
+    lanes = st.lplan.groups[l]
+    parts = [st.pending.pop(c) for c in lanes]
+    lens = [p.shape[0] for p in parts]
+    buf = parts[0] if len(parts) == 1 else jnp.concatenate(parts)
+    lead = st.leads[l]
+    if st.kind == "all_gather":
+        g = lead.cross_pod_all_gather(buf)
+        n_pods = g.shape[0] // buf.shape[0]
+        g = g.reshape(n_pods, -1)
+        off = 0
+        for c, n in zip(lanes, lens):
+            lane = jax.lax.slice(g, (0, off), (n_pods, off + n))
+            off += n
+            # (pods, data*len) -> (pods*data, len): pod-major peer order,
+            # matching the flat tiled gather over (pod,)+data axes
+            _carve_gather(st, c, lane.reshape(st.group, -1))
+    else:
+        red = lead.cross_pod_all_reduce(buf)
+        off = 0
+        for c, n in zip(lanes, lens):
+            shard = jax.lax.slice_in_dim(red, off, off + n)
+            off += n
+            if st.kind == "all_reduce":
+                full = st.chans[c].in_pod_all_gather(shard)
+                if st.lpad.get(c):
+                    full = jax.lax.slice_in_dim(
+                        full, 0, full.shape[0] - st.lpad[c])
+                _carve_reduce(st, c, full)
+            else:
+                _carve_scatter(st, c, shard)
+    st.lfills[l].flushed = True
+
+
 def _flush_channel(st: EmitState, c: int) -> None:
     """One coalesced wire flush: concatenate the channel's staged items
     into a single contiguous buffer, issue ONE collective, optionally run
     the unpack stage on the flushed buffer, carve the results back out
-    (the scattering read)."""
+    (the scattering read). Under leader emission the flush is only the
+    in-pod stage; the items complete when the lane's leader flushes
+    (:func:`_flush_leader`)."""
     idx = st.plan.groups[c]
-    items = [st.staged[i] for i in idx]
-    flats = [x.reshape(-1) for x in items]
+    flats = [st.staged[i].reshape(-1) for i in idx]
+    if st.leads:
+        _stage_local(st, c, flats)
+        st.fills[c].flushed = True
+        l = st.lplan.assign[c]
+        st.lfills[l].stage(c)
+        if st.ctx.comm.flush == "ready" and st.lfills[l].ready:
+            _flush_leader(st, l)
+        return
     if st.kind == "all_reduce":
         buf = flats[0] if len(flats) == 1 else jnp.concatenate(flats)
-        red = st.chans[c].all_reduce(buf)
-        red = _unpack_flush(red, st.ctx.comm) if st.unpack else red
-        off = 0
-        for i, f in zip(idx, flats):
-            st.outs[i] = jax.lax.slice_in_dim(
-                red, off, off + f.shape[0]).reshape(st.staged[i].shape)
-            off += f.shape[0]
+        _carve_reduce(st, c, st.chans[c].all_reduce(buf))
     elif st.kind == "all_gather":
-        # the serving gathering write: ONE coalesced gather per channel;
-        # the tiled result is peer-major over the whole coalesced buffer,
-        # so item i's gathered bytes are the same column range of every
-        # peer block (the scattering-read carve, no interleave needed)
+        # the serving gathering write: ONE coalesced gather per channel
         buf = flats[0] if len(flats) == 1 else jnp.concatenate(flats)
-        g = st.chans[c].all_gather(buf)
-        g = (_unpack_flush(g, st.ctx.comm) if st.unpack
-             else g).reshape(st.group, -1)
-        off = 0
-        for i, f in zip(idx, flats):
-            n = f.shape[0]
-            st.outs[i] = jax.lax.slice(g, (0, off),
-                                       (st.group, off + n)).reshape(-1)
-            off += n
+        _carve_gather(st, c, st.chans[c].all_gather(buf))
     else:
         buf = interleave_for_scatter(flats, st.group)
-        sh = st.chans[c].reduce_scatter(buf)
-        sh = _unpack_flush(sh, st.ctx.comm) if st.unpack else sh
-        off = 0
-        for i, f in zip(idx, flats):
-            n = f.shape[0] // st.group
-            st.outs[i] = jax.lax.slice_in_dim(sh, off, off + n).reshape(
-                _scattered_shape(st.staged[i].shape, st.group))
-            off += n
+        _carve_scatter(st, c, st.chans[c].reduce_scatter(buf))
     st.fills[c].flushed = True
 
 
@@ -230,14 +378,28 @@ def begin_emission(ctx: SyncContext, n_items: int, kind: str, *,
     under ``"step"``, contiguous production-order groups flushed the
     moment they fill under ``"ready"``. ``unpack=True`` additionally runs
     the unpack stage per flush (channel-local instead of bucket-local —
-    the scattering read keyed to the flush that produced the bytes)."""
+    the scattering read keyed to the flush that produced the bytes).
+
+    Under leader emission (:func:`leader_emission`) the pool splits into
+    local lanes (they get the bucket->channel plan) and leader lanes
+    (they get the second-level local-lane->leader plan,
+    ``make_leader_plan``); ``st.chans`` holds only the local lanes so
+    plan group ids stay aligned."""
     assert kind in _KINDS, kind
-    chans = channels_for(ctx, n_items)
-    plan = make_flush_plan(n_items, len(chans), ctx.comm.flush)
+    pool = channels_for(ctx, n_items)
+    local = [c for c in pool if not c.leader]
+    leads = [c for c in pool if c.leader]
+    plan = make_flush_plan(n_items, len(local), ctx.comm.flush)
     fills = [ChannelFill(frozenset(g)) for g in plan.groups]
-    return EmitState(ctx=ctx, kind=kind, group=group, unpack=unpack,
-                     plan=plan, chans=chans, fills=fills, staged={},
-                     outs=[None] * n_items, last={})
+    st = EmitState(ctx=ctx, kind=kind, group=group, unpack=unpack,
+                   plan=plan, chans=local, fills=fills, staged={},
+                   outs=[None] * n_items, last={})
+    if leads:
+        st.leads = leads
+        st.lplan = make_leader_plan(plan.n_channels, len(leads),
+                                    ctx.comm.flush)
+        st.lfills = [ChannelFill(frozenset(g)) for g in st.lplan.groups]
+    return st
 
 
 def stage_slices(st: EmitState, i: int, wire: jax.Array) -> list:
@@ -302,6 +464,13 @@ def finish_emission(st: EmitState) -> list:
                 assert fill.ready or st.ctx.comm.flush == "step", \
                     (c, fill.watermark)
                 _flush_channel(st, c)
+        # leader emission, flush="step": the second-level flush loop —
+        # every leader's coalesced cross-pod collective at the barrier
+        for l, fill in enumerate(st.lfills):
+            if not fill.flushed:
+                assert fill.ready or st.ctx.comm.flush == "step", \
+                    (l, fill.watermark)
+                _flush_leader(st, l)
     assert all(o is not None for o in st.outs), "emission incomplete"
     return st.outs
 

@@ -45,6 +45,13 @@ class CommChannel:
     axes: tuple               # DP axis names this channel reduces over
     pod_axis: Optional[str] = None   # set -> pod-aware 2-level collectives
     data_axis: Any = None     # in-pod DP axis (name or tuple) when pod-aware
+    leader: bool = False      # carved for cross-pod traffic (leader lane):
+    #                           under hierarchical channel-granularity
+    #                           emission, local lanes carry the in-pod
+    #                           stages and leader lanes the coalesced
+    #                           cross-pod collective (the UCX multi-rail
+    #                           analogue: the scarce link gets dedicated
+    #                           connections)
 
     def all_reduce(self, x: jax.Array) -> jax.Array:
         if self.pod_axis is not None:
@@ -67,6 +74,45 @@ class CommChannel:
         """One ring hop (the ping-pong primitive for the latency bench)."""
         perm = [(i, (i + 1) % n_shards) for i in range(n_shards)]
         return jax.lax.ppermute(x, axis, perm)
+
+    # -- split-level collectives (the two-level leader emission) --------
+    # A pod-aware exchange decomposes into an IN-POD stage on a local
+    # lane and a CROSS-POD stage on a leader lane. These are the same
+    # primitive ops psum_hierarchical composes — issuing them on separate
+    # channels never changes any element's summation tree, so leader
+    # emission is bit-identical to the per-channel hierarchical path.
+
+    def _pod_aware(self) -> None:
+        assert self.pod_axis is not None, \
+            f"channel {self.index}: split-level collectives need a pod axis"
+
+    def in_pod_reduce_scatter(self, x: jax.Array) -> jax.Array:
+        """In-pod stage of a hierarchical reduce: each in-pod peer keeps
+        its 1/n_data shard (trailing dim must divide the in-pod size)."""
+        self._pod_aware()
+        return jax.lax.psum_scatter(x, self.data_axis,
+                                    scatter_dimension=x.ndim - 1, tiled=True)
+
+    def in_pod_all_gather(self, x: jax.Array) -> jax.Array:
+        """In-pod gather (the return stage of a hierarchical all-reduce,
+        or the local stage of a hierarchical gather)."""
+        self._pod_aware()
+        return jax.lax.all_gather(x, self.data_axis, axis=x.ndim - 1,
+                                  tiled=True)
+
+    def cross_pod_all_reduce(self, x: jax.Array) -> jax.Array:
+        """Cross-pod sum of an in-pod-reduced shard — the leader lane's
+        collective (1/n_data of the flat bytes ride the scarce link)."""
+        self._pod_aware()
+        return jax.lax.psum(x, self.pod_axis)
+
+    def cross_pod_all_gather(self, x: jax.Array) -> jax.Array:
+        """Cross-pod gather of in-pod-gathered buffers: the result is
+        pod-major, matching the flattened (pod, data) peer order of a
+        flat tiled all_gather."""
+        self._pod_aware()
+        return jax.lax.all_gather(x, self.pod_axis, axis=x.ndim - 1,
+                                  tiled=True)
 
 
 @dataclass
@@ -98,17 +144,23 @@ class ChannelFill:
 
 def make_channels(n: int, axes: tuple, *, pod_axis: Optional[str] = None,
                   data_axis: Any = None,
-                  indices: Optional[tuple] = None) -> list[CommChannel]:
+                  indices: Optional[tuple] = None,
+                  leaders: frozenset = frozenset()) -> list[CommChannel]:
     """Build the channel pool. ``indices`` is the channel-affinity API
     (the event-loop serving subsystem, serving/event_loop.py): an event
     loop that OWNS a disjoint contiguous run of the global pool passes
     its run here and gets exactly those channels — ``n`` is ignored, the
     pool is the affinity set (Ibdxnet's per-thread connection ownership,
-    arXiv:1812.01963 — no two loops ever emit on the same channel)."""
+    arXiv:1812.01963 — no two loops ever emit on the same channel).
+    ``leaders`` marks channel ids carved as cross-pod leader lanes (the
+    two-level hierarchical emission; ``pipeline.channels_for`` resolves
+    the set relative to the emitting pool)."""
     if indices is not None:
-        return [CommChannel(int(i), axes, pod_axis, data_axis)
+        return [CommChannel(int(i), axes, pod_axis, data_axis,
+                            leader=int(i) in leaders)
                 for i in indices]
-    return [CommChannel(i, axes, pod_axis, data_axis) for i in range(n)]
+    return [CommChannel(i, axes, pod_axis, data_axis, leader=i in leaders)
+            for i in range(n)]
 
 
 def round_robin(n_items: int, n_channels: int) -> list[int]:

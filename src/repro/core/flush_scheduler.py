@@ -98,3 +98,31 @@ def make_flush_plan(n_items: int, n_channels: int,
         triggers.append(max(g))
     return FlushPlan(n_items, flush, groups, tuple(triggers),
                      tuple(assign))
+
+
+def make_leader_plan(n_local: int, n_leaders: int,
+                     flush: str = "step") -> FlushPlan:
+    """The SECOND level of the hierarchical emission: map the local-lane
+    flushes (the in-pod stages, ids ``0..n_local-1``) onto the leader
+    lanes that carry their coalesced cross-pod collective. The grouping
+    is ALWAYS contiguous (``ready_groups``): local lanes flush in lane
+    order under both schedules, so contiguous runs give each leader the
+    earliest possible readiness. ``flush`` only decides the trigger —
+    under ``"ready"`` a leader's cross-pod flush is emitted the moment
+    the LAST local lane assigned to it has staged its in-pod shard
+    (each pod's local flush triggers the leader flush, not a global
+    barrier); under ``"step"`` leaders flush in the end-of-exchange
+    loop, after every local lane."""
+    assert flush in FLUSHES, flush
+    assert n_local >= 1, n_local
+    assert n_leaders >= 1, n_leaders
+    n_leaders = min(n_leaders, n_local)
+    groups = ready_groups(n_local, n_leaders)
+    assign = [0] * n_local
+    triggers = []
+    for l, g in enumerate(groups):
+        for c in g:
+            assign[c] = l
+        triggers.append(max(g))
+    return FlushPlan(n_local, flush, groups, tuple(triggers),
+                     tuple(assign))

@@ -5,6 +5,15 @@ the paper's multi-rail transport selection in UCX. All-reduce over
 (pod, data) is decomposed as: reduce-scatter in-pod -> all-reduce
 cross-pod on 1/n_data of the bytes -> all-gather in-pod. Cross-pod traffic
 drops by the in-pod width.
+
+``psum_hierarchical`` pads internally when the trailing dim is not
+divisible by the in-pod ring size (serving payloads are arbitrary-length
+activation buffers, unlike TAC slices which are alignment-padded): the
+zero tail scatters onto the last shard, survives the cross-pod sum as
+zeros, and is trimmed after the gather — so flat and padded inputs see
+identical per-element summation trees. ``psum_scatter_hierarchical``
+keeps the divisibility requirement (a scatter RESULT is a 1/n shard;
+transparent padding would change its meaning) and raises a clear error.
 """
 from __future__ import annotations
 
@@ -12,21 +21,44 @@ import jax
 import jax.numpy as jnp
 
 
+def in_group_size(axes) -> int:
+    """Static ring size of one axis name or a tuple of names (the
+    psum-of-1 idiom: constant-folds at trace time)."""
+    return jax.lax.psum(1, axes)
+
+
 def psum_hierarchical(x: jax.Array, pod_axis: str | None,
                       data_axis: str) -> jax.Array:
-    """All-reduce over (pod_axis, data_axis), pod-aware. x: (..., S) with S
-    divisible by the data-axis size (TAC slices are padded to this)."""
+    """All-reduce over (pod_axis, data_axis), pod-aware. x: (..., S);
+    a trailing dim not divisible by the in-pod ring size is zero-padded
+    for the scatter and trimmed after the gather."""
     if pod_axis is None:
         return jax.lax.psum(x, data_axis)
+    group = in_group_size(data_axis)
+    s = x.shape[-1]
+    pad = (-s) % group
+    if pad:
+        x = jnp.pad(x, [(0, 0)] * (x.ndim - 1) + [(0, pad)])
     shard = jax.lax.psum_scatter(x, data_axis, scatter_dimension=x.ndim - 1,
                                  tiled=True)
     shard = jax.lax.psum(shard, pod_axis)
-    return jax.lax.all_gather(shard, data_axis, axis=x.ndim - 1, tiled=True)
+    full = jax.lax.all_gather(shard, data_axis, axis=x.ndim - 1, tiled=True)
+    return jax.lax.slice_in_dim(full, 0, s, axis=x.ndim - 1) if pad else full
 
 
 def psum_scatter_hierarchical(x: jax.Array, pod_axis: str | None,
                               data_axis: str) -> jax.Array:
-    """Reduce-scatter over data (+ cross-pod all-reduce of the shard)."""
+    """Reduce-scatter over data (+ cross-pod all-reduce of the shard).
+    The trailing dim MUST divide by the in-pod ring size — the result is
+    a 1/n shard, so padding cannot be hidden from the caller (TAC slices
+    are alignment-padded to guarantee this)."""
+    group = in_group_size(data_axis)
+    if x.shape[-1] % group != 0:
+        raise ValueError(
+            f"psum_scatter_hierarchical: trailing dim {x.shape[-1]} is not "
+            f"divisible by the in-pod ring size {group}; scatter shards "
+            "cannot be transparently padded — pad the payload to the "
+            "alignment first (aggregation.make_plan does)")
     shard = jax.lax.psum_scatter(x, data_axis, scatter_dimension=x.ndim - 1,
                                  tiled=True)
     if pod_axis is not None:

@@ -51,6 +51,41 @@ def ready_groups(n_slices: int, n_channels: int,
     return tuple(groups)
 
 
+def pod_aligned_groups(n_slices: int, n_groups: int,
+                       n_blocks: int) -> tuple:
+    """:func:`ready_groups` respecting pod boundaries: partition
+    ``0..n_slices-1`` into ``n_groups`` contiguous runs that NEVER
+    straddle one of ``n_blocks`` contiguous pod blocks (the blocks are
+    themselves the ``ready_groups`` partition). Used by the topology-
+    aware channel affinity: an event loop's owned channels all talk to
+    peers of the same pod, so its flushes complete on in-pod links
+    without waiting on a cross-pod straggler.
+
+    With ``n_groups >= n_blocks`` each block is split among the groups
+    assigned to it (balanced within the block); with fewer groups each
+    group owns whole consecutive blocks. Either way the result is a
+    disjoint, covering partition of contiguous runs."""
+    n_blocks = max(1, min(n_blocks, n_slices))
+    blocks = ready_groups(n_slices, n_blocks)
+    n_groups = max(1, min(n_groups, n_slices))
+    if n_groups < n_blocks:
+        # each group owns whole consecutive blocks (concatenation of
+        # contiguous blocks is contiguous)
+        owner_runs = ready_groups(n_blocks, n_groups)
+        return tuple(tuple(i for b in run for i in blocks[b])
+                     for run in owner_runs)
+    # distribute the groups over the blocks (ready_groups balances the
+    # per-block group counts), then split each block among its groups
+    per_block = [len(g) for g in ready_groups(n_groups, n_blocks)]
+    out = []
+    for b, block in enumerate(blocks):
+        out.extend(ready_groups(len(block), per_block[b]))
+        base = block[0]
+        out[-per_block[b]:] = [tuple(base + i for i in g)
+                               for g in out[-per_block[b]:]]
+    return tuple(g for g in out if g)
+
+
 def barrier(*trees: PyTree):
     """Pin ordering between pytrees (measurement fences in benchmarks)."""
     flat = [jax.tree.leaves(t) for t in trees]

@@ -128,6 +128,64 @@ def stablehlo_collective_stats(mlir_text: str) -> CollectiveStats:
 
 _MLIR_ANY_OP_RE = re.compile(r"stablehlo\.\w+")
 
+# "replica_groups = dense<[[0, 1], [2, 3]]> : tensor<2x2xi64>" — also the
+# splat form "dense<0> : tensor<1x1xi64>" XLA emits for degenerate groups
+_MLIR_GROUPS_RE = re.compile(r"replica_groups\s*=\s*dense<(.*?)>\s*:")
+_GROUP_BODY_RE = re.compile(r"\[([^\[\]]*)\]")
+
+# the kinds the two-level fabric decomposes (permutes/all-to-all carry
+# source-target pairs, not replica groups, and never ride leader lanes)
+_POD_KINDS = ("all-reduce", "all-gather", "reduce-scatter")
+
+
+def parse_replica_groups(line: str):
+    """Replica groups of one StableHLO collective line, as a list of
+    member-id lists — or None when the line carries no
+    ``replica_groups`` attribute. The splat form ``dense<c>`` (every
+    entry c — XLA's degenerate single-member groups) parses as
+    ``[[c]]``."""
+    m = _MLIR_GROUPS_RE.search(line)
+    if m is None:
+        return None
+    body = m.group(1).strip()
+    if not body.startswith("["):
+        return [[int(body)]]
+    return [[int(v) for v in g.split(",") if v.strip()]
+            for g in _GROUP_BODY_RE.findall(body)]
+
+
+def cross_pod_collective_count(mlir_text: str, in_pod_size: int) -> dict:
+    """Classify every emitted reduce/gather collective as IN-POD or
+    CROSS-POD — the headline evidence of the two-level serving fabric.
+    Device ids in ``replica_groups`` are flattened mesh indices with the
+    pod axis major (``make_serve_mesh`` builds the mesh that way), so
+    device ``m`` lives in pod ``m // in_pod_size`` and an op is
+    cross-pod iff some group spans two pods. Under leader emission the
+    cross-pod count drops from n_channels to n_leader_channels per
+    exchange while the flat schedule keeps every collective cross-pod.
+
+    Returns ``{"in_pod": {kind: n}, "cross_pod": {kind: n},
+    "in_pod_total": int, "cross_pod_total": int}``."""
+    assert in_pod_size >= 1, in_pod_size
+    out = {"in_pod": {}, "cross_pod": {}}
+    for line in mlir_text.splitlines():
+        m = _MLIR_OP_RE.search(line)
+        if m is None:
+            continue
+        kind = m.group(1).replace("_", "-")
+        if kind not in _POD_KINDS:
+            continue
+        groups = parse_replica_groups(line)
+        if groups is None:
+            continue
+        cross = any(len({mem // in_pod_size for mem in g}) > 1
+                    for g in groups)
+        side = "cross_pod" if cross else "in_pod"
+        out[side][kind] = out[side].get(kind, 0) + 1
+    out["in_pod_total"] = sum(out["in_pod"].values())
+    out["cross_pod_total"] = sum(out["cross_pod"].values())
+    return out
+
 
 def first_collective_position(mlir_text: str):
     """Emission-position evidence: ``(first, total)`` where ``first`` is

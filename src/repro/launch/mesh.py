@@ -25,6 +25,30 @@ def make_mesh(shape: tuple, axes: tuple):
     return compat.make_mesh(shape, axes)
 
 
+def make_serve_mesh(pods: int = 1, pod_axis: str = "pod", devices=None):
+    """The serving fabric's mesh: a flat DP ring at ``pods=1``, a
+    two-level ``(pod_axis, "data")`` topology otherwise — the shape
+    ``ServeConfig.pods`` / ``--pods`` flows into
+    ``serving/dispatch.make_serve_step`` (pod-aware leader emission) and
+    ``serving/event_loop.channel_affinity`` (topology-aware loop
+    ownership). ``devices`` defaults to every visible device; ``pods``
+    must divide the count (the pod is a physical partition, not a
+    round-robin)."""
+    import jax
+    n = len(devices if devices is not None else jax.devices())
+    if pods < 1:
+        raise ValueError(f"pods must be >= 1, got {pods}")
+    if n % pods != 0:
+        raise ValueError(
+            f"pods={pods} does not divide the device count {n}; a pod is "
+            "a physical partition of the fabric — pick a pod count that "
+            f"divides {n} (divisors: "
+            f"{[d for d in range(1, n + 1) if n % d == 0]})")
+    if pods == 1:
+        return compat.make_mesh((n,), ("data",))
+    return compat.make_mesh((pods, n // pods), (pod_axis, "data"))
+
+
 def make_abstract_mesh(shape: tuple, axes: tuple):
     """Device-free mesh for sharding-rule tests (signature-drift safe)."""
     return compat.abstract_mesh(shape, axes)

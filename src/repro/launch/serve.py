@@ -9,6 +9,13 @@ CLI::
   # paper §IV topology: 2 event loops, busy polling, hadronio wire
   python -m repro.launch.serve --arch qwen2-0.5b-reduced --requests 16 \
       --event-loops 2 --poll busy --comm-mode hadronio --channels 4
+
+  # two-level fabric: 2 pods, hierarchical leader-channel emission —
+  # intra-pod traffic stays on local channels, the 1/n-reduced shard
+  # rides the leader lane pinned to loop 0
+  python -m repro.launch.serve --arch qwen2-0.5b-reduced --requests 16 \
+      --event-loops 2 --comm-mode hadronio_overlap --channels 4 \
+      --aggregate channel --flush ready --pods 2 --emission hierarchical
 """
 from __future__ import annotations
 
@@ -69,19 +76,48 @@ def main() -> int:
     p.add_argument("--aggregate", default="slice",
                    choices=CommConfig.AGGREGATES)
     p.add_argument("--flush", default="step", choices=CommConfig.FLUSHES)
+    # the two-level serving fabric (pod topology)
+    p.add_argument("--pods", type=int, default=1,
+                   help="pod count of the two-level fabric; must divide "
+                        "the device count (1 = flat ring)")
+    p.add_argument("--pod-axis", default="pod",
+                   help="mesh axis name of the pod dimension")
+    p.add_argument("--leader-loops", type=int, default=1,
+                   help="event loops pinned to the cross-pod leader lanes")
+    p.add_argument("--leader-channels", type=int, default=1,
+                   help="channels carved from the pool tail as dedicated "
+                        "cross-pod leader lanes")
+    p.add_argument("--emission", default="flat",
+                   choices=("flat", "hierarchical"),
+                   help="flat: one-level ring collectives over all "
+                        "devices; hierarchical: pod-aware two-level "
+                        "leader-channel emission (bit-identical tokens, "
+                        "different wire structure)")
     args = p.parse_args()
 
     cfg = get_config(args.arch)
     params = load_params(args, cfg)
-    # no silent clamping: ServeConfig raises its own clear error when
-    # event_loops > channels (each loop must own a disjoint run)
+    # no silent clamping: ServeConfig raises its own clear errors when
+    # event_loops > channels (each loop must own a disjoint run) or the
+    # pod topology cannot be honored (leader lanes must leave every loop
+    # a local lane); make_serve_mesh rejects pods not dividing devices
     serve = ServeConfig(
         event_loops=args.event_loops, poll=args.poll,
         max_batch=args.batch, max_len=args.max_len,
+        pods=args.pods, pod_axis=args.pod_axis,
+        leader_loops=args.leader_loops,
         comm=CommConfig(mode=args.comm_mode, channels=args.channels,
                         aggregate=args.aggregate, flush=args.flush,
-                        hierarchical=False))
+                        hierarchical=args.emission == "hierarchical",
+                        leader_channels=args.leader_channels))
     group = make_engine_group(cfg, params, serve, seed=args.seed)
+    if args.pods > 1:
+        eng = group.loops[0].engine
+        print(f"[serve] two-level fabric: pods={args.pods} "
+              f"(axis {args.pod_axis!r}), emission={args.emission}, "
+              f"leader lanes={args.leader_channels} -> "
+              f"loops 0..{args.leader_loops - 1}, "
+              f"mesh={dict(eng.step.mesh.shape)}")
 
     rng = np.random.default_rng(args.seed)
     reqs = [Request(uid=i,

@@ -58,6 +58,10 @@ class ServeStep(NamedTuple):
     mesh: Any
     comm: CommConfig
     channel_indices: Optional[tuple]
+    pod_axis: Optional[str] = None   # resolved pod axis (None = flat ring:
+    #                               no pod dim in the mesh, or hierarchical
+    #                               collectives disabled in the config)
+    n_pods: int = 1
 
 
 def validate_serve_comm(comm: CommConfig):
@@ -73,10 +77,19 @@ def validate_serve_comm(comm: CommConfig):
 
 
 def make_serve_step(cfg: ModelConfig, comm: CommConfig, mesh=None, *,
-                    channel_indices: Optional[tuple] = None) -> ServeStep:
+                    channel_indices: Optional[tuple] = None,
+                    pod_axis: Optional[str] = None) -> ServeStep:
     """Build the TAC serve step for one (model, comm, mesh, affinity)
     combination. ``channel_indices`` is the emitting event loop's owned
-    run of the global channel pool (None = the full pool)."""
+    run of the global channel pool (None = the full pool).
+
+    ``pod_axis`` names the mesh's pod dimension for the two-level fabric
+    (``launch/mesh.make_serve_mesh``); None auto-detects an axis named
+    ``"pod"``. A detected pod axis flows into ``SyncContext.resolve``,
+    so the decode all-reduce and the prefill gathering write decompose
+    into in-pod stages plus the leader lanes' cross-pod collectives —
+    gated, like the training path, on ``comm.hierarchical`` (a False
+    config keeps the flat ring over the very same mesh)."""
     backend = validate_serve_comm(comm)
     if mesh is None:
         mesh = make_mesh((jax.device_count(),), ("data",))
@@ -88,7 +101,16 @@ def make_serve_step(cfg: ModelConfig, comm: CommConfig, mesh=None, *,
             "caches carry no uniform batch axis to re-merge after the "
             "gathering write (attention-family KV caches do)")
     chans = tuple(channel_indices) if channel_indices is not None else None
-    ctx = SyncContext.resolve(comm, axes, None, channel_indices=chans)
+    pod = pod_axis if pod_axis is not None else \
+        ("pod" if "pod" in axes else None)
+    if pod is not None and pod not in axes:
+        raise ValueError(f"pod_axis={pod!r} is not a mesh axis of {axes}")
+    data = tuple(a for a in axes if a != pod) if pod is not None else axes
+    if pod is not None and not data:
+        raise ValueError(
+            f"mesh {axes} has only the pod axis; the two-level fabric "
+            "needs an in-pod data axis (make_serve_mesh builds one)")
+    ctx = SyncContext.resolve(comm, data, pod, channel_indices=chans)
 
     # -- tensor-parallel LM head (the serving logit reduction) ----------
 
@@ -101,7 +123,7 @@ def make_serve_step(cfg: ModelConfig, comm: CommConfig, mesh=None, *,
         pad = ds * n_shards - d
         xp = jnp.pad(x, [(0, 0)] * (x.ndim - 1) + [(0, pad)]) if pad else x
         wp = jnp.pad(w, ((0, pad), (0, 0))) if pad else w
-        p = jax.lax.axis_index(axes)
+        p = jax.lax.axis_index(ctx.flat_axes)
         xs = jax.lax.dynamic_slice_in_dim(xp, p * ds, ds, axis=x.ndim - 1)
         ws = jax.lax.dynamic_slice_in_dim(wp, p * ds, ds, axis=0)
         partial = jnp.einsum("...d,dv->...v", xs, ws.astype(x.dtype))
@@ -116,7 +138,7 @@ def make_serve_step(cfg: ModelConfig, comm: CommConfig, mesh=None, *,
         assert b % n_shards == 0, \
             f"serve batch {b} not padded to the ring size {n_shards}"
         bs = b // n_shards
-        p = jax.lax.axis_index(axes)
+        p = jax.lax.axis_index(ctx.flat_axes)
         local = jax.tree.map(
             lambda t: jax.lax.dynamic_slice_in_dim(t, p * bs, bs, axis=0),
             batch)
@@ -164,17 +186,22 @@ def make_serve_step(cfg: ModelConfig, comm: CommConfig, mesh=None, *,
         decode_body, mesh=mesh, in_specs=(P(), P(), P()),
         out_specs=(P(), P()), check_vma=False))
     return ServeStep(prefill=prefill, decode=decode, n_shards=n_shards,
-                     mesh=mesh, comm=comm, channel_indices=chans)
+                     mesh=mesh, comm=comm, channel_indices=chans,
+                     pod_axis=ctx.pod_axis,
+                     n_pods=mesh.shape[pod] if pod is not None else 1)
 
 
 def lowered_decode_text(cfg: ModelConfig, comm: CommConfig, *,
                         batch: int = 2, max_len: int = 32, mesh=None,
-                        channel_indices: Optional[tuple] = None) -> str:
+                        channel_indices: Optional[tuple] = None,
+                        pod_axis: Optional[str] = None) -> str:
     """Emitted StableHLO of one serve decode step (shape-only lowering) —
     the evidence surface for 'serving collectives flow through the staged
     emission API' (conformance tests + benchmark evidence rows count its
-    collectives with ``launch/hlo_analysis``)."""
-    step = make_serve_step(cfg, comm, mesh, channel_indices=channel_indices)
+    collectives with ``launch/hlo_analysis``; the topology rows classify
+    them as in-pod vs cross-pod with ``cross_pod_collective_count``)."""
+    step = make_serve_step(cfg, comm, mesh, channel_indices=channel_indices,
+                           pod_axis=pod_axis)
     params = api.abstract(cfg)
     cache = api.cache_specs(cfg, batch, max_len)
     dec = {"token": jax.ShapeDtypeStruct((batch,), jnp.int32),

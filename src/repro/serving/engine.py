@@ -112,7 +112,8 @@ class DecodeEngine:
 
         if serve is not None:
             self.step = dispatch.make_serve_step(
-                cfg, serve.comm, mesh, channel_indices=channel_indices)
+                cfg, serve.comm, mesh, channel_indices=channel_indices,
+                pod_axis=serve.pod_axis if serve.pods > 1 else None)
             self._prefill = self.step.prefill
             self._decode = self.step.decode
             self.n_shards = self.step.n_shards
@@ -331,8 +332,26 @@ def make_engine_group(cfg: ModelConfig, params: PyTree, serve: ServeConfig,
     ``event_loops`` (the affinity changes emission structure, never
     logits — conformance-tested); temperature>0 requests draw from each
     engine's own PRNG stream, so sampled tokens legitimately vary with
-    the loop assignment."""
-    affinity = channel_affinity(serve.comm.channels, serve.event_loops)
+    the loop assignment.
+
+    With ``serve.pods > 1`` the group is TOPOLOGY-AWARE: the default
+    mesh becomes the two-level ``(pod_axis, "data")`` fabric
+    (``launch/mesh.make_serve_mesh``), and — when ``comm.hierarchical``
+    keeps pod-aware collectives on — the affinity pins the pool's
+    leader lanes to the first ``serve.leader_loops`` loops while each
+    remaining loop owns only local lanes whose peers share a pod
+    (``channel_affinity`` topology form)."""
+    if serve.pods > 1 and mesh is None:
+        from repro.launch.mesh import make_serve_mesh
+        mesh = make_serve_mesh(serve.pods, serve.pod_axis)
+    if serve.pods > 1 and serve.comm.hierarchical:
+        affinity = channel_affinity(
+            serve.comm.channels, serve.event_loops, n_pods=serve.pods,
+            leaders=min(serve.comm.leader_channels,
+                        serve.comm.channels - 1),
+            leader_loops=serve.leader_loops)
+    else:
+        affinity = channel_affinity(serve.comm.channels, serve.event_loops)
     loops = []
     for i, chans in enumerate(affinity):
         loop = EventLoop(i, channels=chans, poll=serve.poll,

@@ -47,18 +47,49 @@ from repro.core import selector
 POLLS = ("busy", "park", "adaptive")
 
 
-def channel_affinity(n_channels: int, n_loops: int) -> tuple:
+def channel_affinity(n_channels: int, n_loops: int, *, n_pods: int = 1,
+                     leaders: int = 0, leader_loops: int = 1) -> tuple:
     """Partition the global channel pool ``0..n_channels-1`` into
     ``n_loops`` DISJOINT contiguous runs — each event loop's owned
     connections (``selector.ready_groups`` is exactly this grouping rule,
     applied to channels instead of buckets). Raises when a loop would own
-    nothing: ownership is the invariant the subsystem is built on."""
-    if n_loops > n_channels:
+    nothing: ownership is the invariant the subsystem is built on.
+
+    The TOPOLOGY-AWARE form (``leaders > 0``) backs the two-level
+    serving fabric: the pool's LAST ``leaders`` channels are the
+    cross-pod leader lanes (``pipeline._leader_split`` carves the same
+    tail) and are pinned to the first ``leader_loops`` loops — the
+    designated leader loops, appended to their local runs. The remaining
+    LOCAL lanes are partitioned with ``selector.pod_aligned_groups`` so
+    a loop's owned locals never straddle a pod boundary: every loop's
+    flushes complete on in-pod links without waiting on a cross-pod
+    straggler, and only leader loops ever touch the scarce link.
+    Ownership stays disjoint and covering in both forms."""
+    if leaders <= 0:
+        if n_loops > n_channels:
+            raise ValueError(
+                f"{n_loops} event loops over {n_channels} channels: every "
+                "loop must own at least one channel (disjoint ownership); "
+                "raise comm.channels or lower event_loops")
+        return selector.ready_groups(n_channels, n_loops)
+    n_local = n_channels - leaders
+    if n_loops > n_local:
         raise ValueError(
-            f"{n_loops} event loops over {n_channels} channels: every "
-            "loop must own at least one channel (disjoint ownership); "
-            "raise comm.channels or lower event_loops")
-    return selector.ready_groups(n_channels, n_loops)
+            f"{n_loops} event loops over {n_local} local channels "
+            f"({n_channels} minus {leaders} leader lanes): every loop "
+            "must own at least one LOCAL channel (the in-pod stages are "
+            "what loops emit); raise comm.channels or lower event_loops")
+    if not 1 <= leader_loops <= n_loops:
+        raise ValueError(
+            f"leader_loops={leader_loops} must be in 1..{n_loops} "
+            "(a leader lane needs an owning loop, and only existing "
+            "loops can own one)")
+    groups = [list(g) for g in selector.pod_aligned_groups(
+        n_local, n_loops, min(n_pods, n_local))]
+    for l, run in enumerate(selector.ready_groups(leaders,
+                                                  min(leader_loops, leaders))):
+        groups[l].extend(n_local + i for i in run)
+    return tuple(tuple(g) for g in groups)
 
 
 @dataclass

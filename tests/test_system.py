@@ -12,6 +12,9 @@ interpreters with XLA_FLAGS set — see tests/distributed/*.py):
   gathering-write carve/re-merge, TP logit reduction, channel affinity,
   engine-group continuous batching — bit-identical across modes,
   affinities and event-loop counts.
+* check_topology — the two-level serving fabric (8 devices, 2 pods):
+  pod-aware psum parity, leader-channel emission conformance (flat vs
+  hierarchical), topology-aware affinity, cross-pod collective counts.
 """
 import os
 import subprocess
@@ -51,4 +54,9 @@ def test_fault_tolerance_and_elastic():
 
 def test_serving_multidevice():
     out = run_script("check_serving.py")
+    assert "ALL OK" in out
+
+
+def test_topology_multidevice():
+    out = run_script("check_topology.py")
     assert "ALL OK" in out
