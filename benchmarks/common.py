@@ -36,6 +36,17 @@ from repro.launch import hlo_analysis as hlo
 
 N_DEVICES = 8     # virtual host devices for measured numbers
 
+# The run-level seed recorded on every Row (JIB methodology: results must
+# carry the conditions that reproduce them). -1 = unseeded/legacy run.
+_RUN_SEED = -1
+
+
+def set_run_seed(seed: int) -> None:
+    """Record the benchmark invocation's ``--seed`` so every Row built
+    afterwards carries it (rows capture the seed at construction)."""
+    global _RUN_SEED
+    _RUN_SEED = int(seed)
+
 
 def ensure_devices() -> int:
     """Must be called before jax initializes (benchmarks/run.py does)."""
@@ -57,15 +68,17 @@ class Row:
     value: float
     unit: str
     kind: str          # measured | derived
+    seed: int = dataclasses.field(
+        default_factory=lambda: _RUN_SEED)   # reproducibility metadata
 
     def as_list(self):
         return [self.benchmark, self.figure, self.mode, self.msg_bytes,
                 self.channels, self.metric,
-                f"{self.value:.6g}", self.unit, self.kind]
+                f"{self.value:.6g}", self.unit, self.kind, self.seed]
 
 
 HEADER = ["benchmark", "figure", "mode", "msg_bytes", "channels", "metric",
-          "value", "unit", "kind"]
+          "value", "unit", "kind", "seed"]
 
 
 def write_rows(rows: Iterable[Row], path: str | None):

@@ -9,6 +9,8 @@ Benchmarks (see DESIGN.md §6):
   gradsync    (new) per-mode collective ops/bytes on real model grads
   serving_rtt Figs. 5-8 (multi-threaded) — uni/bi RTT percentiles through
               the EventLoopGroup (event loops x connections x msg size)
+  serving_chaos §Chaos+SLO — seeded fault scenarios x mode x event loops:
+              recovery + injection counts + p99.9 inflation
   roofline    §Roofline — three-term table from the dry-run artifacts
 """
 from benchmarks import common
@@ -21,7 +23,8 @@ import time                    # noqa: E402
 
 from benchmarks.common import write_json, write_rows   # noqa: E402
 
-BENCHES = ("latency", "throughput", "gradsync", "serving_rtt", "roofline")
+BENCHES = ("latency", "throughput", "gradsync", "serving_rtt",
+           "serving_chaos", "roofline")
 
 
 def main() -> int:
@@ -33,7 +36,10 @@ def main() -> int:
                         "benchmark-smoke artifact)")
     p.add_argument("--quick", action="store_true",
                    help="fewer sweep points (CI mode)")
+    p.add_argument("--seed", type=int, default=0,
+                   help="recorded in every row; drives the chaos plans")
     args = p.parse_args()
+    common.set_run_seed(args.seed)
 
     which = args.only or BENCHES
     rows = []
@@ -50,6 +56,9 @@ def main() -> int:
             kw = {"iters": 2}
         if args.quick and name == "serving_rtt":
             kw = {"smoke": True, "iters": 3}
+        if name == "serving_chaos":
+            kw = {"seed": args.seed, **({"smoke": True} if args.quick
+                                        else {})}
         rows.extend(mod.run(**kw))
         print(f"# {name}: {time.time() - t0:.1f}s", file=sys.stderr)
     text = write_rows(rows, args.csv or None)

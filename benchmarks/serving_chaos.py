@@ -1,0 +1,118 @@
+"""Chaos + SLO benchmark — seeded fault scenarios against the serving
+plane, reported as recovery rows and RTT-inflation percentiles.
+
+Ibdxnet's failure catalogue (arXiv:1812.01963) meets the JIB benchmark
+methodology (arXiv:1910.02245): for every (scenario x comm mode x
+event-loop count) cell the harness runs ONE fault-free baseline and one
+seeded fault run (``serving/chaos.py``), then reports
+
+* ``recovered:<scenario>:el<N>`` — 1.0 iff the served greedy tokens are
+  BIT-identical to the fault-free run (the hard SLO),
+* ``injected:<scenario>:el<N>`` — how many planned faults actually
+  fired (replay evidence: same --seed, same counts),
+* ``p999_inflation:<scenario>:el<N>`` — fault p99.9 RTT over baseline
+  p99.9 (the soft SLO; wall-clock, so CI asserts a generous bound),
+* per-scenario RTT percentile rows (p50/p99/p99.9, the JIB shape).
+
+The model is a deliberately tiny dense config: chaos cost is dominated
+by serve-step (re)compiles, and the recovery invariant is model-size
+independent — faults act on emission structure, host waits and the
+admission path, never on a logit.
+
+  PYTHONPATH=src python -m benchmarks.serving_chaos --smoke --seed 5 \
+      --json BENCH_chaos.json
+"""
+from __future__ import annotations
+
+import jax
+
+from benchmarks.common import Row, percentile_rows
+from repro.configs.base import ModelConfig
+from repro.serving import chaos
+
+MODES = ("hadronio", "hadronio_rs", "hadronio_overlap",
+         "hadronio_overlap_rs")
+SMOKE_MODES = ("hadronio", "hadronio_overlap")
+LOOPS = (1, 2, 4)
+SMOKE_LOOPS = (1, 2)
+CHANNELS = 4
+
+
+def _tiny_model():
+    cfg = ModelConfig(name="chaos-tiny", family="dense", num_layers=1,
+                      d_model=16, num_heads=2, num_kv_heads=2, d_ff=32,
+                      vocab_size=64, head_dim=8, param_dtype="float32",
+                      compute_dtype="float32")
+    from repro.models import api
+    return cfg, api.init(jax.random.PRNGKey(0), cfg)
+
+
+def run(*, modes=MODES, loops=LOOPS, scenarios=chaos.SCENARIOS,
+        seed: int = 0, smoke: bool = False) -> list:
+    if smoke:
+        modes = SMOKE_MODES
+        loops = SMOKE_LOOPS
+    from repro.launch.mesh import make_mesh
+    n = len(jax.devices())
+    mesh = make_mesh((n,), ("data",)) if n > 1 else None
+    cfg, params = _tiny_model()
+    reqs = chaos.make_requests(4, vocab_size=cfg.vocab_size,
+                               seed=1234 + seed)
+    rows = []
+    for mode in modes:
+        for el in loops:
+            serve = chaos.chaos_serve_config(mode, el, channels=CHANNELS)
+            chaos.run_baseline(cfg, params, serve, reqs, mesh=mesh)
+            # second, warm run: baseline RTTs must not be dominated by
+            # the serve-step compile the fault runs then get for free
+            base = chaos.run_baseline(cfg, params, serve, reqs, mesh=mesh)
+            for scenario in scenarios:
+                res = chaos.run_scenario(scenario, cfg, params, serve,
+                                         reqs, seed=seed, baseline=base,
+                                         mesh=mesh)
+                sfx = f"{scenario}:el{el}"
+                rep = res.report
+                rows.append(Row("serving_chaos", "chaos-slo", mode, 0,
+                                CHANNELS, f"recovered:{sfx}",
+                                1.0 if rep.recovered else 0.0, "bool",
+                                "measured"))
+                rows.append(Row("serving_chaos", "chaos-slo", mode, 0,
+                                CHANNELS, f"injected:{sfx}",
+                                rep.n_injected, "count", "derived"))
+                infl = rep.p999_inflation
+                if infl is not None:
+                    rows.append(Row("serving_chaos", "chaos-slo", mode, 0,
+                                    CHANNELS, f"p999_inflation:{sfx}",
+                                    infl, "ratio", "measured"))
+                rows.extend(percentile_rows(
+                    "serving_chaos", "chaos-slo", mode, 0, CHANNELS,
+                    res.rtts, suffix=sfx))
+    return rows
+
+
+def main() -> int:
+    import argparse
+
+    from benchmarks import common
+    from benchmarks.common import write_json, write_rows
+
+    p = argparse.ArgumentParser(description=__doc__)
+    p.add_argument("--smoke", action="store_true",
+                   help="CI sweep: 2 modes x {1,2} loops, all scenarios")
+    p.add_argument("--seed", type=int, default=0,
+                   help="drives every injection plan AND is recorded in "
+                        "each row's seed column — same seed, same trace")
+    p.add_argument("--csv", default="")
+    p.add_argument("--json", default="")
+    args = p.parse_args()
+    common.set_run_seed(args.seed)
+    rows = run(seed=args.seed, smoke=args.smoke)
+    text = write_rows(rows, args.csv or None)
+    if args.json:
+        write_json(rows, args.json)
+    print(text)
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

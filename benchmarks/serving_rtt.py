@@ -284,12 +284,17 @@ def main() -> int:
     p.add_argument("--iters", type=int, default=20)
     p.add_argument("--csv", default="")
     p.add_argument("--json", default="")
+    p.add_argument("--seed", type=int, default=0,
+                   help="recorded in every row's seed column (JIB "
+                        "methodology: rows carry their reproduction "
+                        "conditions)")
     p.add_argument("--topo", action="store_true",
                    help="run the pod-topology sweep instead (RTT "
                         "percentiles x pod count x emission "
                         "{flat, hierarchical} + cross-pod collective "
                         "evidence rows)")
     args = p.parse_args()
+    common.set_run_seed(args.seed)
     if args.topo:
         rows = run_topo(iters=args.iters, smoke=args.smoke)
     else:

@@ -87,6 +87,38 @@ from repro.core.backends.base import SyncContext
 
 _KINDS = ("all_reduce", "reduce_scatter", "all_gather")
 
+# ---------------------------------------------------------------------------
+# Chaos seam: an injectable flush fault (serving/chaos.py). The callable is
+# consulted by flush_ready() once per READY channel with the channel's pool
+# position and returns "drop" (defer the flush — the finish_emission step
+# barrier recovers it), "dup" (flush twice; re-emitting the identical
+# collective is idempotent, XLA dedups/DCEs the shadow), or None. Faults act
+# at TRACE time, so a seeded plan yields a deterministic injection trace, and
+# the staged-emission completeness contract guarantees recovery: every drop
+# is re-flushed at the barrier, every dup overwrites outs with equal values.
+# ---------------------------------------------------------------------------
+
+_FLUSH_FAULT = None
+
+
+def set_flush_fault(fault) -> None:
+    """Install ``fault(channel) -> "drop" | "dup" | None`` on the staged
+    emission's flush path. Callers MUST pair with
+    :func:`clear_flush_fault` (try/finally); the serve-step cache
+    (``serving/dispatch.py``) is bypassed while a fault is armed so a
+    faulted trace never poisons fault-free callers."""
+    global _FLUSH_FAULT
+    _FLUSH_FAULT = fault
+
+
+def clear_flush_fault() -> None:
+    global _FLUSH_FAULT
+    _FLUSH_FAULT = None
+
+
+def flush_fault_active() -> bool:
+    return _FLUSH_FAULT is not None
+
 
 def leader_emission(ctx: SyncContext, pool_size: int) -> bool:
     """True when the two-level leader-channel schedule applies: pod-aware
@@ -447,6 +479,18 @@ def flush_ready(st: EmitState) -> list:
     flushed: list = []
     for c, fill in enumerate(st.fills):
         if fill.ready:
+            if _FLUSH_FAULT is not None:
+                act = _FLUSH_FAULT(c)
+                if act == "drop":
+                    # deferred, not lost: the fill stays ready, so a later
+                    # flush_ready retries it and finish_emission's step
+                    # barrier flushes it unconditionally — the recovery
+                    # invariant the chaos harness asserts
+                    continue
+                if act == "dup" and not st.leads:
+                    _flush_channel(st, c)   # shadow flush: idempotent —
+                    #                         outs re-carved from an equal
+                    #                         collective result below
             _flush_channel(st, c)
             flushed.extend(st.plan.groups[c])
     return flushed

@@ -38,6 +38,33 @@ import jax
 from repro.core.hierarchical import (psum_hierarchical,
                                      psum_scatter_hierarchical)
 
+# ---------------------------------------------------------------------------
+# Chaos seam: an observer called at TRACE time for every collective a channel
+# emits, as ``hook(channel_index, kind)``. Tracing is deterministic, so the
+# recorded emission trace is the replay evidence the chaos harness
+# (serving/chaos.py) compares across same-seed runs — and the anchor the
+# slow-channel scenario keys its completion-wait delays to. None = no-op.
+# ---------------------------------------------------------------------------
+
+_COLLECTIVE_HOOK = None
+
+
+def set_collective_hook(hook) -> None:
+    """Install ``hook(channel_index, kind)`` on every CommChannel
+    collective (pair with :func:`clear_collective_hook`, try/finally)."""
+    global _COLLECTIVE_HOOK
+    _COLLECTIVE_HOOK = hook
+
+
+def clear_collective_hook() -> None:
+    global _COLLECTIVE_HOOK
+    _COLLECTIVE_HOOK = None
+
+
+def _note(ch: "CommChannel", kind: str) -> None:
+    if _COLLECTIVE_HOOK is not None:
+        _COLLECTIVE_HOOK(ch.index, kind)
+
 
 @dataclass(frozen=True)
 class CommChannel:
@@ -54,6 +81,7 @@ class CommChannel:
     #                           connections)
 
     def all_reduce(self, x: jax.Array) -> jax.Array:
+        _note(self, "all_reduce")
         if self.pod_axis is not None:
             return psum_hierarchical(x, self.pod_axis, self.data_axis)
         return jax.lax.psum(x, self.axes)
@@ -61,6 +89,7 @@ class CommChannel:
     def reduce_scatter(self, x: jax.Array) -> jax.Array:
         """Reduce + scatter over the channel's ring (in-pod when
         pod-aware, with a cross-pod all-reduce of the shard)."""
+        _note(self, "reduce_scatter")
         if self.pod_axis is not None:
             return psum_scatter_hierarchical(x, self.pod_axis,
                                              self.data_axis)
@@ -68,10 +97,12 @@ class CommChannel:
                                     scatter_dimension=x.ndim - 1, tiled=True)
 
     def all_gather(self, x: jax.Array) -> jax.Array:
+        _note(self, "all_gather")
         return jax.lax.all_gather(x, self.axes, axis=x.ndim - 1, tiled=True)
 
     def ping(self, x: jax.Array, axis: str, n_shards: int) -> jax.Array:
         """One ring hop (the ping-pong primitive for the latency bench)."""
+        _note(self, "ping")
         perm = [(i, (i + 1) % n_shards) for i in range(n_shards)]
         return jax.lax.ppermute(x, axis, perm)
 
@@ -90,6 +121,7 @@ class CommChannel:
         """In-pod stage of a hierarchical reduce: each in-pod peer keeps
         its 1/n_data shard (trailing dim must divide the in-pod size)."""
         self._pod_aware()
+        _note(self, "in_pod_reduce_scatter")
         return jax.lax.psum_scatter(x, self.data_axis,
                                     scatter_dimension=x.ndim - 1, tiled=True)
 
@@ -97,6 +129,7 @@ class CommChannel:
         """In-pod gather (the return stage of a hierarchical all-reduce,
         or the local stage of a hierarchical gather)."""
         self._pod_aware()
+        _note(self, "in_pod_all_gather")
         return jax.lax.all_gather(x, self.data_axis, axis=x.ndim - 1,
                                   tiled=True)
 
@@ -104,6 +137,7 @@ class CommChannel:
         """Cross-pod sum of an in-pod-reduced shard — the leader lane's
         collective (1/n_data of the flat bytes ride the scarce link)."""
         self._pod_aware()
+        _note(self, "cross_pod_all_reduce")
         return jax.lax.psum(x, self.pod_axis)
 
     def cross_pod_all_gather(self, x: jax.Array) -> jax.Array:
@@ -111,6 +145,7 @@ class CommChannel:
         pod-major, matching the flattened (pod, data) peer order of a
         flat tiled all_gather."""
         self._pod_aware()
+        _note(self, "cross_pod_all_gather")
         return jax.lax.all_gather(x, self.pod_axis, axis=x.ndim - 1,
                                   tiled=True)
 

@@ -51,6 +51,42 @@ def reshard_tac_opt(flat_mu: np.ndarray, flat_nu: np.ndarray,
             reshard_ring_segments(flat_nu, old_shards, new_shards, seg))
 
 
+def reshard_event_loops(serve, new_loops: int):
+    """Elastic reshard of the SERVING fleet: the same continue-on-a-
+    different-shape contract applied to event loops instead of devices.
+    Returns a re-validated :class:`~repro.configs.base.ServeConfig` with
+    ``event_loops=new_loops`` (``dataclasses.replace`` re-runs the config
+    invariants — a loop count the channel pool cannot feed raises here,
+    not mid-request); ``leader_loops`` is clamped so the leader lanes
+    always keep an owning loop. Served tokens are invariant to the
+    resize: affinity changes emission structure, never logits (the
+    conformance invariant), so a group rebuilt with the new config at a
+    flush boundary continues bit-identically — the recovery property the
+    chaos harness's reshard-mid-request scenario asserts."""
+    import dataclasses as _dc
+    return _dc.replace(serve, event_loops=new_loops,
+                       leader_loops=min(serve.leader_loops, new_loops))
+
+
+def reshard_affinity(n_channels: int, old_groups, new_loops: int, *,
+                     n_pods: int = 1, leaders: int = 0,
+                     leader_loops: int = 1):
+    """Re-derive the channel-affinity partition for a resized fleet and
+    report the migration: ``(new_groups, moved)`` where ``moved`` is the
+    sorted tuple of channel ids whose owning loop index changed — the
+    connections that must be handed to a different worker thread on a
+    netty-style rebalance. Ownership stays disjoint, contiguous and
+    covering in both partitions (``channel_affinity`` invariants)."""
+    from repro.serving.event_loop import channel_affinity
+    new_groups = channel_affinity(n_channels, new_loops, n_pods=n_pods,
+                                  leaders=leaders, leader_loops=leader_loops)
+    old_owner = {c: i for i, g in enumerate(old_groups) for c in g}
+    moved = tuple(sorted(
+        c for i, g in enumerate(new_groups) for c in g
+        if old_owner.get(c) != i))
+    return new_groups, moved
+
+
 def make_on_mismatch(run: RunConfig):
     """Shape-mismatch resolver for elastic restores. Ring-sized state is
     backend-owned, so the re-slice rule is the backend's

@@ -2,7 +2,8 @@ from repro.serving.engine import (DecodeEngine, Request, Result,
                                   make_engine_group)
 from repro.serving.event_loop import (EventLoop, EventLoopGroup, Poller,
                                       PollStats, channel_affinity)
+from repro.serving import chaos, slo
 
 __all__ = ["DecodeEngine", "Request", "Result", "make_engine_group",
            "EventLoop", "EventLoopGroup", "Poller", "PollStats",
-           "channel_affinity"]
+           "channel_affinity", "chaos", "slo"]

@@ -76,12 +76,29 @@ def validate_serve_comm(comm: CommConfig):
     return backend
 
 
+_STEP_CACHE: dict = {}
+
+
+def clear_serve_step_cache() -> None:
+    """Drop every memoized ServeStep (tests that need fresh traces)."""
+    _STEP_CACHE.clear()
+
+
 def make_serve_step(cfg: ModelConfig, comm: CommConfig, mesh=None, *,
                     channel_indices: Optional[tuple] = None,
                     pod_axis: Optional[str] = None) -> ServeStep:
     """Build the TAC serve step for one (model, comm, mesh, affinity)
     combination. ``channel_indices`` is the emitting event loop's owned
     run of the global channel pool (None = the full pool).
+
+    Steps are MEMOIZED per (cfg, comm, mesh, affinity, pod_axis): the
+    jitted functions close over nothing but the static topology (params
+    and cache are call arguments), so every engine/group built for the
+    same combination shares one compiled program instead of re-tracing
+    it — the chaos matrix and repeated conformance builds pay one
+    compile per affinity. The cache is bypassed (no lookup, no store)
+    while a flush fault is armed (``pipeline.set_flush_fault``), so a
+    faulted emission trace can never leak into fault-free callers.
 
     ``pod_axis`` names the mesh's pod dimension for the two-level fabric
     (``launch/mesh.make_serve_mesh``); None auto-detects an axis named
@@ -90,9 +107,16 @@ def make_serve_step(cfg: ModelConfig, comm: CommConfig, mesh=None, *,
     into in-pod stages plus the leader lanes' cross-pod collectives —
     gated, like the training path, on ``comm.hierarchical`` (a False
     config keeps the flat ring over the very same mesh)."""
+    from repro.core.backends import pipeline
     backend = validate_serve_comm(comm)
     if mesh is None:
         mesh = make_mesh((jax.device_count(),), ("data",))
+    cacheable = not pipeline.flush_fault_active()
+    key = (cfg, comm, mesh,
+           tuple(channel_indices) if channel_indices is not None else None,
+           pod_axis)
+    if cacheable and key in _STEP_CACHE:
+        return _STEP_CACHE[key]
     axes = tuple(mesh.axis_names)
     n_shards = int(np.prod([mesh.shape[a] for a in axes]))
     if n_shards > 1 and cfg.family in ("ssm", "hybrid"):
@@ -185,10 +209,13 @@ def make_serve_step(cfg: ModelConfig, comm: CommConfig, mesh=None, *,
     decode = jax.jit(compat.shard_map(
         decode_body, mesh=mesh, in_specs=(P(), P(), P()),
         out_specs=(P(), P()), check_vma=False))
-    return ServeStep(prefill=prefill, decode=decode, n_shards=n_shards,
+    step = ServeStep(prefill=prefill, decode=decode, n_shards=n_shards,
                      mesh=mesh, comm=comm, channel_indices=chans,
                      pod_axis=ctx.pod_axis,
                      n_pods=mesh.shape[pod] if pod is not None else 1)
+    if cacheable:
+        _STEP_CACHE[key] = step
+    return step
 
 
 def lowered_decode_text(cfg: ModelConfig, comm: CommConfig, *,

@@ -109,6 +109,12 @@ class DecodeEngine:
         self.poller = poller or Poller(
             serve.poll if serve else "park",
             serve.spin_us * 1e-6 if serve else 50e-6)
+        # chaos seam: the flush-boundary fault window. Called as
+        # hook(engine, step) at every decode-step boundary (after the
+        # poll, before queue admission); returned Requests join the run
+        # queue and contend for freed slots — the admission-storm
+        # injection point (serving/chaos.py). None = no-op.
+        self.admission_hook = None
 
         if serve is not None:
             self.step = dispatch.make_serve_step(
@@ -236,6 +242,14 @@ class DecodeEngine:
                         steps=steps + 1 - s.admitted_step))
                     slots[i] = None
             steps += 1
+            # the flush-boundary fault window: storm requests injected
+            # here enter the run queue like any client's and are admitted
+            # (or queued) by the very same slot loop below — per-row
+            # exactness keeps the residents' tokens bit-identical
+            if self.admission_hook is not None and not self._recurrent:
+                extra = self.admission_hook(self, steps)
+                if extra:
+                    pending.extend(extra)
             # continuous batching: admit from the run queue into freed
             # slots, at this flush boundary. Only the first max_batch
             # slots are admission-eligible — ring-padding rows beyond the

@@ -96,26 +96,39 @@ def channel_affinity(n_channels: int, n_loops: int, *, n_pods: int = 1,
 class PollStats:
     """How the loop waited: ``spins`` = readiness probes that came back
     not-ready, ``parks`` = blocking waits entered, ``waits`` = completed
-    wait calls. ``busy`` keeps parks at 0; ``park`` keeps spins at 0."""
+    wait calls, ``stalls`` = parks FORCED by the fault seam (the chaos
+    harness's over-parking loop — ``serving/chaos.py``). ``busy`` keeps
+    parks at 0; ``park`` keeps spins at 0; a fault-free run keeps stalls
+    at 0."""
     spins: int = 0
     parks: int = 0
     waits: int = 0
+    stalls: int = 0
 
     def merge(self, other: "PollStats") -> "PollStats":
         return PollStats(self.spins + other.spins,
                          self.parks + other.parks,
-                         self.waits + other.waits)
+                         self.waits + other.waits,
+                         self.stalls + other.stalls)
 
 
 class Poller:
     """Completion polling for one event loop (hadroNIO §IV-B: busy-poll
-    the worker vs. park in epoll; ``adaptive`` is the bounded spin)."""
+    the worker vs. park in epoll; ``adaptive`` is the bounded spin).
+
+    ``fault`` is the chaos seam (``serving/chaos.py``): when set, it is
+    called once at the top of every :meth:`wait` with the poller itself
+    and may sleep (a slow channel's completion arriving late) or return
+    ``"stall"`` to force an immediate park — the over-parking loop from
+    Ibdxnet's failure catalogue, counted in ``stats.stalls``. ``None``
+    (the default) is a zero-overhead no-op."""
 
     def __init__(self, poll: str = "busy", spin_s: float = 50e-6):
         assert poll in POLLS, poll
         self.poll = poll
         self.spin_s = spin_s
         self.stats = PollStats()
+        self.fault: Optional[Callable[["Poller"], Optional[str]]] = None
 
     @staticmethod
     def _handles(tree: Any) -> list:
@@ -135,7 +148,14 @@ class Poller:
         ``tree`` so call sites can chain."""
         handles = self._handles(tree)
         self.stats.waits += 1
-        if self.poll == "park":
+        if self.fault is not None and self.fault(self) == "stall":
+            self.stats.stalls += 1      # forced over-park (chaos seam)
+            self._park(handles)
+            return tree
+        if self.poll == "park" or (self.poll == "adaptive"
+                                   and self.spin_s <= 0):
+            # a zero spin budget IS park: straight to the epoll fallback,
+            # exactly one park and zero probe burns
             self._park(handles)
             return tree
         deadline = (time.perf_counter() + self.spin_s
@@ -163,6 +183,10 @@ class EventLoop:
         self.queue: deque = deque()       # run queue of in-flight items
         self.results: list = []
         self.error: Optional[BaseException] = None
+        # chaos seam: called with (loop, items) per drained batch, BEFORE
+        # the runner — the injection point for queue-level faults and the
+        # deterministic drain trace (serving/chaos.py)
+        self.drain_hook: Optional[Callable] = None
 
     def submit(self, item: Any) -> None:
         self.queue.append(item)
@@ -180,6 +204,8 @@ class EventLoop:
                 items = list(self.queue)
                 self.queue.clear()
                 assert self.runner is not None, "event loop has no runner"
+                if self.drain_hook is not None:
+                    self.drain_hook(self, items)
                 out.extend(self.runner(self, items))
         except BaseException as e:
             self.error = e
@@ -202,6 +228,10 @@ class EventLoopGroup:
             f"channel ownership must be disjoint: {[l.channels for l in loops]}"
         self.loops = list(loops)
         self._rr = 0
+        self.loop_failures = 0    # loops whose drain raised, across runs —
+        #                           the failure-propagation counter the
+        #                           chaos harness and the threaded-run
+        #                           regression tests assert on
 
     @property
     def n_loops(self) -> int:
@@ -234,12 +264,17 @@ class EventLoopGroup:
                 t.start()
             for t in ts:
                 t.join()
-            for l in self.loops:
-                if l.error is not None:
-                    raise l.error
+            failed = [l for l in self.loops if l.error is not None]
+            if failed:
+                self.loop_failures += len(failed)
+                raise failed[0].error
         else:
             for l in self.loops:
-                l.drain()
+                try:
+                    l.drain()
+                except BaseException:
+                    self.loop_failures += 1
+                    raise
         return [r for l in self.loops for r in l.results]
 
     def poll_stats(self) -> PollStats:

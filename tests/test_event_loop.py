@@ -29,6 +29,74 @@ def test_affinity_disjoint_contiguous_covering(n_channels, n_loops):
     assert max(sizes) - min(sizes) <= 1
 
 
+def _affinity_domain():
+    """Fixed-grid enumeration of the valid (n_channels, n_loops, n_pods,
+    leaders, leader_loops) domain — the no-hypothesis property-test
+    convention (see test_tac_core.py). ~360 cases."""
+    cases = []
+    for n_channels in (2, 3, 4, 6, 8, 12, 16):
+        for n_loops in (1, 2, 3, 4):
+            for n_pods in (1, 2, 4):
+                for leaders in (0, 1, 2):
+                    n_local = n_channels - leaders
+                    if leaders == 0:
+                        # the flat fabric has no pod structure in its
+                        # emission — pod alignment is a property of the
+                        # topology-aware (leaders > 0) form only
+                        if n_pods == 1 and n_loops <= n_channels:
+                            cases.append((n_channels, n_loops, 1, 0, 1))
+                        continue
+                    if n_local < 1 or n_loops > n_local:
+                        continue
+                    for leader_loops in (1, 2):
+                        if 1 <= leader_loops <= n_loops:
+                            cases.append((n_channels, n_loops, n_pods,
+                                          leaders, leader_loops))
+    return cases
+
+
+@pytest.mark.parametrize("n_channels,n_loops,n_pods,leaders,leader_loops",
+                         _affinity_domain())
+def test_affinity_property_grid(n_channels, n_loops, n_pods, leaders,
+                                leader_loops):
+    """Property test over the whole valid domain: the partition is
+    disjoint + covering, each loop's LOCAL run is contiguous, local runs
+    are pod-aligned (a run overlapping a partial pod block stays inside
+    that block), and leader lanes appear ONLY on the first
+    min(leader_loops, leaders) loops."""
+    groups = channel_affinity(n_channels, n_loops, n_pods=n_pods,
+                              leaders=leaders, leader_loops=leader_loops)
+    assert len(groups) == n_loops
+    flat = [c for g in groups for c in g]
+    assert sorted(flat) == list(range(n_channels))      # disjoint + cover
+    n_local = n_channels - leaders
+    lead_lanes = set(range(n_local, n_channels))
+    # pod blocks = the ready_groups partition of the LOCAL pool — the
+    # same (independently tested) primitive pod_aligned_groups blocks on
+    from repro.core import selector
+    blocks = selector.ready_groups(n_local, max(1, min(n_pods, n_local)))
+    for i, g in enumerate(groups):
+        local = [c for c in g if c not in lead_lanes]
+        assert local, "every loop owns at least one local channel"
+        assert list(local) == list(range(min(local), max(local) + 1))
+        # pod alignment: a run inside any pod block never leaks past it
+        for blk in blocks:
+            inside = [c for c in local if c in blk]
+            if inside and len(inside) != len(local):
+                # straddling is only legal at whole-block granularity:
+                # the overlap must BE the whole block
+                assert inside == list(blk), (
+                    f"loop {i} local run {local} straddles pod block "
+                    f"{list(blk)} partially")
+        owned_leads = [c for c in g if c in lead_lanes]
+        if i >= min(leader_loops, leaders):
+            assert not owned_leads, \
+                f"non-leader loop {i} owns leader lanes {owned_leads}"
+    owned_all_leads = [c for g in groups[:max(1, min(leader_loops, leaders))]
+                       for c in g if c in lead_lanes]
+    assert sorted(owned_all_leads) == sorted(lead_lanes)
+
+
 def test_affinity_rejects_more_loops_than_channels():
     with pytest.raises(ValueError, match="own at least one channel"):
         channel_affinity(2, 3)
@@ -96,9 +164,61 @@ def test_poller_ignores_non_array_leaves():
 
 
 def test_poll_stats_merge():
-    a, b = PollStats(1, 2, 3), PollStats(10, 20, 30)
+    a, b = PollStats(1, 2, 3, 4), PollStats(10, 20, 30, 40)
     m = a.merge(b)
-    assert (m.spins, m.parks, m.waits) == (11, 22, 33)
+    assert (m.spins, m.parks, m.waits, m.stalls) == (11, 22, 33, 44)
+
+
+def test_adaptive_zero_spin_budget_goes_straight_to_park():
+    """spin_s=0 IS park: exactly one park, ZERO spins — no probe burned
+    before the epoll fallback."""
+    p = Poller("adaptive", spin_s=0.0)
+    h = _Handle(ready_after=10**9)
+    p.wait([h])
+    assert h.blocked
+    assert (p.stats.spins, p.stats.parks, p.stats.waits) == (0, 1, 1)
+    # negative budgets behave identically (no busy window to honor)
+    p2 = Poller("adaptive", spin_s=-1.0)
+    p2.wait([_Handle(ready_after=10**9)])
+    assert (p2.stats.spins, p2.stats.parks) == (0, 1)
+
+
+@pytest.mark.parametrize("poll,ready_after,spins_bound,parks", [
+    ("busy", 1, (0, 0), 0),      # ready on first probe: no spin, no park
+    ("busy", 4, (3, 3), 0),      # N-1 not-ready probes, never parks
+    ("park", 1, (0, 0), 1),      # park never probes
+    ("adaptive", 1, (0, 0), 0),  # absorbed by the spin phase
+])
+def test_poller_counter_boundary_invariants(poll, ready_after, spins_bound,
+                                            parks):
+    p = Poller(poll, spin_s=10.0)
+    h = _Handle(ready_after=ready_after)
+    p.wait([h])
+    lo, hi = spins_bound
+    assert lo <= p.stats.spins <= hi
+    assert p.stats.parks == parks
+    assert p.stats.waits == 1
+    assert p.stats.stalls == 0           # no fault installed, ever
+
+
+def test_poller_fault_seam_delay_and_stall():
+    """The chaos seam: a fault hook may observe every wait (and sleep),
+    and returning "stall" forces one counted over-park regardless of the
+    strategy — the only path that increments ``stalls``."""
+    calls = []
+
+    def fault(poller):
+        calls.append(poller.stats.waits)
+        return "stall" if len(calls) == 2 else None
+
+    p = Poller("busy")
+    p.fault = fault
+    p.wait([_Handle(ready_after=1)])      # fault consulted, no stall
+    h = _Handle(ready_after=10**9)
+    p.wait([h])                           # forced over-park
+    assert calls == [1, 2]
+    assert p.stats.stalls == 1 and p.stats.parks == 1
+    assert h.blocked
 
 
 # ---------------------------------------------------------------------------
@@ -158,6 +278,39 @@ def test_threaded_run_propagates_loop_failure():
     grp2.submit([0, 1])
     with pytest.raises(RuntimeError, match="engine blew up"):
         grp2.run(threads=False)
+
+
+def test_threaded_failure_does_not_hang_siblings():
+    """Regression: one raising loop must not wedge or starve its
+    siblings — every survivor finishes its full drain (results intact),
+    the error surfaces on join, ``loop_failures`` counts the casualty,
+    and ``poll_stats()`` still merges the survivors' counters."""
+    def runner(loop, items):
+        loop.poller.wait([_Handle(ready_after=1)])   # survivors do poll
+        if loop.index == 2:
+            raise RuntimeError("loop 2 died")
+        return [(loop.index, it) for it in items]
+
+    loops = [EventLoop(i, channels=(i,), runner=runner) for i in range(4)]
+    grp = EventLoopGroup(loops)
+    grp.submit(list(range(8)))
+    with pytest.raises(RuntimeError, match="loop 2 died"):
+        grp.run(threads=True)
+    assert grp.loop_failures == 1
+    assert loops[2].error is not None
+    survivors = [l for l in loops if l.index != 2]
+    for l in survivors:
+        assert l.error is None
+        assert l.results == [(l.index, it) for it in range(l.index, 8, 4)]
+    # merged stats cover every loop that actually waited (all 4 reached
+    # the poller before the casualty raised)
+    st = grp.poll_stats()
+    assert st.waits == 4 and st.stalls == 0
+    # the group stays usable: resubmit to survivors-only indices works
+    ok = EventLoopGroup([EventLoop(0, channels=(0,),
+                                   runner=lambda l, it: it)])
+    ok.submit([1, 2])
+    assert ok.run(threads=True) == [1, 2] and ok.loop_failures == 0
 
 
 def test_drain_picks_up_items_submitted_mid_drain():

@@ -15,6 +15,9 @@ interpreters with XLA_FLAGS set — see tests/distributed/*.py):
 * check_topology — the two-level serving fabric (8 devices, 2 pods):
   pod-aware psum parity, leader-channel emission conformance (flat vs
   hierarchical), topology-aware affinity, cross-pod collective counts.
+* check_chaos — the chaos harness at 4 shards: seeded fault injection
+  replays deterministically and every scenario recovers bit-identically
+  over the real multi-shard emission structure.
 """
 import os
 import subprocess
@@ -60,3 +63,10 @@ def test_serving_multidevice():
 def test_topology_multidevice():
     out = run_script("check_topology.py")
     assert "ALL OK" in out
+
+
+def test_chaos_multidevice():
+    out = run_script("check_chaos.py")
+    assert "ALL OK" in out
+    assert out.count("replay deterministic @4 shards") == 5
+    assert out.count("recovered @4 shards") == 4
