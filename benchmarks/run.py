@@ -11,6 +11,8 @@ Benchmarks (see DESIGN.md §6):
               the EventLoopGroup (event loops x connections x msg size)
   serving_chaos §Chaos+SLO — seeded fault scenarios x mode x event loops:
               recovery + injection counts + p99.9 inflation
+              (--supervised adds the self-healing Supervisor sweep:
+              recovered_sup / healing / mttr rows per cell)
   roofline    §Roofline — three-term table from the dry-run artifacts
 """
 from benchmarks import common
@@ -38,6 +40,9 @@ def main() -> int:
                    help="fewer sweep points (CI mode)")
     p.add_argument("--seed", type=int, default=0,
                    help="recorded in every row; drives the chaos plans")
+    p.add_argument("--supervised", action="store_true",
+                   help="serving_chaos: also sweep every cell under the "
+                        "self-healing Supervisor")
     args = p.parse_args()
     common.set_run_seed(args.seed)
 
@@ -57,8 +62,8 @@ def main() -> int:
         if args.quick and name == "serving_rtt":
             kw = {"smoke": True, "iters": 3}
         if name == "serving_chaos":
-            kw = {"seed": args.seed, **({"smoke": True} if args.quick
-                                        else {})}
+            kw = {"seed": args.seed, "supervised": args.supervised,
+                  **({"smoke": True} if args.quick else {})}
         rows.extend(mod.run(**kw))
         print(f"# {name}: {time.time() - t0:.1f}s", file=sys.stderr)
     text = write_rows(rows, args.csv or None)

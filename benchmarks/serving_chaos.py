@@ -14,6 +14,21 @@ seeded fault run (``serving/chaos.py``), then reports
   p99.9 (the soft SLO; wall-clock, so CI asserts a generous bound),
 * per-scenario RTT percentile rows (p50/p99/p99.9, the JIB shape).
 
+``--supervised`` adds, per cell, a run under the self-healing
+:class:`~repro.serving.supervisor.Supervisor` (``run_supervised`` —
+two scenarios escalate so there is a REAL failure to heal):
+
+* ``recovered_sup:<scenario>:el<N>`` / ``injected_sup:...`` — the same
+  hard SLO, but the supervisor's own detect/heal loop does the
+  recovering,
+* ``healing:<scenario>:el<N>`` — healing actions in the supervisor's
+  seed-deterministic trace (>= 1 everywhere: the evidence the
+  supervisor healed, not the harness),
+* ``mttr:<scenario>:el<N>`` — mean detect→heal span in us (wall-clock;
+  generous bound in CI),
+* ``p999_inflation_sup:...`` — supervised-vs-unsupervised comparison:
+  both cells divide by the SAME fault-free baseline.
+
 The model is a deliberately tiny dense config: chaos cost is dominated
 by serve-step (re)compiles, and the recovery invariant is model-size
 independent — faults act on emission structure, host waits and the
@@ -48,7 +63,8 @@ def _tiny_model():
 
 
 def run(*, modes=MODES, loops=LOOPS, scenarios=chaos.SCENARIOS,
-        seed: int = 0, smoke: bool = False) -> list:
+        seed: int = 0, smoke: bool = False,
+        supervised: bool = False) -> list:
     if smoke:
         modes = SMOKE_MODES
         loops = SMOKE_LOOPS
@@ -87,6 +103,33 @@ def run(*, modes=MODES, loops=LOOPS, scenarios=chaos.SCENARIOS,
                 rows.extend(percentile_rows(
                     "serving_chaos", "chaos-slo", mode, 0, CHANNELS,
                     res.rtts, suffix=sfx))
+                if not supervised:
+                    continue
+                sup = chaos.run_supervised(scenario, cfg, params, serve,
+                                           reqs, seed=seed,
+                                           baseline=base, mesh=mesh)
+                srep = sup.report
+                rows.append(Row("serving_chaos", "chaos-slo", mode, 0,
+                                CHANNELS, f"recovered_sup:{sfx}",
+                                1.0 if srep.recovered else 0.0, "bool",
+                                "measured"))
+                rows.append(Row("serving_chaos", "chaos-slo", mode, 0,
+                                CHANNELS, f"injected_sup:{sfx}",
+                                srep.n_injected, "count", "derived"))
+                rows.append(Row("serving_chaos", "chaos-slo", mode, 0,
+                                CHANNELS, f"healing:{sfx}",
+                                srep.healing_actions, "count",
+                                "measured"))
+                if srep.mttr_s is not None:
+                    rows.append(Row("serving_chaos", "chaos-slo", mode,
+                                    0, CHANNELS, f"mttr:{sfx}",
+                                    srep.mttr_s * 1e6, "us", "measured"))
+                sinfl = srep.p999_inflation
+                if sinfl is not None:
+                    rows.append(Row("serving_chaos", "chaos-slo", mode,
+                                    0, CHANNELS,
+                                    f"p999_inflation_sup:{sfx}",
+                                    sinfl, "ratio", "measured"))
     return rows
 
 
@@ -102,11 +145,15 @@ def main() -> int:
     p.add_argument("--seed", type=int, default=0,
                    help="drives every injection plan AND is recorded in "
                         "each row's seed column — same seed, same trace")
+    p.add_argument("--supervised", action="store_true",
+                   help="per cell, also run under the self-healing "
+                        "Supervisor: recovered_sup/healing/mttr rows")
     p.add_argument("--csv", default="")
     p.add_argument("--json", default="")
     args = p.parse_args()
     common.set_run_seed(args.seed)
-    rows = run(seed=args.seed, smoke=args.smoke)
+    rows = run(seed=args.seed, smoke=args.smoke,
+               supervised=args.supervised)
     text = write_rows(rows, args.csv or None)
     if args.json:
         write_json(rows, args.json)

@@ -120,6 +120,66 @@ def flush_fault_active() -> bool:
     return _FLUSH_FAULT is not None
 
 
+# ---------------------------------------------------------------------------
+# Allocator seam: a buffer-pool hook on the staged emission path. The staged
+# emission materialises ONE coalesced wire buffer per channel flush (and one
+# wire buffer per item under aggregate="slice") — the ring-buffer allocation
+# of the paper's §III-C connection-granularity design. The hook is consulted
+# with (global channel index, wire bytes) right before that buffer is built;
+# it may sleep (host memory pressure / gc thrash — the chaos class ROADMAP
+# asked for) or raise (pool exhaustion), and like the flush fault it acts at
+# TRACE time, so seeded plans replay deterministically and the serve-step
+# cache is bypassed while armed (dispatch checks fault_active()).
+# ---------------------------------------------------------------------------
+
+_ALLOC_HOOK = None
+
+
+@dataclass
+class EmissionStats:
+    """Trace-time emission counters (cumulative module state — consumers
+    snapshot and diff): ``drops``/``dups`` = flush-fault verdicts applied,
+    ``allocs`` = wire-buffer allocations consulted. Deterministic for a
+    given program trace, which is what makes them usable as supervisor
+    health signals (``serving/supervisor.py`` diffs drops around each
+    drain to detect dropped flushes without any wall clock)."""
+    drops: int = 0
+    dups: int = 0
+    allocs: int = 0
+
+
+EMISSION_STATS = EmissionStats()
+
+
+def set_alloc_hook(hook) -> None:
+    """Install ``hook(channel_index, nbytes)`` on every staged wire-buffer
+    allocation. Pair with :func:`clear_alloc_hook` (try/finally)."""
+    global _ALLOC_HOOK
+    _ALLOC_HOOK = hook
+
+
+def clear_alloc_hook() -> None:
+    global _ALLOC_HOOK
+    _ALLOC_HOOK = None
+
+
+def alloc_hook_active() -> bool:
+    return _ALLOC_HOOK is not None
+
+
+def fault_active() -> bool:
+    """Any trace-affecting fault armed (flush fault OR alloc hook) — the
+    serve-step cache gate (``serving/dispatch.py``)."""
+    return _FLUSH_FAULT is not None or _ALLOC_HOOK is not None
+
+
+def _consult_alloc(channel_index: int, flats: list) -> None:
+    EMISSION_STATS.allocs += 1
+    if _ALLOC_HOOK is not None:
+        nbytes = sum(int(f.size) * f.dtype.itemsize for f in flats)
+        _ALLOC_HOOK(channel_index, nbytes)
+
+
 def leader_emission(ctx: SyncContext, pool_size: int) -> bool:
     """True when the two-level leader-channel schedule applies: pod-aware
     context, channel-granularity flushes, and a pool big enough to carve
@@ -381,6 +441,7 @@ def _flush_channel(st: EmitState, c: int) -> None:
     (:func:`_flush_leader`)."""
     idx = st.plan.groups[c]
     flats = [st.staged[i].reshape(-1) for i in idx]
+    _consult_alloc(st.chans[c].index, flats)   # coalesced wire buffer
     if st.leads:
         _stage_local(st, c, flats)
         st.fills[c].flushed = True
@@ -454,6 +515,7 @@ def stage_slices(st: EmitState, i: int, wire: jax.Array) -> list:
     if st.ctx.comm.aggregate == "slice":
         ch = st.chans[c]
         x = wire
+        _consult_alloc(ch.index, [x.reshape(-1)])  # per-item wire buffer
         if ch.index in st.last:
             x, _ = barrier(x, st.last[ch.index])
         if st.kind == "all_reduce":
@@ -486,8 +548,10 @@ def flush_ready(st: EmitState) -> list:
                     # flush_ready retries it and finish_emission's step
                     # barrier flushes it unconditionally — the recovery
                     # invariant the chaos harness asserts
+                    EMISSION_STATS.drops += 1
                     continue
                 if act == "dup" and not st.leads:
+                    EMISSION_STATS.dups += 1
                     _flush_channel(st, c)   # shadow flush: idempotent —
                     #                         outs re-carved from an equal
                     #                         collective result below

@@ -61,6 +61,13 @@ def clear_collective_hook() -> None:
     _COLLECTIVE_HOOK = None
 
 
+def get_collective_hook():
+    """The currently installed hook (None when clear) — lets a wrapper
+    (the supervisor's per-channel emission counter) COMPOSE with an
+    already-armed hook instead of clobbering it, and restore it after."""
+    return _COLLECTIVE_HOOK
+
+
 def _note(ch: "CommChannel", kind: str) -> None:
     if _COLLECTIVE_HOOK is not None:
         _COLLECTIVE_HOOK(ch.index, kind)

@@ -68,6 +68,41 @@ def reshard_event_loops(serve, new_loops: int):
                        leader_loops=min(serve.leader_loops, new_loops))
 
 
+def _minimal_regroup(n_channels: int, old_groups: tuple, new_loops: int):
+    """Minimal-migration repartition for the FLAT fabric. Shrink: the
+    surviving loops keep their runs and the removed TAIL loops' channels
+    coalesce onto the last survivor — only the removed loops' channels
+    change owner. Grow by ``k``: each added loop takes exactly ONE
+    channel from the pool tail (added loop ``i`` gets channel
+    ``n-k+i``); donors keep their prefixes. Returns None when the
+    minimal move would violate an ownership invariant (a donor emptied,
+    or a non-contiguous run) — the caller falls back to a full
+    recompute. Balance-to-within-one is deliberately NOT preserved:
+    fewer owner changes means fewer serve-step recompiles (the affinity
+    keys the step cache), which is the whole point of an in-flight
+    resize."""
+    old_k = len(old_groups)
+    if new_loops == old_k:
+        return old_groups
+    if new_loops < old_k:
+        groups = [list(g) for g in old_groups[:new_loops]]
+        tail = sorted(c for g in old_groups[new_loops:] for c in g)
+        groups[-1] = sorted(groups[-1] + tail)
+    else:
+        add = new_loops - old_k
+        donate = set(range(n_channels - add, n_channels))
+        groups = [[c for c in g if c not in donate] for g in old_groups]
+        if any(not g for g in groups):
+            return None               # a donor would own nothing
+        groups += [[c] for c in sorted(donate)]
+    for g in groups:                  # contiguous runs only
+        if list(g) != list(range(min(g), max(g) + 1)):
+            return None
+    if sorted(c for g in groups for c in g) != list(range(n_channels)):
+        return None                   # disjoint + covering
+    return tuple(tuple(g) for g in groups)
+
+
 def reshard_affinity(n_channels: int, old_groups, new_loops: int, *,
                      n_pods: int = 1, leaders: int = 0,
                      leader_loops: int = 1):
@@ -76,10 +111,27 @@ def reshard_affinity(n_channels: int, old_groups, new_loops: int, *,
     sorted tuple of channel ids whose owning loop index changed — the
     connections that must be handed to a different worker thread on a
     netty-style rebalance. Ownership stays disjoint, contiguous and
-    covering in both partitions (``channel_affinity`` invariants)."""
+    covering in both partitions (``channel_affinity`` invariants).
+
+    The FLAT fabric (no leader lanes, one pod) migrates MINIMALLY
+    (:func:`_minimal_regroup`): channels only move off removed loops on
+    a shrink, and only onto added loops on a grow — survivors keep
+    their serve steps warm across the resize. The TOPOLOGY form
+    (``leaders > 0`` or ``n_pods > 1``) always recomputes
+    ``channel_affinity``: pod alignment and leader pinning are
+    correctness constraints worth the extra migrations."""
     from repro.serving.event_loop import channel_affinity
-    new_groups = channel_affinity(n_channels, new_loops, n_pods=n_pods,
-                                  leaders=leaders, leader_loops=leader_loops)
+    old_groups = tuple(tuple(g) for g in old_groups)
+    if new_loops > n_channels:
+        # raise the standard ownership error
+        channel_affinity(n_channels, new_loops)
+    new_groups = None
+    if leaders <= 0 and n_pods <= 1:
+        new_groups = _minimal_regroup(n_channels, old_groups, new_loops)
+    if new_groups is None:
+        new_groups = channel_affinity(n_channels, new_loops, n_pods=n_pods,
+                                      leaders=leaders,
+                                      leader_loops=leader_loops)
     old_owner = {c: i for i, g in enumerate(old_groups) for c in g}
     moved = tuple(sorted(
         c for i, g in enumerate(new_groups) for c in g

@@ -16,6 +16,12 @@ CLI::
   python -m repro.launch.serve --arch qwen2-0.5b-reduced --requests 16 \
       --event-loops 2 --comm-mode hadronio_overlap --channels 4 \
       --aggregate channel --flush ready --pods 2 --emission hierarchical
+
+  # self-healing supervisor: bounded admission, retry/backoff healing,
+  # autoscaling between --event-loops (floor) and --max-loops
+  python -m repro.launch.serve --arch qwen2-0.5b-reduced --requests 32 \
+      --event-loops 1 --supervised --max-loops 4 --scale-up-depth 4 \
+      --admission-capacity 16 --dispatch-quantum 8
 """
 from __future__ import annotations
 
@@ -30,7 +36,8 @@ from repro.configs.base import CommConfig, ServeConfig
 from repro.checkpoint import CheckpointStore
 from repro.core.backends import available_modes
 from repro.models import api
-from repro.serving import Request, make_engine_group
+from repro.serving import (Request, RetryBudget, Supervisor,
+                           SupervisorConfig, make_engine_group)
 
 
 def load_params(args, cfg):
@@ -93,6 +100,30 @@ def main() -> int:
                         "devices; hierarchical: pod-aware two-level "
                         "leader-channel emission (bit-identical tokens, "
                         "different wire structure)")
+    # the self-healing supervisor (serving/supervisor.py)
+    p.add_argument("--supervised", action="store_true",
+                   help="run under the Supervisor: failure detection, "
+                        "retry/backoff healing, elastic autoscaling and "
+                        "admission backpressure")
+    p.add_argument("--admission-capacity", type=int, default=64,
+                   help="bounded admission queue; over capacity the "
+                        "lowest-priority request is shed with an "
+                        "explicit rejected outcome")
+    p.add_argument("--dispatch-quantum", type=int, default=0,
+                   help="requests dispatched per supervision round "
+                        "(0 = drain the whole queue)")
+    p.add_argument("--retry-limit", type=int, default=3,
+                   help="drain retry attempts before a structured "
+                        "retry_exhausted outcome")
+    p.add_argument("--max-loops", type=int, default=0,
+                   help="autoscale ceiling (0 = channel pool size); "
+                        "--event-loops is the starting size")
+    p.add_argument("--scale-up-depth", type=float, default=8.0,
+                   help="queued requests per loop that votes to grow "
+                        "the fleet")
+    p.add_argument("--scale-down-depth", type=float, default=-1.0,
+                   help="backlog per loop that votes to shrink "
+                        "(negative disables shrinking)")
     args = p.parse_args()
 
     cfg = get_config(args.arch)
@@ -110,7 +141,19 @@ def main() -> int:
                         aggregate=args.aggregate, flush=args.flush,
                         hierarchical=args.emission == "hierarchical",
                         leader_channels=args.leader_channels))
-    group = make_engine_group(cfg, params, serve, seed=args.seed)
+    sup = None
+    if args.supervised:
+        sup = Supervisor(cfg, params, serve, seed=args.seed,
+                         config=SupervisorConfig(
+                             admission_capacity=args.admission_capacity,
+                             dispatch_quantum=args.dispatch_quantum,
+                             max_loops=args.max_loops,
+                             scale_up_depth=args.scale_up_depth,
+                             scale_down_depth=args.scale_down_depth,
+                             retry=RetryBudget(limit=args.retry_limit)))
+        group = sup.group
+    else:
+        group = make_engine_group(cfg, params, serve, seed=args.seed)
     if args.pods > 1:
         eng = group.loops[0].engine
         print(f"[serve] two-level fabric: pods={args.pods} "
@@ -126,16 +169,30 @@ def main() -> int:
                     max_new=args.max_new, temperature=args.temperature)
             for i in range(args.requests)]
     t0 = time.time()
-    group.submit(reqs)
-    results = sorted(group.run(threads=args.event_loops > 1),
-                     key=lambda r: r.uid)
+    if sup is not None:
+        sup.submit(reqs)
+        results = sup.run(threads=args.event_loops > 1)
+        group = sup.group          # may have been rebuilt by a resize
+    else:
+        group.submit(reqs)
+        results = sorted(group.run(threads=args.event_loops > 1),
+                         key=lambda r: r.uid)
     dt = time.time() - t0
     tok = sum(len(r.tokens) for r in results)
-    st = group.poll_stats()
+    st = sup.poll_stats() if sup is not None else group.poll_stats()
     print(f"[serve] {len(results)} requests, {tok} tokens in {dt:.2f}s "
           f"({tok / dt:.1f} tok/s) | {serve.event_loops} event loop(s), "
           f"poll={serve.poll} (spins={st.spins} parks={st.parks}), "
           f"comm={args.comm_mode}")
+    if sup is not None:
+        shed = sum(1 for o in sup.outcomes.values()
+                   if o.status == "rejected")
+        print(f"[serve] supervisor: {sup.rounds} rounds, "
+              f"{len(sup.trace)} healing actions, {shed} shed, "
+              f"fleet={sup.group.n_loops} loops, mttr="
+              f"{sup.mttr_s() if sup.trace else None}")
+        for a in sup.healing_trace():
+            print(f"  heal round={a[0]} {a[1]} target={a[2]} {a[3]}")
     for loop in group.loops:
         print(f"  loop {loop.index}: channels={loop.channels} "
               f"results={len(loop.results)}")

@@ -1,9 +1,14 @@
 from repro.serving.engine import (DecodeEngine, Request, Result,
                                   make_engine_group)
-from repro.serving.event_loop import (EventLoop, EventLoopGroup, Poller,
-                                      PollStats, channel_affinity)
+from repro.serving.event_loop import (EventLoop, EventLoopGroup,
+                                      LoopFailure, Poller, PollStats,
+                                      channel_affinity)
+from repro.serving.supervisor import (HealAction, Outcome, RetryBudget,
+                                      Supervisor, SupervisorConfig)
 from repro.serving import chaos, slo
 
 __all__ = ["DecodeEngine", "Request", "Result", "make_engine_group",
-           "EventLoop", "EventLoopGroup", "Poller", "PollStats",
-           "channel_affinity", "chaos", "slo"]
+           "EventLoop", "EventLoopGroup", "LoopFailure", "Poller",
+           "PollStats", "channel_affinity", "HealAction", "Outcome",
+           "RetryBudget", "Supervisor", "SupervisorConfig", "chaos",
+           "slo"]

@@ -29,13 +29,24 @@ shims — the table lives in docs/SERVING.md §Chaos + SLO):
 * ``reshard_mid_request`` — the fleet resized at a flush boundary via
   ``launch/elastic.reshard_event_loops`` / ``reshard_affinity``: queued
   requests migrate to a group with a different loop count and affinity.
+* ``mem_pressure`` — seeded host-memory pressure on the staged
+  emission's wire-buffer allocations (``pipeline.set_alloc_hook``): gc
+  thrash slows the coalesced-buffer build. Under the SUPERVISED runner
+  the first event escalates to a pool-exhaustion raise the supervisor
+  must heal with its retry budget.
 
-Because faults either act at trace time (flush structure), on host-side
-waits (delays/stalls), or through the ordinary admission path (storms,
-reshard), NONE of them can change a served logit — that is the point.
-The harness proves the stack absorbs them: drops re-flush at the
-barrier, duplicates are idempotent, storms ride per-row exactness,
-resizes ride the affinity-invariance of the conformance contract.
+Because faults either act at trace time (flush structure, allocations),
+on host-side waits (delays/stalls), or through the ordinary admission
+path (storms, reshard), NONE of them can change a served logit — that
+is the point. The harness proves the stack absorbs them: drops re-flush
+at the barrier, duplicates are idempotent, storms ride per-row
+exactness, resizes ride the affinity-invariance of the conformance
+contract.
+
+:func:`run_supervised` runs the same plans under the
+:class:`~repro.serving.supervisor.Supervisor` — the acceptance bar is
+recovery WITHOUT the harness doing any healing itself, evidenced by the
+supervisor's own seed-deterministic healing trace.
 """
 from __future__ import annotations
 
@@ -54,9 +65,21 @@ from repro.serving.engine import Request, make_engine_group
 from repro.serving.event_loop import EventLoopGroup
 
 SCENARIOS = ("slow_channel", "stalled_loop", "dropped_flush",
-             "admission_storm", "reshard_mid_request")
+             "admission_storm", "reshard_mid_request", "mem_pressure")
 
 STORM_UID_BASE = 1_000_000   # injected storm traffic lives above this uid
+
+
+class ChaosMemPressure(MemoryError):
+    """Escalated mem_pressure event: the wire-buffer pool is exhausted.
+    Raised from the allocation seam at TRACE time so the drain fails —
+    the supervisor's retry budget must re-trace past the consumed
+    event."""
+
+
+class ChaosFlushError(RuntimeError):
+    """Injected one-shot drain failure (supervised dropped_flush): the
+    transient send-thread crash the retry/backoff budget heals."""
 
 
 # ---------------------------------------------------------------------------
@@ -68,12 +91,13 @@ STORM_UID_BASE = 1_000_000   # injected storm traffic lives above this uid
 class Injection:
     """One planned fault. ``step`` is scenario-local: a completion-wait
     index (slow_channel / stalled_loop), a flush_ready consult index
-    (dropped_flush), a flush-boundary step (admission_storm), or the
-    request split point (reshard_mid_request)."""
+    (dropped_flush), a flush-boundary step (admission_storm), the
+    request split point (reshard_mid_request), or a wire-buffer
+    allocation consult index (mem_pressure)."""
     step: int
     target: int        # channel id / loop id / burst size / new loop count
-    kind: str          # delay | stall | drop | dup | burst | resize
-    magnitude: float   # seconds (delay/stall), request count (burst)
+    kind: str          # delay | stall | drop | dup | burst | resize | pressure
+    magnitude: float   # seconds (delay/stall/pressure), req count (burst)
 
 
 @dataclass(frozen=True)
@@ -129,12 +153,16 @@ def make_plan(scenario: str, seed: int, *, n_channels: int = 4,
         for s in steps(1):
             events.append(Injection(s, int(rng.integers(1, max_burst + 1)),
                                     "burst", 0.0))
-    else:   # reshard_mid_request
+    elif scenario == "reshard_mid_request":
         valid = [l for l in loop_choices if 1 <= l <= n_channels]
         other = [l for l in valid if l != n_loops] or valid
         new_loops = int(other[int(rng.integers(len(other)))])
         split = int(rng.integers(1, max(2, n_requests)))
         events.append(Injection(split, new_loops, "resize", 0.0))
+    else:   # mem_pressure: gc-thrash pauses on wire-buffer allocations
+        for s in steps(0):
+            events.append(Injection(s, -1, "pressure",
+                                    float(rng.uniform(*delay_s))))
     return ChaosPlan(scenario=scenario, seed=seed, events=tuple(events))
 
 
@@ -159,6 +187,8 @@ class _Injector:
         self._wait_counts: dict = {}
         self._flush_calls = 0
         self._storm_uids = 0
+        self._alloc_calls = 0
+        self._crashed = False
 
     # -- Poller.fault (slow_channel / stalled_loop) ---------------------
 
@@ -171,7 +201,9 @@ class _Injector:
                 return None
             time.sleep(e.magnitude)
             self.fired.append((c, loop_index, e.kind))
-            return "stall" if e.kind == "stall" else None
+            # the verdict feeds PollStats (stalls / delays) — the health
+            # counters the supervisor's EWMA detection reads
+            return e.kind
         return fault
 
     # -- pipeline flush fault (dropped_flush) ----------------------------
@@ -184,6 +216,50 @@ class _Injector:
             return None
         self.fired.append((c, channel, e.kind))
         return e.kind
+
+    # -- pipeline alloc hook (mem_pressure) ------------------------------
+
+    def alloc_fault(self, *, escalate: bool = False):
+        """Buffer-pool hook (``pipeline.set_alloc_hook``): consults the
+        plan by allocation index. ``pressure`` events sleep — gc thrash
+        slowing the coalesced wire-buffer build. With ``escalate=True``
+        (supervised runs only) the FIRST planned event raises
+        :class:`ChaosMemPressure` instead: pool exhaustion the
+        supervisor heals by retrying the drain — the retry's fresh trace
+        consults PAST the consumed event and completes."""
+        state = {"oom": escalate}
+
+        def hook(channel: int, nbytes: int) -> None:
+            c = self._alloc_calls
+            self._alloc_calls += 1
+            e = self.by_step.get(c)
+            if e is None:
+                return
+            if state["oom"]:
+                state["oom"] = False
+                self.fired.append((c, channel, "oom"))
+                raise ChaosMemPressure(
+                    f"wire-buffer pool exhausted at alloc {c} "
+                    f"(channel {channel}, {nbytes} B)")
+            time.sleep(e.magnitude)
+            self.fired.append((c, channel, e.kind))
+        return hook
+
+    # -- one-shot drain crash (supervised dropped_flush) -----------------
+
+    def drain_crash_hook(self):
+        """Drain hook that raises ONCE on its armed loop's first drain
+        (after recording the drain, like the plain observer). One-shot
+        across group rebuilds — injector state, not loop state — so the
+        supervisor's retry succeeds instead of looping forever."""
+        def hook(loop, items) -> None:
+            self.drains.append((loop.index, len(items)))
+            if not self._crashed:
+                self._crashed = True
+                self.fired.append((0, loop.index, "flush_crash"))
+                raise ChaosFlushError(
+                    f"injected send-thread failure on loop {loop.index}")
+        return hook
 
     # -- engine admission hook (admission_storm) -------------------------
 
@@ -330,6 +406,9 @@ def run_scenario(scenario: str, cfg: ModelConfig, params,
             # armed BEFORE the group builds: the faults act at trace
             # time, and the armed window bypasses the serve-step cache
             pipeline.set_flush_fault(inj.flush_fault)
+        elif scenario == "mem_pressure":
+            # same trace-time window, on the allocation seam
+            pipeline.set_alloc_hook(inj.alloc_fault())
         try:
             if scenario == "reshard_mid_request":
                 res, moved, poll = _run_reshard(plan, cfg, params, serve,
@@ -348,6 +427,8 @@ def run_scenario(scenario: str, cfg: ModelConfig, params,
         finally:
             if scenario == "dropped_flush":
                 pipeline.clear_flush_fault()
+            elif scenario == "mem_pressure":
+                pipeline.clear_alloc_hook()
     finally:
         channels_mod.clear_collective_hook()
 
@@ -376,7 +457,8 @@ def _arm(scenario: str, grp: EventLoopGroup, serve: ServeConfig,
     elif scenario == "admission_storm":
         for loop in grp.loops:
             loop.engine.admission_hook = inj.admission_storm
-    # dropped_flush is armed globally before the group builds
+    # dropped_flush / mem_pressure are armed globally before the group
+    # builds (trace-time seams); reshard is driven by the runner itself
 
 
 def _run_reshard(plan: ChaosPlan, cfg, params, serve, reqs, inj, rtts,
@@ -403,7 +485,10 @@ def _run_reshard(plan: ChaosPlan, cfg, params, serve, reqs, inj, rtts,
                                       new_loops)
     inj.fired.append((split, new_loops, "resize"))
 
-    grp2 = make_engine_group(cfg, params, serve2, mesh=mesh)
+    # the minimal-migration partition is NOT the from-scratch recompute,
+    # so the rebuilt group must be pinned to the resharded affinity
+    grp2 = make_engine_group(cfg, params, serve2, mesh=mesh,
+                             affinity=new_aff)
     assert tuple(l.channels for l in grp2.loops) == new_aff
     _wrap_timing(grp2, rtts)
     for loop in grp2.loops:
@@ -412,3 +497,100 @@ def _run_reshard(plan: ChaosPlan, cfg, params, serve, reqs, inj, rtts,
     tail = grp2.run(threads=threads)
     poll = grp.poll_stats().merge(grp2.poll_stats())
     return list(head) + list(tail), moved, poll
+
+
+# ---------------------------------------------------------------------------
+# Supervised runs — the same plans, healed by the Supervisor itself
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class SupervisedResult:
+    """One scenario run under the self-healing supervisor. ``trace`` is
+    the supervisor's CANONICAL healing trace (round, kind, target,
+    detail — wall-clock stamps excluded), the seed-deterministic
+    evidence that the supervisor, not the harness, did the healing."""
+    plan: ChaosPlan
+    fired: tuple
+    drains: tuple
+    trace: tuple
+    outcomes: Dict[int, object]
+    report: slo.SLOReport
+    tokens: Dict[int, tuple]
+    rtts: list
+    poll_stats: object = None
+    emissions: tuple = ()
+
+
+def run_supervised(scenario: str, cfg: ModelConfig, params,
+                   serve: ServeConfig, reqs: Sequence[Request], *,
+                   seed: int, baseline: Baseline, mesh=None,
+                   threads: bool = False, horizon: int = 16,
+                   config=None) -> SupervisedResult:
+    """Run one seeded scenario with the :class:`Supervisor` closing the
+    detect → decide → heal loop itself. The harness only ARMS faults
+    (through the supervisor's ``fleet_hook``, so rebuilds re-arm
+    observation seams) and then submits the client requests — every
+    quarantine, restart, retry, reflush, backpressure and resize in the
+    result's ``trace`` was the supervisor's own decision. Two scenarios
+    escalate beyond their unsupervised form so there is a real failure
+    to heal: ``dropped_flush`` adds a one-shot drain crash (retry
+    budget), ``mem_pressure`` escalates its first event to a pool-
+    exhaustion raise (retry re-traces past it)."""
+    from repro.serving.supervisor import Supervisor, SupervisorConfig
+    plan = make_plan(scenario, seed, n_channels=serve.comm.channels,
+                     n_loops=serve.event_loops, n_requests=len(reqs),
+                     horizon=horizon)
+    inj = _Injector(plan, cfg.vocab_size)
+    rtts: list = []
+    if config is None:
+        # >= 2 dispatch rounds so detection/healing happens MID-stream
+        config = SupervisorConfig(
+            dispatch_quantum=max(1, (len(reqs) + 1) // 2))
+    sup = Supervisor(cfg, params, serve, mesh=mesh, config=config,
+                     seed=seed)
+
+    def fleet_hook(grp):
+        _wrap_timing(grp, rtts)
+        for loop in grp.loops:
+            loop.drain_hook = inj.drain_hook
+        _arm(scenario, grp, serve, inj)
+        if scenario == "dropped_flush":
+            grp.loops[0].drain_hook = inj.drain_crash_hook()
+
+    sup.fleet_hook = fleet_hook
+    channels_mod.set_collective_hook(inj.collective_hook)
+    try:
+        if scenario == "dropped_flush":
+            pipeline.set_flush_fault(inj.flush_fault)
+        elif scenario == "mem_pressure":
+            pipeline.set_alloc_hook(inj.alloc_fault(escalate=True))
+        try:
+            if scenario == "reshard_mid_request":
+                e = plan.events[0]
+                sup.request_resize(int(e.target))
+                inj.fired.append((1, int(e.target), "resize"))
+            sup.submit(list(reqs))
+            res = sup.run(threads=threads)
+        finally:
+            if scenario == "dropped_flush":
+                pipeline.clear_flush_fault()
+            elif scenario == "mem_pressure":
+                pipeline.clear_alloc_hook()
+    finally:
+        channels_mod.clear_collective_hook()
+
+    tokens = _tokens_of(res)
+    report = slo.make_report(
+        scenario=scenario, seed=seed, mode=serve.comm.mode,
+        event_loops=serve.event_loops, reference=baseline.tokens,
+        served=tokens, fault_rtts=rtts, baseline_rtts=baseline.rtts,
+        n_injected=len(inj.fired), healing_actions=len(sup.trace),
+        mttr_s=sup.mttr_s())
+    return SupervisedResult(plan=plan, fired=tuple(inj.fired),
+                            drains=tuple(inj.drains),
+                            trace=sup.healing_trace(),
+                            outcomes=dict(sup.outcomes), report=report,
+                            tokens=tokens, rtts=rtts,
+                            poll_stats=sup.poll_stats(),
+                            emissions=tuple(inj.emissions))

@@ -97,8 +97,10 @@ def make_serve_step(cfg: ModelConfig, comm: CommConfig, mesh=None, *,
     same combination shares one compiled program instead of re-tracing
     it — the chaos matrix and repeated conformance builds pay one
     compile per affinity. The cache is bypassed (no lookup, no store)
-    while a flush fault is armed (``pipeline.set_flush_fault``), so a
-    faulted emission trace can never leak into fault-free callers.
+    while any trace-affecting fault is armed — a flush fault
+    (``pipeline.set_flush_fault``) or an allocator hook
+    (``pipeline.set_alloc_hook``) — so a faulted emission trace can
+    never leak into fault-free callers.
 
     ``pod_axis`` names the mesh's pod dimension for the two-level fabric
     (``launch/mesh.make_serve_mesh``); None auto-detects an axis named
@@ -111,7 +113,7 @@ def make_serve_step(cfg: ModelConfig, comm: CommConfig, mesh=None, *,
     backend = validate_serve_comm(comm)
     if mesh is None:
         mesh = make_mesh((jax.device_count(),), ("data",))
-    cacheable = not pipeline.flush_fault_active()
+    cacheable = not pipeline.fault_active()
     key = (cfg, comm, mesh,
            tuple(channel_indices) if channel_indices is not None else None,
            pod_axis)

@@ -58,6 +58,8 @@ class Request:
     prompt: np.ndarray            # (len,) int32
     max_new: int = 32
     temperature: float = 0.0      # 0 -> greedy
+    priority: int = 0             # admission-control rank: LOWER sheds
+    #                               first under backpressure (supervisor)
 
     def __post_init__(self):
         self.prompt = np.asarray(self.prompt, np.int32)
@@ -115,6 +117,15 @@ class DecodeEngine:
         # queue and contend for freed slots — the admission-storm
         # injection point (serving/chaos.py). None = no-op.
         self.admission_hook = None
+        # admission-control seam (serving/supervisor.py): called as
+        # gate(engine, step, extra) with the hook-injected burst; returns
+        # the requests actually admitted to the run queue. Distinct from
+        # admission_hook so supervisor backpressure composes with chaos
+        # storms instead of clobbering them. None = admit everything.
+        self.admission_gate = None
+        self.admit_prefills = 0   # batched-admission prefill calls (one
+        #                           per flush boundary with freed slots,
+        #                           NOT one per admitted request)
 
         if serve is not None:
             self.step = dispatch.make_serve_step(
@@ -244,26 +255,28 @@ class DecodeEngine:
             steps += 1
             # the flush-boundary fault window: storm requests injected
             # here enter the run queue like any client's and are admitted
-            # (or queued) by the very same slot loop below — per-row
-            # exactness keeps the residents' tokens bit-identical
-            if self.admission_hook is not None and not self._recurrent:
-                extra = self.admission_hook(self, steps)
+            # (or queued) by the very same admission path below — per-row
+            # exactness keeps the residents' tokens bit-identical. The
+            # gate sees the burst AFTER the hook, so supervisor
+            # backpressure composes with chaos storms.
+            if not self._recurrent and (self.admission_hook is not None
+                                        or self.admission_gate is not None):
+                extra = list(self.admission_hook(self, steps) or []) \
+                    if self.admission_hook is not None else []
+                if self.admission_gate is not None:
+                    extra = self.admission_gate(self, steps, extra)
                 if extra:
                     pending.extend(extra)
             # continuous batching: admit from the run queue into freed
-            # slots, at this flush boundary. Only the first max_batch
-            # slots are admission-eligible — ring-padding rows beyond the
+            # slots, at this flush boundary — ONE batched prefill over
+            # every freed slot (solo == batched bit-for-bit; exactness is
+            # per-row). Only the first max_batch slots are
+            # admission-eligible — ring-padding rows beyond the
             # configured bound carry no requests (max_batch stays the
             # true per-loop in-flight limit even when b_pad > max_batch).
             if pending and not self._recurrent:
-                for i in range(min(b_pad, self.max_batch)):
-                    # while, not if: a request finishing AT admission
-                    # (eos / max_new==1) leaves the slot free for the
-                    # next queued request in the same boundary
-                    while slots[i] is None and pending:
-                        tok, cache, pos = self._admit(
-                            i, pending.popleft(), cache, pos, temps, tok,
-                            steps, slots, results)
+                tok, cache, pos = self._admit_ready(
+                    pending, cache, pos, temps, tok, steps, slots, results)
             if not any(s is not None for s in slots) and not pending:
                 break
             active = np.array([s is not None for s in slots])
@@ -273,59 +286,100 @@ class DecodeEngine:
             pos = jnp.where(jnp.asarray(active), pos + 1, pos)
         return results
 
-    def _admit(self, i: int, req: Request, cache: PyTree, pos: jax.Array,
-               temps: np.ndarray, tok: jax.Array, steps: int,
-               slots: list, results: list):
-        """Admit one queued request into freed slot ``i``: solo prefill
-        (rows padded to the ring size; exactness is per-row), cache rows
-        written into the slot, first token sampled from its own prefill
-        logits AND recorded immediately (it is the request's first
-        generated token — the main loop's append phase has already run
-        this step, and the next one records the token sampled AFTER
-        it). A request done at its first token (eos, or max_new == 1)
-        finishes here and leaves the slot free. Mutates ``temps`` /
-        ``slots`` / ``results`` in place; returns the new
+    def _admit_ready(self, pending: deque, cache: PyTree, pos: jax.Array,
+                     temps: np.ndarray, tok: jax.Array, steps: int,
+                     slots: list, results: list):
+        """Admit from the run queue into EVERY freed slot at this flush
+        boundary with one batched prefill per round (the ROADMAP's
+        batched admission — replacing the one-prefill-per-slot solo
+        path). Loops because a request finishing AT admission
+        (eos / max_new<=1) leaves its slot free for the next queued
+        request within the same boundary; each round pops at least one
+        request, so it terminates."""
+        while pending:
+            free = [i for i in range(min(len(slots), self.max_batch))
+                    if slots[i] is None]
+            if not free:
+                break
+            take = min(len(free), len(pending))
+            batch = [pending.popleft() for _ in range(take)]
+            tok, cache, pos = self._admit_batch(
+                free[:take], batch, cache, pos, temps, tok, steps, slots,
+                results)
+        return tok, cache, pos
+
+    def _admit_batch(self, free: list, reqs: list, cache: PyTree,
+                     pos: jax.Array, temps: np.ndarray, tok: jax.Array,
+                     steps: int, slots: list, results: list):
+        """Admit ``reqs[j]`` into freed slot ``free[j]`` with ONE prefill
+        over the whole batch (rows padded to the ring size; prompts
+        right-padded to the batch max — exactness is per-row, so this is
+        bit-identical to solo admission). Each request's first token is
+        sampled from its own prefill logits AND recorded immediately (it
+        is the request's first generated token — the main loop's append
+        phase has already run this step, and the next one records the
+        token sampled AFTER it). A request done at its first token (eos,
+        or max_new == 1) finishes here and leaves the slot free. Mutates
+        ``temps`` / ``slots`` / ``results`` in place; returns the new
         (tok, cache, pos)."""
-        plen = len(req.prompt)
-        assert plen + req.max_new <= self.max_len, \
-            "prompt + max_new exceeds engine max_len"
         R = self.n_shards
+        k = len(reqs)
+        rows = max(R, -(-k // R) * R)     # rows padded to the ring size
+        for req in reqs:
+            assert len(req.prompt) + req.max_new <= self.max_len, \
+                "prompt + max_new exceeds engine max_len"
         # round for bounded recompiles, but never past the resident
         # cache's sequence capacity (max_len, or the rolling window) —
         # an over-rounded prefill cache could not fit the slot write
         limit = self.max_len
         if self.cfg.sliding_window:
             limit = min(limit, self.cfg.sliding_window)
-        pad_to = min(-(-plen // ADMIT_PAD) * ADMIT_PAD, max(plen, limit))
-        toks = np.zeros((R, pad_to), np.int32)
-        toks[0, :plen] = req.prompt
-        lens = np.zeros((R,), np.int32)
-        lens[0] = plen
+        pmax = max(len(req.prompt) for req in reqs)
+        pad_to = min(-(-pmax // ADMIT_PAD) * ADMIT_PAD, max(pmax, limit))
+        toks = np.zeros((rows, pad_to), np.int32)
+        lens = np.zeros((rows,), np.int32)
+        rtemps = np.zeros((rows,), np.float32)
+        for row, req in enumerate(reqs):
+            plen = len(req.prompt)
+            toks[row, :plen] = req.prompt
+            lens[row] = plen
+            rtemps[row] = req.temperature
         logits1, cache1 = self._prefill(self.params,
                                         self._prefill_batch(toks, lens))
         self.poller.wait(logits1)
-        t0_arr = self._sample(logits1,
-                              np.full((R,), req.temperature, np.float32))[0]
-        t0 = int(np.asarray(t0_arr))
-        if req.max_new <= 0:              # prefill-only: zero tokens
-            results.append(Result(uid=req.uid,
-                                  tokens=np.asarray([], np.int64),
-                                  prompt_len=plen, steps=0))
-            return tok, cache, pos
-        done = (self.eos_id is not None and t0 == self.eos_id) \
-            or req.max_new == 1
-        if done:                          # finished at its first token
-            results.append(Result(uid=req.uid,
-                                  tokens=np.asarray([t0], np.int64),
-                                  prompt_len=plen, steps=1))
-            return tok, cache, pos
-        cache1 = api.grow_cache(self.cfg, cache1, self.max_len)
-        # attention-family caches carry batch at axis 1 (L, B, S, KV, Dh)
-        cache = jax.tree.map(lambda c, n: c.at[:, i].set(n[:, 0]),
-                             cache, cache1)
-        temps[i] = req.temperature
-        slots[i] = _Slot(req, steps, [t0])
-        return tok.at[i].set(t0_arr), cache, pos.at[i].set(plen)
+        self.admit_prefills += 1
+        t_arr = self._sample(logits1, rtemps)
+        t_np = np.asarray(t_arr)
+        live_rows: list = []
+        live_slots: list = []
+        for row, (i, req) in enumerate(zip(free, reqs)):
+            t0 = int(t_np[row])
+            plen = int(lens[row])
+            if req.max_new <= 0:          # prefill-only: zero tokens
+                results.append(Result(uid=req.uid,
+                                      tokens=np.asarray([], np.int64),
+                                      prompt_len=plen, steps=0))
+                continue
+            if (self.eos_id is not None and t0 == self.eos_id) \
+                    or req.max_new == 1:  # finished at its first token
+                results.append(Result(uid=req.uid,
+                                      tokens=np.asarray([t0], np.int64),
+                                      prompt_len=plen, steps=1))
+                continue
+            live_rows.append(row)
+            live_slots.append(i)
+            temps[i] = req.temperature
+            slots[i] = _Slot(req, steps, [t0])
+        if live_rows:
+            cache1 = api.grow_cache(self.cfg, cache1, self.max_len)
+            rsel = np.asarray(live_rows)
+            ssel = np.asarray(live_slots)
+            # attention caches carry batch at axis 1 (L, B, S, KV, Dh)
+            cache = jax.tree.map(lambda c, n: c.at[:, ssel].set(n[:, rsel]),
+                                 cache, cache1)
+            tok = tok.at[ssel].set(t_arr[rsel])
+            pos = pos.at[ssel].set(jnp.asarray(lens[rsel]))
+        return tok, cache, pos
 
 
 # ---------------------------------------------------------------------------
@@ -335,7 +389,8 @@ class DecodeEngine:
 
 def make_engine_group(cfg: ModelConfig, params: PyTree, serve: ServeConfig,
                       *, mesh=None, eos_id: Optional[int] = None,
-                      seed: int = 0) -> EventLoopGroup:
+                      seed: int = 0,
+                      affinity: Optional[tuple] = None) -> EventLoopGroup:
     """The serving subsystem's front door: an
     :class:`~repro.serving.event_loop.EventLoopGroup` of
     ``serve.event_loops`` loops, each owning a disjoint contiguous run of
@@ -354,11 +409,28 @@ def make_engine_group(cfg: ModelConfig, params: PyTree, serve: ServeConfig,
     keeps pod-aware collectives on — the affinity pins the pool's
     leader lanes to the first ``serve.leader_loops`` loops while each
     remaining loop owns only local lanes whose peers share a pod
-    (``channel_affinity`` topology form)."""
+    (``channel_affinity`` topology form).
+
+    ``affinity`` overrides the computed partition with an explicit one
+    (validated disjoint + covering + nonempty per loop) — the elastic
+    reshard path (``launch/elastic.reshard_affinity`` keeps migrations
+    minimal, so the resharded partition is deliberately NOT what
+    ``channel_affinity`` would recompute) and the supervisor's rebuilds
+    both use it."""
     if serve.pods > 1 and mesh is None:
         from repro.launch.mesh import make_serve_mesh
         mesh = make_serve_mesh(serve.pods, serve.pod_axis)
-    if serve.pods > 1 and serve.comm.hierarchical:
+    if affinity is not None:
+        affinity = tuple(tuple(g) for g in affinity)
+        owned = sorted(c for g in affinity for c in g)
+        if len(affinity) != serve.event_loops \
+                or owned != list(range(serve.comm.channels)) \
+                or any(not g for g in affinity):
+            raise ValueError(
+                f"explicit affinity {affinity} must partition channels "
+                f"0..{serve.comm.channels - 1} into {serve.event_loops} "
+                "nonempty disjoint groups")
+    elif serve.pods > 1 and serve.comm.hierarchical:
         affinity = channel_affinity(
             serve.comm.channels, serve.event_loops, n_pods=serve.pods,
             leaders=min(serve.comm.leader_channels,

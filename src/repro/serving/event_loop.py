@@ -97,19 +97,24 @@ class PollStats:
     """How the loop waited: ``spins`` = readiness probes that came back
     not-ready, ``parks`` = blocking waits entered, ``waits`` = completed
     wait calls, ``stalls`` = parks FORCED by the fault seam (the chaos
-    harness's over-parking loop — ``serving/chaos.py``). ``busy`` keeps
-    parks at 0; ``park`` keeps spins at 0; a fault-free run keeps stalls
-    at 0."""
+    harness's over-parking loop — ``serving/chaos.py``), ``delays`` =
+    waits the fault seam slowed down without forcing a park (a slow
+    channel's completion arriving late). ``busy`` keeps parks at 0;
+    ``park`` keeps spins at 0; a fault-free run keeps stalls and delays
+    at 0 — both are pure health signals for the supervisor
+    (``serving/supervisor.py``)."""
     spins: int = 0
     parks: int = 0
     waits: int = 0
     stalls: int = 0
+    delays: int = 0
 
     def merge(self, other: "PollStats") -> "PollStats":
         return PollStats(self.spins + other.spins,
                          self.parks + other.parks,
                          self.waits + other.waits,
-                         self.stalls + other.stalls)
+                         self.stalls + other.stalls,
+                         self.delays + other.delays)
 
 
 class Poller:
@@ -119,9 +124,12 @@ class Poller:
     ``fault`` is the chaos seam (``serving/chaos.py``): when set, it is
     called once at the top of every :meth:`wait` with the poller itself
     and may sleep (a slow channel's completion arriving late) or return
-    ``"stall"`` to force an immediate park — the over-parking loop from
-    Ibdxnet's failure catalogue, counted in ``stats.stalls``. ``None``
-    (the default) is a zero-overhead no-op."""
+    a verdict — ``"stall"`` forces an immediate park (the over-parking
+    loop from Ibdxnet's failure catalogue, counted in ``stats.stalls``);
+    ``"delay"`` reports that the hook slowed this wait down and proceeds
+    normally, counted in ``stats.delays`` so the supervisor's health
+    model can see slow channels without any wall-clock measurement.
+    ``None`` (the default) is a zero-overhead no-op."""
 
     def __init__(self, poll: str = "busy", spin_s: float = 50e-6):
         assert poll in POLLS, poll
@@ -148,10 +156,14 @@ class Poller:
         ``tree`` so call sites can chain."""
         handles = self._handles(tree)
         self.stats.waits += 1
-        if self.fault is not None and self.fault(self) == "stall":
-            self.stats.stalls += 1      # forced over-park (chaos seam)
-            self._park(handles)
-            return tree
+        if self.fault is not None:
+            verdict = self.fault(self)
+            if verdict == "stall":
+                self.stats.stalls += 1  # forced over-park (chaos seam)
+                self._park(handles)
+                return tree
+            if verdict == "delay":
+                self.stats.delays += 1  # slowed wait; proceed normally
         if self.poll == "park" or (self.poll == "adaptive"
                                    and self.spin_s <= 0):
             # a zero spin budget IS park: straight to the epoll fallback,
@@ -166,6 +178,19 @@ class Poller:
                 self._park(handles)     # adaptive: bounded spin, then epoll
                 break
         return tree
+
+
+@dataclass(frozen=True)
+class LoopFailure:
+    """Structured record of one failed drain: WHICH loop died, WHAT
+    killed it, and HOW MANY items were in flight (the in-flight batch
+    plus anything still queued) — everything the supervisor needs to
+    quarantine the loop and re-admit its requests. ``error`` is the
+    ``repr`` of the exception (records must stay picklable/comparable);
+    the live exception object stays on ``loop.error``."""
+    loop_index: int
+    error: str
+    pending: int
 
 
 class EventLoop:
@@ -183,6 +208,9 @@ class EventLoop:
         self.queue: deque = deque()       # run queue of in-flight items
         self.results: list = []
         self.error: Optional[BaseException] = None
+        self.failed_items: list = []      # in-flight batch of a failed drain
+        self.heartbeats = 0               # drained batches, ever — liveness
+        self.restarts = 0
         # chaos seam: called with (loop, items) per drained batch, BEFORE
         # the runner — the injection point for queue-level faults and the
         # deterministic drain trace (serving/chaos.py)
@@ -196,9 +224,13 @@ class EventLoop:
         while draining land in the queue and are picked up too). A
         runner failure is recorded in ``error`` (and re-raised) so a
         threaded group can propagate it instead of silently dropping the
-        loop's requests."""
+        loop's requests; the in-flight batch is stashed in
+        ``failed_items`` so a supervisor can re-admit it after a
+        restart."""
         out: list = []
         self.error = None
+        self.failed_items = []
+        items: list = []
         try:
             while self.queue:
                 items = list(self.queue)
@@ -207,12 +239,31 @@ class EventLoop:
                 if self.drain_hook is not None:
                     self.drain_hook(self, items)
                 out.extend(self.runner(self, items))
+                self.heartbeats += 1    # one beat per drained batch
         except BaseException as e:
             self.error = e
+            self.failed_items = items
             raise
         finally:
             self.results = out
         return out
+
+    def restart(self) -> Poller:
+        """Quarantine-and-restart: replace the poller with a FRESH one
+        (same strategy/spin budget — but no fault seam and zeroed
+        counters, so a wedged or chaos-armed poller is genuinely
+        cleared), forget the failure state, and re-point an attached
+        engine at the new poller. The caller owns re-admitting
+        ``failed_items``/queue contents; ``restarts`` counts how often
+        this loop needed healing."""
+        self.poller = Poller(self.poller.poll, self.poller.spin_s)
+        self.error = None
+        self.failed_items = []
+        self.restarts += 1
+        eng = getattr(self, "engine", None)
+        if eng is not None:
+            eng.poller = self.poller
+        return self.poller
 
 
 class EventLoopGroup:
@@ -232,6 +283,10 @@ class EventLoopGroup:
         #                           the failure-propagation counter the
         #                           chaos harness and the threaded-run
         #                           regression tests assert on
+        self.failures: list = []  # structured LoopFailure records, in the
+        #                           order failures were observed (appended
+        #                           by BOTH threaded and inline drains) —
+        #                           the supervisor's detect feed
 
     @property
     def n_loops(self) -> int:
@@ -246,11 +301,23 @@ class EventLoopGroup:
             self.loops[self._rr % self.n_loops].submit(it)
             self._rr += 1
 
-    def run(self, *, threads: bool = True) -> list:
+    def _record_failure(self, loop: EventLoop) -> None:
+        self.loop_failures += 1
+        self.failures.append(LoopFailure(
+            loop.index, repr(loop.error),
+            len(loop.failed_items) + len(loop.queue)))
+
+    def run(self, *, threads: bool = True,
+            raise_on_failure: bool = True) -> list:
         """Drain every loop; returns the concatenated results (loop
         order — callers sort by uid where ordering matters). A failure
-        in ANY loop propagates (after every thread has joined) — a
-        partial result set must never look like success."""
+        in ANY loop is recorded as a structured :class:`LoopFailure` in
+        ``failures`` and — by default — propagates (after every thread
+        has joined): a partial result set must never SILENTLY look like
+        success. ``raise_on_failure=False`` is the supervisor's entry
+        point: survivors' results are returned and the failure records
+        plus each failed loop's ``failed_items`` carry everything needed
+        to heal."""
         if threads and self.n_loops > 1:
             def guarded(loop):
                 try:
@@ -265,16 +332,18 @@ class EventLoopGroup:
             for t in ts:
                 t.join()
             failed = [l for l in self.loops if l.error is not None]
-            if failed:
-                self.loop_failures += len(failed)
+            for l in failed:
+                self._record_failure(l)
+            if failed and raise_on_failure:
                 raise failed[0].error
         else:
             for l in self.loops:
                 try:
                     l.drain()
                 except BaseException:
-                    self.loop_failures += 1
-                    raise
+                    self._record_failure(l)
+                    if raise_on_failure:
+                        raise
         return [r for l in self.loops for r in l.results]
 
     def poll_stats(self) -> PollStats:

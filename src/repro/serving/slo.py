@@ -61,12 +61,31 @@ def token_recovery(reference: Dict[int, tuple],
     return not bad, bad
 
 
+def mttr(spans: Sequence[float]) -> Optional[float]:
+    """Mean time-to-recovery (seconds) over per-incident detect→heal
+    spans — the supervised-run analogue of the percentile summary: each
+    healing action carries wall-clock (t_detect, t_heal) stamps, the
+    span is their difference, and MTTR is the mean. Returns None for an
+    empty span set (no incident was healed — distinct from healing
+    instantly). Wall-clock, so like p99.9 inflation it is asserted with
+    generous bounds only; the deterministic half of a supervised run is
+    the healing TRACE (``Supervisor.healing_trace``), which excludes
+    these stamps."""
+    vals = [float(s) for s in spans]
+    if not vals:
+        return None
+    return float(np.mean(vals))
+
+
 @dataclass(frozen=True)
 class SLOReport:
     """One scenario run's verdict: identity of the run, the recovery
     outcome, and the RTT distributions (seconds). ``baseline`` is None
     when the caller shared a token-only reference (tier-1 determinism
-    tests) — inflation is then unavailable and only recovery binds."""
+    tests) — inflation is then unavailable and only recovery binds.
+    ``healing_actions``/``mttr_s`` describe the supervisor's detect→heal
+    loop for SUPERVISED runs (0/None when unsupervised — nothing
+    healed)."""
     scenario: str
     seed: int
     mode: str
@@ -76,6 +95,8 @@ class SLOReport:
     n_injected: int
     fault: Dict[str, float]
     baseline: Optional[Dict[str, float]] = None
+    healing_actions: int = 0
+    mttr_s: Optional[float] = None
 
     @property
     def p999_inflation(self) -> Optional[float]:
@@ -93,22 +114,26 @@ def make_report(*, scenario: str, seed: int, mode: str, event_loops: int,
                 reference: Dict[int, tuple], served: Dict[int, tuple],
                 fault_rtts: Sequence[float],
                 baseline_rtts: Optional[Sequence[float]] = None,
-                n_injected: int = 0) -> SLOReport:
+                n_injected: int = 0, healing_actions: int = 0,
+                mttr_s: Optional[float] = None) -> SLOReport:
     recovered, bad = token_recovery(reference, served)
     return SLOReport(
         scenario=scenario, seed=seed, mode=mode, event_loops=event_loops,
         recovered=recovered, mismatched_uids=bad, n_injected=n_injected,
         fault=rtt_percentiles(fault_rtts),
         baseline=(rtt_percentiles(baseline_rtts)
-                  if baseline_rtts else None))
+                  if baseline_rtts else None),
+        healing_actions=healing_actions, mttr_s=mttr_s)
 
 
 def assert_slo(report: SLOReport, *,
-               max_p999_inflation: Optional[float] = None) -> None:
+               max_p999_inflation: Optional[float] = None,
+               max_mttr_s: Optional[float] = None) -> None:
     """Raise AssertionError when the report violates its SLO: recovery
     always binds; the p99.9 bound binds only when a baseline exists AND
-    a bound was given (wall-clock checks are opt-in — CI noise must not
-    fail the deterministic harness)."""
+    a bound was given; the MTTR bound binds only when the report carries
+    an MTTR and a bound was given (wall-clock checks are opt-in — CI
+    noise must not fail the deterministic harness)."""
     assert report.recovered, (
         f"{report.scenario} seed={report.seed} mode={report.mode} "
         f"el={report.event_loops}: served tokens diverged from the "
@@ -120,3 +145,8 @@ def assert_slo(report: SLOReport, *,
             f"{infl:.2f}x > bound {max_p999_inflation:.2f}x "
             f"(fault {report.fault['p99.9'] * 1e6:.1f}us vs baseline "
             f"{report.baseline['p99.9'] * 1e6:.1f}us)")
+    if max_mttr_s is not None and report.mttr_s is not None:
+        assert report.mttr_s <= max_mttr_s, (
+            f"{report.scenario} seed={report.seed}: MTTR "
+            f"{report.mttr_s:.3f}s > bound {max_mttr_s:.3f}s over "
+            f"{report.healing_actions} healing actions")

@@ -66,11 +66,15 @@ def test_plan_shapes(scenario):
     elif scenario == "admission_storm":
         assert kinds == {"burst"} and steps[0] == 1
         assert all(1 <= e.target <= 2 for e in plan.events)
-    else:
+    elif scenario == "reshard_mid_request":
         assert kinds == {"resize"} and len(plan.events) == 1
         assert plan.events[0].target in (1, 2, 4)
         assert plan.events[0].target != 2                  # != current
         assert 1 <= plan.events[0].step < 4
+    else:   # mem_pressure
+        assert kinds == {"pressure"} and steps[0] == 0
+        assert all(0.5e-3 <= e.magnitude <= 2e-3 for e in plan.events)
+        assert all(e.target == -1 for e in plan.events)
     assert all(e.step < 16 for e in plan.events)
 
 
@@ -323,6 +327,25 @@ def test_dropped_flush_traces_fresh_and_recovers(tiny, reference):
     assert res.tokens == base.tokens
 
 
+def test_mem_pressure_consults_alloc_seam(tiny, reference):
+    """The allocator seam: every planned pressure event that fires is a
+    consult of the buffer-pool hook (recorded with its alloc index and
+    channel), the run traces fresh programs (cache bypassed while the
+    hook is armed), and recovery is bit-identical — allocation pressure
+    slows a trace, never changes a value."""
+    cfg, params = tiny
+    base, reqs = reference
+    res = chaos.run_scenario("mem_pressure", cfg, params,
+                             chaos.chaos_serve_config("hadronio", 2),
+                             reqs, seed=11, baseline=base)
+    assert res.fired and {f[2] for f in res.fired} == {"pressure"}
+    assert res.emissions                       # fresh traces happened
+    assert res.tokens == base.tokens
+    # the seam counts every coalesced-buffer build it consulted
+    assert pipeline.EMISSION_STATS.allocs > 0
+    assert not pipeline.alloc_hook_active()    # cleared after the run
+
+
 def test_serve_step_cache_reuse_and_bypass(tiny):
     """Fault-free group builds share jitted serve steps (the cache that
     makes the matrix affordable); an armed flush fault bypasses both
@@ -343,4 +366,13 @@ def test_serve_step_cache_reuse_and_bypass(tiny):
         make_engine_group(cfg, params, serve)      # bypassed: no growth
     finally:
         pipeline.clear_flush_fault()
+    assert len(dispatch._STEP_CACHE) == n
+    # the allocation seam is a fault window too
+    pipeline.set_alloc_hook(lambda c, nbytes: None)
+    try:
+        assert pipeline.fault_active()
+        make_engine_group(cfg, params, serve)      # bypassed: no growth
+    finally:
+        pipeline.clear_alloc_hook()
+    assert not pipeline.fault_active()
     assert len(dispatch._STEP_CACHE) == n

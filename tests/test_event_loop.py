@@ -1,11 +1,15 @@
 """Event-loop serving subsystem units: channel affinity invariants, poll
-strategies, round-robin assignment, percentile helpers, RTT bench rows."""
+strategies, round-robin assignment, structured failure records, the
+restart seam, elastic reshard properties, percentile helpers, RTT bench
+rows."""
 import numpy as np
 import pytest
 
 from benchmarks.common import (PERCENTILE_QS, percentile_rows, percentiles)
-from repro.serving.event_loop import (EventLoop, EventLoopGroup, Poller,
-                                      PollStats, channel_affinity)
+from repro.launch.elastic import reshard_affinity
+from repro.serving.event_loop import (EventLoop, EventLoopGroup,
+                                      LoopFailure, Poller, PollStats,
+                                      channel_affinity)
 
 
 # ---------------------------------------------------------------------------
@@ -164,9 +168,23 @@ def test_poller_ignores_non_array_leaves():
 
 
 def test_poll_stats_merge():
-    a, b = PollStats(1, 2, 3, 4), PollStats(10, 20, 30, 40)
+    a, b = PollStats(1, 2, 3, 4, 5), PollStats(10, 20, 30, 40, 50)
     m = a.merge(b)
-    assert (m.spins, m.parks, m.waits, m.stalls) == (11, 22, 33, 44)
+    assert (m.spins, m.parks, m.waits, m.stalls, m.delays) == \
+        (11, 22, 33, 44, 55)
+
+
+def test_poller_fault_delay_verdict_counts_delays():
+    """A fault returning "delay" is counted in ``delays`` (the
+    supervisor's slow-channel health signal) but neither stalls nor
+    parks — the wait proceeds normally."""
+    p = Poller("busy")
+    p.fault = lambda poller: "delay"
+    p.wait([_Handle(ready_after=1)])
+    p.wait([_Handle(ready_after=1)])
+    assert p.stats.delays == 2
+    assert p.stats.stalls == 0 and p.stats.parks == 0
+    assert p.stats.waits == 2
 
 
 def test_adaptive_zero_spin_budget_goes_straight_to_park():
@@ -328,6 +346,199 @@ def test_drain_picks_up_items_submitted_mid_drain():
     loop.runner = runner
     loop.submit("early")
     assert loop.drain() == ["early", "late"]
+
+
+# ---------------------------------------------------------------------------
+# Structured failures, heartbeats and the restart seam (the supervisor's
+# detect/heal surface)
+# ---------------------------------------------------------------------------
+
+
+def _failing_runner(fail_index):
+    def runner(loop, items):
+        if loop.index == fail_index:
+            raise RuntimeError("engine blew up")
+        return [(loop.index, it) for it in items]
+    return runner
+
+
+@pytest.mark.parametrize("threads", [False, True])
+def test_structured_failure_records(threads):
+    """``raise_on_failure=False`` (the supervisor's entry point) returns
+    the survivors' results and records a structured LoopFailure — loop
+    index, exception repr, pending count — for threaded AND inline
+    drains."""
+    loops = [EventLoop(i, channels=(i,), runner=_failing_runner(1))
+             for i in range(3)]
+    grp = EventLoopGroup(loops)
+    grp.submit(list(range(6)))
+    out = grp.run(threads=threads, raise_on_failure=False)
+    # survivors 0 and 2 served their round-robin shares
+    assert sorted(out) == sorted([(0, 0), (0, 3), (2, 2), (2, 5)])
+    assert grp.loop_failures == 1
+    assert len(grp.failures) == 1
+    lf = grp.failures[0]
+    assert isinstance(lf, LoopFailure)
+    assert lf.loop_index == 1
+    assert "RuntimeError" in lf.error and "engine blew up" in lf.error
+    # the in-flight batch is pending, stashed for re-admission
+    assert lf.pending == 2
+    assert loops[1].failed_items == [1, 4]
+    # default behavior still raises (a partial result set must never
+    # silently look like success) AND records the structured failure
+    grp2 = EventLoopGroup(
+        [EventLoop(i, channels=(i,), runner=_failing_runner(0))
+         for i in range(2)])
+    grp2.submit([7, 8])
+    with pytest.raises(RuntimeError, match="engine blew up"):
+        grp2.run(threads=threads)
+    assert len(grp2.failures) == 1 and grp2.failures[0].loop_index == 0
+
+
+def test_inline_drain_continues_past_failed_loop():
+    """Inline non-raising drains keep draining the REMAINING loops after
+    a casualty — the supervisor sees every loop's round, not just the
+    prefix before the first failure."""
+    loops = [EventLoop(i, channels=(i,), runner=_failing_runner(0))
+             for i in range(3)]
+    grp = EventLoopGroup(loops)
+    grp.submit(list(range(6)))
+    out = grp.run(threads=False, raise_on_failure=False)
+    assert sorted(out) == sorted([(1, 1), (1, 4), (2, 2), (2, 5)])
+
+
+def test_heartbeats_advance_per_drained_batch():
+    loop = EventLoop(0, channels=(0,), runner=lambda l, items: items)
+    assert loop.heartbeats == 0
+    loop.submit(1)
+    loop.drain()
+    assert loop.heartbeats == 1
+    loop.submit(2)
+    loop.submit(3)
+    loop.drain()
+    assert loop.heartbeats == 2
+    loop.drain()                       # empty drain: no work, no beat
+    assert loop.heartbeats == 2
+
+
+def test_restart_replaces_poller_and_repoints_engine():
+    """The quarantine-and-restart seam: a fresh poller (same strategy /
+    spin budget, NO fault, zeroed counters), failure state forgotten, an
+    attached engine re-pointed, and the restart counted."""
+    import types
+    loop = EventLoop(0, channels=(0,), runner=_failing_runner(0))
+    loop.poller = Poller("adaptive", spin_s=2.5)
+    loop.poller.fault = lambda p: "stall"
+    loop.poller.stats.stalls = 7
+    eng = types.SimpleNamespace(poller=loop.poller)
+    loop.engine = eng
+    loop.submit("x")
+    with pytest.raises(RuntimeError):
+        loop.drain()
+    assert loop.error is not None and loop.failed_items == ["x"]
+    old = loop.poller
+    fresh = loop.restart()
+    assert fresh is loop.poller and fresh is not old
+    assert fresh.poll == "adaptive" and fresh.spin_s == 2.5
+    assert fresh.fault is None and fresh.stats.stalls == 0
+    assert loop.error is None and loop.failed_items == []
+    assert loop.restarts == 1
+    assert eng.poller is fresh         # the engine polls the new one
+
+
+# ---------------------------------------------------------------------------
+# Elastic reshard properties (launch/elastic.reshard_affinity): resize
+# sequences preserve the ownership invariants with MINIMAL migration
+# ---------------------------------------------------------------------------
+
+
+def _assert_partition_invariants(groups, n_channels):
+    flat = [c for g in groups for c in g]
+    assert sorted(flat) == list(range(n_channels))      # disjoint + cover
+    for g in groups:
+        assert g, "a loop must own at least one channel"
+        assert list(g) == list(range(min(g), max(g) + 1))   # contiguous
+
+
+def _reshard_domain():
+    """Fixed-grid enumeration (no-hypothesis convention): every
+    grow→shrink→grow / shrink→grow→shrink walk through small fleets."""
+    cases = []
+    for n_channels in (4, 6, 8, 12):
+        for walk in [(1, 3, 2, 4), (2, 4, 1, 3), (4, 2, 3, 1),
+                     (3, 1, 4, 2), (2, 1, 2, 4), (1, 4, 2, 1)]:
+            if all(k <= n_channels for k in walk):
+                cases.append((n_channels, walk))
+    return cases
+
+
+@pytest.mark.parametrize("n_channels,walk", _reshard_domain())
+def test_reshard_affinity_walk_minimal_migration(n_channels, walk):
+    """Across an arbitrary resize walk the partition stays disjoint,
+    covering, contiguous and non-empty at every step, the reported
+    ``moved`` set is exact, and migration is MINIMAL on the flat fabric:
+    a shrink moves exactly the removed loops' channels; a grow moves
+    channels only onto the added loops (unless the minimal step was
+    impossible and the documented recompute fallback was taken)."""
+    groups = channel_affinity(n_channels, walk[0])
+    for prev_k, k in zip(walk, walk[1:]):
+        old = groups
+        old_owner = {c: i for i, g in enumerate(old) for c in g}
+        groups, moved = reshard_affinity(n_channels, old, k)
+        _assert_partition_invariants(groups, n_channels)
+        assert len(groups) == k
+        # moved is exact: every channel whose owner index changed
+        expect = tuple(sorted(
+            c for i, g in enumerate(groups) for c in g
+            if old_owner[c] != i))
+        assert moved == expect
+        if k < prev_k:       # shrink: only the removed loops' channels
+            removed = sorted(c for g in old[k:] for c in g)
+            assert list(moved) == removed
+            # survivors below the last keep their runs verbatim
+            assert groups[:k - 1] == old[:k - 1]
+        elif k > prev_k:     # grow: moved lands on ADDED loops only —
+            recompute = channel_affinity(n_channels, k)
+            if groups != recompute:
+                for c in moved:
+                    new_owner = next(i for i, g in enumerate(groups)
+                                     if c in g)
+                    assert new_owner >= prev_k, (c, new_owner)
+                assert all(len(g) == 1 for g in groups[prev_k:])
+            # else: documented fallback (a donor would have emptied) —
+            # the recompute's own invariants hold, asserted above
+
+
+def test_reshard_affinity_same_count_is_identity():
+    old = channel_affinity(8, 3)
+    new, moved = reshard_affinity(8, old, 3)
+    assert new == old and moved == ()
+
+
+def test_reshard_affinity_rejects_impossible_fleet():
+    with pytest.raises(ValueError, match="own at least one channel"):
+        reshard_affinity(2, channel_affinity(2, 2), 3)
+
+
+@pytest.mark.parametrize("n_channels,leaders,leader_loops,walk", [
+    (6, 2, 1, (2, 3, 2)), (8, 2, 2, (2, 4, 3)), (8, 1, 1, (1, 2, 1)),
+])
+def test_reshard_affinity_topology_form_recomputes(n_channels, leaders,
+                                                   leader_loops, walk):
+    """The topology form (leader lanes / pods) always recomputes the
+    pod-aligned, leader-pinned partition — alignment is a correctness
+    constraint worth the extra migrations."""
+    kw = dict(n_pods=2, leaders=leaders, leader_loops=leader_loops)
+    groups = channel_affinity(n_channels, walk[0], **kw)
+    for k in walk[1:]:
+        groups, moved = reshard_affinity(n_channels, groups, k, **kw)
+        assert groups == channel_affinity(n_channels, k, **kw)
+        flat = [c for g in groups for c in g]
+        assert sorted(flat) == list(range(n_channels))
+        lead = set(range(n_channels - leaders, n_channels))
+        for i, g in enumerate(groups):
+            if i >= min(leader_loops, leaders):
+                assert not (set(g) & lead)
 
 
 # ---------------------------------------------------------------------------

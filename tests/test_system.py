@@ -68,5 +68,6 @@ def test_topology_multidevice():
 def test_chaos_multidevice():
     out = run_script("check_chaos.py")
     assert "ALL OK" in out
-    assert out.count("replay deterministic @4 shards") == 5
+    from repro.serving.chaos import SCENARIOS
+    assert out.count("replay deterministic @4 shards") == len(SCENARIOS)
     assert out.count("recovered @4 shards") == 4
