@@ -15,6 +15,11 @@ CommBackend wire.
   PYTHONPATH=src python examples/serve_batched.py --pods 2 \
       --comm-mode hadronio_overlap --aggregate channel --flush ready \
       --emission hierarchical
+
+  # multi-tenant: a dense and an ssm model in ONE EventLoopGroup, 2:1
+  # weighted-fair admission, per-tenant loop/channel ownership
+  PYTHONPATH=src python examples/serve_batched.py \
+      --tenant chat=qwen2-0.5b-reduced:2 --tenant rnn=rwkv6-7b-reduced:1
 """
 import argparse
 import time
@@ -25,6 +30,7 @@ import numpy as np
 from repro.configs.registry import get_config
 from repro.configs.base import CommConfig, ServeConfig
 from repro.core.backends import available_modes
+from repro.launch.serve import parse_tenant_specs
 from repro.models import api
 from repro.serving import Request, make_engine_group
 
@@ -32,6 +38,10 @@ from repro.serving import Request, make_engine_group
 def main():
     p = argparse.ArgumentParser()
     p.add_argument("--arch", default="qwen2-0.5b-reduced")
+    p.add_argument("--tenant", action="append", default=[],
+                   metavar="NAME=ARCH[:WEIGHT[:LOOPS]]",
+                   help="repeatable: multi-tenant group (overrides "
+                        "--arch; see docs/FAMILIES.md)")
     p.add_argument("--requests", type=int, default=12)
     p.add_argument("--max-batch", type=int, default=4)
     p.add_argument("--max-new", type=int, default=16)
@@ -52,13 +62,20 @@ def main():
                    choices=("flat", "hierarchical"))
     args = p.parse_args()
 
-    cfg = get_config(args.arch)
-    params = api.init(jax.random.PRNGKey(0), cfg)
+    tenants = parse_tenant_specs(args.tenant)
+    if tenants:
+        cfg = {t.name: get_config(t.arch) for t in tenants}
+        params = {t.name: api.init(jax.random.PRNGKey(i), cfg[t.name])
+                  for i, t in enumerate(tenants)}
+        args.event_loops = sum(t.event_loops for t in tenants)
+    else:
+        cfg = get_config(args.arch)
+        params = api.init(jax.random.PRNGKey(0), cfg)
     serve = ServeConfig(
         event_loops=args.event_loops, poll=args.poll,
         max_batch=args.max_batch, max_len=256,
         pods=args.pods, pod_axis=args.pod_axis,
-        leader_loops=args.leader_loops,
+        leader_loops=args.leader_loops, tenants=tenants,
         comm=CommConfig(mode=args.comm_mode, channels=args.channels,
                         aggregate=args.aggregate, flush=args.flush,
                         hierarchical=args.emission == "hierarchical",
@@ -70,12 +87,16 @@ def main():
               f"leader lanes={args.leader_channels}")
 
     rng = np.random.default_rng(0)
-    reqs = [Request(uid=i,
-                    prompt=rng.integers(0, cfg.vocab_size,
-                                        size=int(rng.integers(4, 40))),
-                    max_new=args.max_new,
-                    temperature=0.0 if i % 2 else 0.8)
-            for i in range(args.requests)]
+    reqs = []
+    for i in range(args.requests):
+        name = tenants[i % len(tenants)].name if tenants else ""
+        c = cfg[name] if tenants else cfg
+        reqs.append(Request(uid=i,
+                            prompt=rng.integers(0, c.vocab_size,
+                                                size=int(rng.integers(4, 40))),
+                            max_new=args.max_new,
+                            temperature=0.0 if i % 2 else 0.8,
+                            tenant=name))
 
     t0 = time.time()
     group.submit(reqs)
@@ -88,6 +109,9 @@ def main():
           f"({n_tok/dt:.1f} tok/s on {jax.default_backend()}) | "
           f"{args.event_loops} loops, poll={args.poll} "
           f"(spins={st.spins} parks={st.parks}), comm={args.comm_mode}")
+    if tenants:
+        print(f"  tenants: fairness={group.fairness_counters} "
+              f"dispatch={group.dispatch_log[:12]}")
     for loop in group.loops:
         print(f"  loop {loop.index}: owns channels {loop.channels}, "
               f"served {len(loop.results)}")

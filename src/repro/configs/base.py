@@ -310,6 +310,22 @@ class CommConfig:
 
 
 @dataclass(frozen=True)
+class TenantConfig:
+    """One tenant of a multi-tenant ``EventLoopGroup``: a named model
+    family sharing the group's channel pool with the others. Tenants
+    partition ``serve.event_loops`` into disjoint contiguous loop
+    ranges (declaration order), so channel ownership stays disjoint
+    per loop AND per tenant; ``weight`` sets the tenant's share of the
+    group-level admission via deterministic weighted-fair scheduling
+    (docs/FAMILIES.md §Tenants and fairness)."""
+
+    name: str                          # unique tenant key (Request.tenant)
+    arch: str = ""                     # registry arch served for this tenant
+    weight: int = 1                    # weighted-fair admission share
+    event_loops: int = 1               # loops owned by this tenant
+
+
+@dataclass(frozen=True)
 class ServeConfig:
     """Event-loop serving (the paper's §IV benchmark topology, applied to
     inference): an ``EventLoopGroup`` of ``event_loops`` loops, each
@@ -354,6 +370,7 @@ class ServeConfig:
     pods: int = 1                      # two-level fabric: pod count
     pod_axis: str = "pod"              # mesh axis name of the pod dimension
     leader_loops: int = 1              # loops pinned to the leader lanes
+    tenants: tuple = ()                # TenantConfig partition of the loops
 
     POLLS = ("busy", "park", "adaptive")
 
@@ -401,6 +418,30 @@ class ServeConfig:
                     f"leader_channels={self.comm.leader_channels}): under "
                     "the two-level fabric every loop must own at least one "
                     "local lane for its in-pod stages")
+        if self.tenants:
+            names = [t.name for t in self.tenants]
+            if any(not n for n in names) or len(set(names)) != len(names):
+                raise ValueError(
+                    f"serve.tenants names must be unique and non-empty "
+                    f"(got {names!r}): Request.tenant routes by name")
+            for t in self.tenants:
+                if t.weight < 1:
+                    raise ValueError(
+                        f"tenant {t.name!r}: weight must be >= 1 (got "
+                        f"{t.weight}) — zero-weight tenants would starve")
+                if t.event_loops < 1:
+                    raise ValueError(
+                        f"tenant {t.name!r}: event_loops must be >= 1 (got "
+                        f"{t.event_loops}): every tenant needs at least one "
+                        "loop, hence at least one owned channel")
+            total = sum(t.event_loops for t in self.tenants)
+            if total != self.event_loops:
+                raise ValueError(
+                    f"serve.tenants pin the fleet size: per-tenant "
+                    f"event_loops sum to {total} but serve.event_loops="
+                    f"{self.event_loops}. Tenant loop ranges are a static "
+                    "partition of the group, so supervisor autoscaling "
+                    "requires tenants=()")
 
 
 @dataclass(frozen=True)

@@ -185,12 +185,16 @@ class CommBackend(abc.ABC):
         slices through the channel schedule at the configured
         aggregate/flush granularity, honoring ``ctx.channel_indices``
         affinity). ``kind`` is ``"all_reduce"`` (sum over the ring; the
-        result is replicated) or ``"all_gather"`` (peer-major
-        concatenation: the result's leading factor is the ring size).
-        All strategies return bit-identical values — only the emission
-        structure differs (conformance-tested)."""
+        result is replicated), ``"all_gather"`` (peer-major
+        concatenation: the result's leading factor is the ring size) or
+        ``"all_to_all"`` (the MoE expert exchange: the payload is a
+        peer-major ``(ring, len // ring)`` block and each peer receives
+        its column of every peer's block). All strategies return
+        bit-identical values — only the emission structure differs
+        (conformance-tested)."""
         from repro.core.backends import pipeline
-        group = jax.lax.psum(1, ctx.flat_axes) if kind == "all_gather" else 1
+        group = jax.lax.psum(1, ctx.flat_axes) \
+            if kind in ("all_gather", "all_to_all") else 1
         return pipeline.emit_flat(flat, ctx, kind, group=group)
 
     # -- reconstruction / resharding hooks ------------------------------

@@ -225,5 +225,6 @@ class HadronioOverlapBackend(CommBackend):
         from repro.core.backends import pipeline
         ready = dataclasses.replace(ctx.comm, flush="ready")
         rctx = dataclasses.replace(ctx, comm=ready)
-        group = jax.lax.psum(1, ctx.flat_axes) if kind == "all_gather" else 1
+        group = jax.lax.psum(1, ctx.flat_axes) \
+            if kind in ("all_gather", "all_to_all") else 1
         return pipeline.emit_flat(flat, rctx, kind, group=group)

@@ -149,7 +149,8 @@ class HadronioOverlapRsBackend(CommBackend):
         from repro.core.backends import pipeline as pl
         ready = dataclasses.replace(ctx.comm, flush="ready")
         rctx = dataclasses.replace(ctx, comm=ready)
-        group = jax.lax.psum(1, ctx.flat_axes) if kind == "all_gather" else 1
+        group = jax.lax.psum(1, ctx.flat_axes) \
+            if kind in ("all_gather", "all_to_all") else 1
         return pl.emit_flat(flat, rctx, kind, group=group)
 
     def state_specs(self, run: RunConfig, n_shards: int,

@@ -64,6 +64,10 @@ global barrier. Cross-pod collective count drops from n_channels to
 n_leader_channels; numerics are bit-identical to the per-channel
 hierarchical path (identical per-element summation trees — concatenation
 before an elementwise psum changes nothing; gathers are data movement).
+The ``all_to_all`` kind (the MoE expert exchange, serving path) is the
+one exception: it carries source-target traffic over the full flattened
+ring and bypasses the leader split entirely (see
+:func:`begin_emission`).
 
 Backends compose these; none of them re-implements a stage.
 """
@@ -85,7 +89,7 @@ from repro.core.selector import barrier
 
 from repro.core.backends.base import SyncContext
 
-_KINDS = ("all_reduce", "reduce_scatter", "all_gather")
+_KINDS = ("all_reduce", "reduce_scatter", "all_gather", "all_to_all")
 
 # ---------------------------------------------------------------------------
 # Chaos seam: an injectable flush fault (serving/chaos.py). The callable is
@@ -358,6 +362,23 @@ def _carve_gather(st: EmitState, c: int, g: jax.Array) -> None:
         off += n
 
 
+def _carve_alltoall(st: EmitState, c: int, ex: jax.Array) -> None:
+    """Carve one lane's exchanged buffer back per item (all_to_all): the
+    coalesced wire is peer-major (:func:`interleave_for_scatter`), so the
+    exchanged result's row ``p`` holds peer ``p``'s chunk of every item
+    in buffer order — item i's exchange is the same column range of
+    every row, exactly the gather carve with a per-item width of
+    ``size // group``."""
+    ex = (_unpack_flush(ex, st.ctx.comm) if st.unpack
+          else ex).reshape(st.group, -1)
+    off = 0
+    for i in st.plan.groups[c]:
+        n = st.staged[i].size // st.group
+        st.outs[i] = jax.lax.slice(ex, (0, off),
+                                   (st.group, off + n)).reshape(-1)
+        off += n
+
+
 def _carve_scatter(st: EmitState, c: int, sh: jax.Array) -> None:
     """Carve one lane's scattered shard back per item (reduce_scatter:
     each item contributes 1/group of its elements)."""
@@ -457,6 +478,12 @@ def _flush_channel(st: EmitState, c: int) -> None:
         # the serving gathering write: ONE coalesced gather per channel
         buf = flats[0] if len(flats) == 1 else jnp.concatenate(flats)
         _carve_gather(st, c, st.chans[c].all_gather(buf))
+    elif st.kind == "all_to_all":
+        # the expert exchange: peer-major coalescing keeps every item's
+        # per-peer chunks contiguous per row, ONE exchange per channel
+        buf = interleave_for_scatter(flats, st.group)
+        _carve_alltoall(st, c, st.chans[c].all_to_all(
+            buf.reshape(st.group, -1)))
     else:
         buf = interleave_for_scatter(flats, st.group)
         _carve_scatter(st, c, st.chans[c].reduce_scatter(buf))
@@ -480,8 +507,16 @@ def begin_emission(ctx: SyncContext, n_items: int, kind: str, *,
     plan group ids stay aligned."""
     assert kind in _KINDS, kind
     pool = channels_for(ctx, n_items)
-    local = [c for c in pool if not c.leader]
-    leads = [c for c in pool if c.leader]
+    if kind == "all_to_all":
+        # the expert exchange BYPASSES leader emission: all-to-all
+        # carries source-target pairs over the full flattened ring (the
+        # ring IS the expert axis), not replica groups, so there is no
+        # in-pod/cross-pod decomposition to carve leader lanes for —
+        # leader-flagged lanes flush flat like locals
+        local, leads = list(pool), []
+    else:
+        local = [c for c in pool if not c.leader]
+        leads = [c for c in pool if c.leader]
     plan = make_flush_plan(n_items, len(local), ctx.comm.flush)
     fills = [ChannelFill(frozenset(g)) for g in plan.groups]
     st = EmitState(ctx=ctx, kind=kind, group=group, unpack=unpack,
@@ -522,6 +557,8 @@ def stage_slices(st: EmitState, i: int, wire: jax.Array) -> list:
             y = ch.all_reduce(x)
         elif st.kind == "all_gather":
             y = ch.all_gather(x.reshape(-1))
+        elif st.kind == "all_to_all":
+            y = ch.all_to_all(x.reshape(st.group, -1)).reshape(-1)
         else:
             y = ch.reduce_scatter(x)
         st.last[ch.index] = y
@@ -626,15 +663,46 @@ def emit_flat(flat: jax.Array, ctx: SyncContext, kind: str, *,
     the gradient path uses, applied to inference traffic. ``kind`` is
     ``"all_reduce"`` (returns the summed payload, ``flat``'s own shape)
     or ``"all_gather"`` (``group`` = ring size; returns the peer-major
-    concatenation, shape ``(group * len,)``). Zero-padding added by the
-    slice plan is trimmed from the result (per peer block for gathers),
-    so callers see exactly their payload."""
+    concatenation, shape ``(group * len,)``) or ``"all_to_all"``
+    (``group`` = ring size; ``flat`` is the peer-major ``(group, len //
+    group)`` exchange payload flattened, and the result is the received
+    payload in the same layout — the MoE expert dispatch/combine).
+    Zero-padding added by the slice plan is trimmed from the result (per
+    peer block for gathers and exchanges), so callers see exactly their
+    payload."""
     assert flat.ndim == 1, flat.shape
-    assert kind in ("all_reduce", "all_gather"), \
-        f"serving payloads are replicated or gathered, never scattered: {kind}"
+    assert kind in ("all_reduce", "all_gather", "all_to_all"), \
+        ("serving payloads are replicated, gathered or exchanged, "
+         f"never scattered: {kind}")
     from repro.core.ring_buffer import plan_slices
     n_elems = flat.shape[0]
     itemsize = jnp.dtype(flat.dtype).itemsize
+    if kind == "all_to_all":
+        # the exchange payload is a (group, row) peer-major block; the
+        # ring-buffer plan carves the per-peer ROW, so every staged
+        # slice (a column block, flattened group-major) is itself a
+        # complete peer-major exchange payload and the carved results
+        # re-concatenate per row — slicing commutes with the exchange
+        # exactly like it does with gathers
+        assert n_elems % group == 0, (n_elems, group)
+        row = n_elems // group
+        sp = plan_slices(row * itemsize, ctx.comm)
+        elems = max(1, sp.slice_bytes // itemsize)
+        n = sp.n_slices
+        pad = n * elems - row
+        assert pad >= 0, (sp, row)
+        view = flat.reshape(group, row)
+        if pad:
+            view = jnp.pad(view, ((0, 0), (0, pad)))
+        st = begin_emission(ctx, n, kind, group=group)
+        for i in range(n):
+            stage_slices(st, i, jax.lax.slice(
+                view, (0, i * elems),
+                (group, (i + 1) * elems)).reshape(-1))
+        outs = finish_emission(st)
+        ex = outs[0].reshape(group, -1) if len(outs) == 1 else \
+            jnp.concatenate([o.reshape(group, -1) for o in outs], axis=1)
+        return ex[:, :row].reshape(-1)
     sp = plan_slices(n_elems * itemsize, ctx.comm)
     elems = max(1, sp.slice_bytes // itemsize)
     # the plan's slice count IS the emitted-collective prediction
@@ -667,6 +735,11 @@ def raw_emit(flat: jax.Array, ctx: SyncContext, kind: str) -> jax.Array:
     differs."""
     if kind == "all_reduce":
         return jax.lax.psum(flat, ctx.flat_axes)
+    if kind == "all_to_all":
+        group = jax.lax.psum(1, ctx.flat_axes)
+        return jax.lax.all_to_all(
+            flat.reshape(group, -1), ctx.flat_axes, split_axis=0,
+            concat_axis=0, tiled=True).reshape(-1)
     assert kind == "all_gather", kind
     return jax.lax.all_gather(flat, ctx.flat_axes, axis=0, tiled=True)
 

@@ -107,6 +107,19 @@ class CommChannel:
         _note(self, "all_gather")
         return jax.lax.all_gather(x, self.axes, axis=x.ndim - 1, tiled=True)
 
+    def all_to_all(self, x: jax.Array) -> jax.Array:
+        """Peer-major exchange over the channel's ring: ``x`` is
+        ``(group, m)`` (row p = this peer's payload FOR peer p) and the
+        result's row p is peer p's payload for this peer — the MoE
+        expert-parallel dispatch/combine primitive. Always the full
+        flattened ring, even pod-aware: all-to-all carries source-target
+        traffic, not replica groups, so there is no in-pod/cross-pod
+        decomposition to ride leader lanes (``hlo_analysis._POD_KINDS``
+        draws the same line)."""
+        _note(self, "all_to_all")
+        return jax.lax.all_to_all(x, self.axes, split_axis=0,
+                                  concat_axis=0, tiled=True)
+
     def ping(self, x: jax.Array, axis: str, n_shards: int) -> jax.Array:
         """One ring hop (the ping-pong primitive for the latency bench)."""
         _note(self, "ping")

@@ -22,6 +22,13 @@ CLI::
   python -m repro.launch.serve --arch qwen2-0.5b-reduced --requests 32 \
       --event-loops 1 --supervised --max-loops 4 --scale-up-depth 4 \
       --admission-capacity 16 --dispatch-quantum 8
+
+  # multi-tenant: two model FAMILIES side by side in one group — each
+  # --tenant NAME=ARCH[:WEIGHT[:LOOPS]] owns a contiguous loop range,
+  # requests route by tenant with weighted-fair admission (2:1 here)
+  python -m repro.launch.serve --requests 12 --comm-mode hadronio \
+      --tenant chat=qwen2-0.5b-reduced:2 \
+      --tenant rnn=rwkv6-7b-reduced:1
 """
 from __future__ import annotations
 
@@ -32,12 +39,29 @@ import jax
 import numpy as np
 
 from repro.configs.registry import get_config
-from repro.configs.base import CommConfig, ServeConfig
+from repro.configs.base import CommConfig, ServeConfig, TenantConfig
 from repro.checkpoint import CheckpointStore
 from repro.core.backends import available_modes
 from repro.models import api
 from repro.serving import (Request, RetryBudget, Supervisor,
                            SupervisorConfig, make_engine_group)
+
+
+def parse_tenant_specs(specs) -> tuple:
+    """``NAME=ARCH[:WEIGHT[:LOOPS]]`` -> TenantConfig tuple (shared by
+    this launcher and examples/serve_batched.py)."""
+    out = []
+    for spec in specs or ():
+        name, _, rest = spec.partition("=")
+        if not name or not rest:
+            raise ValueError(
+                f"--tenant {spec!r}: expected NAME=ARCH[:WEIGHT[:LOOPS]]")
+        parts = rest.split(":")
+        out.append(TenantConfig(
+            name, arch=parts[0],
+            weight=int(parts[1]) if len(parts) > 1 else 1,
+            event_loops=int(parts[2]) if len(parts) > 2 else 1))
+    return tuple(out)
 
 
 def load_params(args, cfg):
@@ -58,7 +82,15 @@ def load_params(args, cfg):
 
 def main() -> int:
     p = argparse.ArgumentParser(description=__doc__)
-    p.add_argument("--arch", required=True)
+    p.add_argument("--arch", default="",
+                   help="registry id (required unless --tenant is given)")
+    p.add_argument("--tenant", action="append", default=[],
+                   metavar="NAME=ARCH[:WEIGHT[:LOOPS]]",
+                   help="repeatable: serve several models in ONE group — "
+                        "each tenant owns LOOPS event loops (contiguous "
+                        "range, disjoint channels) and a WEIGHT share of "
+                        "weighted-fair admission; requests route by "
+                        "Request.tenant (docs/FAMILIES.md)")
     p.add_argument("--requests", type=int, default=8)
     p.add_argument("--batch", type=int, default=4)
     p.add_argument("--max-new", type=int, default=16)
@@ -126,17 +158,33 @@ def main() -> int:
                         "(negative disables shrinking)")
     args = p.parse_args()
 
-    cfg = get_config(args.arch)
-    params = load_params(args, cfg)
+    tenants = parse_tenant_specs(args.tenant)
+    if not tenants and not args.arch:
+        p.error("--arch is required (or pass one or more --tenant specs)")
+    if tenants and args.supervised:
+        p.error("--supervised requires a single-tenant group: tenant loop "
+                "ranges pin the fleet size, which autoscaling would "
+                "resize (drop --tenant or --supervised)")
+    if tenants:
+        cfg = {t.name: get_config(t.arch) for t in tenants}
+        params = {t.name: api.init(jax.random.PRNGKey(args.seed + i),
+                                   cfg[t.name])
+                  for i, t in enumerate(tenants)}
+        if args.event_loops == 1:      # default: one loop per tenant
+            args.event_loops = sum(t.event_loops for t in tenants)
+    else:
+        cfg = get_config(args.arch)
+        params = load_params(args, cfg)
     # no silent clamping: ServeConfig raises its own clear errors when
-    # event_loops > channels (each loop must own a disjoint run) or the
+    # event_loops > channels (each loop must own a disjoint run), the
     # pod topology cannot be honored (leader lanes must leave every loop
-    # a local lane); make_serve_mesh rejects pods not dividing devices
+    # a local lane), or the tenant loop counts do not sum to the fleet
+    # size; make_serve_mesh rejects pods not dividing devices
     serve = ServeConfig(
         event_loops=args.event_loops, poll=args.poll,
         max_batch=args.batch, max_len=args.max_len,
         pods=args.pods, pod_axis=args.pod_axis,
-        leader_loops=args.leader_loops,
+        leader_loops=args.leader_loops, tenants=tenants,
         comm=CommConfig(mode=args.comm_mode, channels=args.channels,
                         aggregate=args.aggregate, flush=args.flush,
                         hierarchical=args.emission == "hierarchical",
@@ -163,11 +211,24 @@ def main() -> int:
               f"mesh={dict(eng.step.mesh.shape)}")
 
     rng = np.random.default_rng(args.seed)
-    reqs = [Request(uid=i,
-                    prompt=rng.integers(0, cfg.vocab_size,
-                                        size=rng.integers(4, 32)),
-                    max_new=args.max_new, temperature=args.temperature)
-            for i in range(args.requests)]
+    if tenants:
+        names = [t.name for t in tenants]
+        reqs = []
+        for i in range(args.requests):
+            name = names[i % len(names)]
+            reqs.append(Request(
+                uid=i,
+                prompt=rng.integers(0, cfg[name].vocab_size,
+                                    size=rng.integers(4, 32)),
+                max_new=args.max_new, temperature=args.temperature,
+                tenant=name))
+    else:
+        reqs = [Request(uid=i,
+                        prompt=rng.integers(0, cfg.vocab_size,
+                                            size=rng.integers(4, 32)),
+                        max_new=args.max_new,
+                        temperature=args.temperature)
+                for i in range(args.requests)]
     t0 = time.time()
     if sup is not None:
         sup.submit(reqs)
@@ -193,6 +254,9 @@ def main() -> int:
               f"{sup.mttr_s() if sup.trace else None}")
         for a in sup.healing_trace():
             print(f"  heal round={a[0]} {a[1]} target={a[2]} {a[3]}")
+    if tenants:
+        print(f"[serve] tenants: fairness={group.fairness_counters} "
+              f"dispatch={group.dispatch_log[:12]}")
     for loop in group.loops:
         print(f"  loop {loop.index}: channels={loop.channels} "
               f"results={len(loop.results)}")

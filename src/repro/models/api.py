@@ -86,8 +86,11 @@ def _embed_inputs(params, batch, cfg: ModelConfig, dtype):
 
 
 def _trunk(params, x, cfg: ModelConfig, *, mode, shard_fn,
-           cache=None, pos=None, q_positions=None):
-    """Dispatch to the family stack. Returns (x, new_cache, aux)."""
+           cache=None, pos=None, q_positions=None, expert_fn=None):
+    """Dispatch to the family stack. Returns (x, new_cache, aux).
+    ``expert_fn`` replaces the MoE expert-compute stage
+    (:func:`repro.models.moe.apply_moe`) — ignored by expert-free
+    families."""
     if cfg.family == "ssm":
         x = apply_norm(params["ln_in"], x, "layernorm")
         x, st = rwkv.apply_rwkv_stack(params["layers"], x, cfg, mode=mode,
@@ -100,7 +103,7 @@ def _trunk(params, x, cfg: ModelConfig, *, mode, shard_fn,
     kind = "moe" if cfg.family == "moe" else "dense"
     return tfm.apply_stack(params["layers"], x, cfg, kind=kind, mode=mode,
                            shard_fn=shard_fn, cache=cache, pos=pos,
-                           q_positions=q_positions)
+                           q_positions=q_positions, expert_fn=expert_fn)
 
 
 # ---------------------------------------------------------------------------
@@ -142,11 +145,13 @@ def loss(params: PyTree, batch: dict, cfg: ModelConfig,
 
 
 def prefill(params: PyTree, batch: dict, cfg: ModelConfig,
-            shard_fn: ShardFn = no_shard, logits_fn=None):
+            shard_fn: ShardFn = no_shard, logits_fn=None, expert_fn=None):
     """``logits_fn`` overrides the LM head (signature of
     :func:`repro.models.layers.lm_logits`) — the serving dispatch layer
     passes a tensor-parallel head whose partial-logit reduction flows
-    through the registered CommBackend wire (serving/dispatch.py)."""
+    through the registered CommBackend wire (serving/dispatch.py).
+    ``expert_fn`` likewise overrides the MoE expert-compute stage (the
+    expert-parallel all-to-all path); expert-free families ignore it."""
     head = logits_fn or lm_logits
     dtype = jnp.dtype(cfg.compute_dtype)
     if cfg.family == "encdec":
@@ -164,7 +169,8 @@ def prefill(params: PyTree, batch: dict, cfg: ModelConfig,
 
     x, _ = _embed_inputs(params, batch, cfg, dtype)
     x = shard_fn(x, ("batch", "seq", None))
-    x, cache, _ = _trunk(params, x, cfg, mode="prefill", shard_fn=shard_fn)
+    x, cache, _ = _trunk(params, x, cfg, mode="prefill", shard_fn=shard_fn,
+                         expert_fn=expert_fn)
     x = apply_norm(params["ln_f"], x, cfg.norm_kind)
     if "last_pos" in batch:     # per-request prompt end (serving engine)
         b_idx = jnp.arange(x.shape[0])
@@ -181,9 +187,10 @@ def prefill(params: PyTree, batch: dict, cfg: ModelConfig,
 
 
 def decode_step(params: PyTree, cache: PyTree, batch: dict, cfg: ModelConfig,
-                shard_fn: ShardFn = no_shard, logits_fn=None):
+                shard_fn: ShardFn = no_shard, logits_fn=None, expert_fn=None):
     """One token for the whole batch. batch: {"token": (B,), "pos": ()}.
-    ``logits_fn`` overrides the LM head exactly as in :func:`prefill`."""
+    ``logits_fn`` and ``expert_fn`` override the LM head / MoE expert
+    stage exactly as in :func:`prefill`."""
     head = logits_fn or lm_logits
     dtype = jnp.dtype(cfg.compute_dtype)
     pos = batch["pos"]
@@ -209,7 +216,8 @@ def decode_step(params: PyTree, cache: PyTree, batch: dict, cfg: ModelConfig,
     if cfg.family == "vlm":
         pos = pos + cfg.num_patches   # cache slots 0..P-1 hold the prefix
     x, new_cache, _ = _trunk(params, x, cfg, mode="decode",
-                             shard_fn=shard_fn, cache=cache, pos=pos)
+                             shard_fn=shard_fn, cache=cache, pos=pos,
+                             expert_fn=expert_fn)
     x = apply_norm(params["ln_f"], x, cfg.norm_kind)
     logits = head(params["embed"], x, shard_fn)[:, 0]
     return logits, new_cache

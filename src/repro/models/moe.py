@@ -61,9 +61,35 @@ def _ranks_within_expert(eids: jax.Array) -> jax.Array:
     return ranks
 
 
+def apply_experts(p: dict, buf: jax.Array, cfg: ModelConfig,
+                  shard_fn: ShardFn = no_shard) -> jax.Array:
+    """The expert-compute stage alone: grouped swiglu over a dispatched
+    ``(B, E', C, D)`` buffer -> same-shape output buffer. ``E'`` may be a
+    SLICE of the expert axis (the serving expert-parallel path exchanges
+    tokens peer-major, slices the expert weights per peer, and calls
+    this on the local slice); ``p["wi"]/["wg"]/["wo"]`` must then be the
+    matching ``(E', ...)`` slices. Routing/dispatch/combine stay with
+    :func:`apply_moe` — they are per-row and never cross peers."""
+    dt = buf.dtype
+    h = jnp.einsum("becd,edf->becf", buf, p["wi"].astype(dt))
+    g = jnp.einsum("becd,edf->becf", buf, p["wg"].astype(dt))
+    h = jax.nn.silu(g) * h
+    h = shard_fn(h, ("batch", "experts", None, "mlp"))
+    out_buf = jnp.einsum("becf,efd->becd", h, p["wo"].astype(dt))
+    return shard_fn(out_buf, ("batch", "experts", None, None))
+
+
 def apply_moe(p: dict, x: jax.Array, cfg: ModelConfig,
-              shard_fn: ShardFn = no_shard):
-    """x: (B, S, D) -> (out, aux_loss). Dispatch is per-row (grouped)."""
+              shard_fn: ShardFn = no_shard, expert_fn=None):
+    """x: (B, S, D) -> (out, aux_loss). Dispatch is per-row (grouped).
+
+    ``expert_fn(p, buf, cfg, shard_fn) -> out_buf`` replaces ONLY the
+    expert-compute stage (default :func:`apply_experts`) — the seam the
+    serving dispatch uses to run expert-parallel compute with the
+    dispatch/combine exchange on the CommBackend wire. Routing, the
+    capacity scatter and the weighted combine are per-row and identical
+    either way, so any ``expert_fn`` computing the same math is
+    bit-exact."""
     m = cfg.moe
     b, s, d = x.shape
     k, e = m.top_k, m.num_experts
@@ -95,12 +121,8 @@ def apply_moe(p: dict, x: jax.Array, cfg: ModelConfig,
     buf = shard_fn(buf, ("batch", "experts", None, None))
 
     # --- expert compute (grouped swiglu; local per (data, model) shard) ---
-    h = jnp.einsum("becd,edf->becf", buf, p["wi"].astype(dt))
-    g = jnp.einsum("becd,edf->becf", buf, p["wg"].astype(dt))
-    h = jax.nn.silu(g) * h
-    h = shard_fn(h, ("batch", "experts", None, "mlp"))
-    out_buf = jnp.einsum("becf,efd->becd", h, p["wo"].astype(dt))
-    out_buf = shard_fn(out_buf, ("batch", "experts", None, None))
+    fn = expert_fn if expert_fn is not None else apply_experts
+    out_buf = fn(p, buf, cfg, shard_fn)
 
     # --- combine: gather per-assignment outputs, weighted sum over k ---
     def gather_row(buf_r, eids_r, ranks_r):

@@ -55,7 +55,8 @@ def apply_block(p: dict, x: jax.Array, cfg: ModelConfig, *, kind: str,
                 cache_k: Optional[jax.Array] = None,
                 cache_v: Optional[jax.Array] = None,
                 pos: Optional[jax.Array] = None,
-                q_positions: Optional[jax.Array] = None):
+                q_positions: Optional[jax.Array] = None,
+                expert_fn=None):
     """Returns (x, new_cache_k, new_cache_v, aux_loss)."""
     b, s, _ = x.shape
     h = apply_norm(p["ln1"], x, cfg.norm_kind)
@@ -91,7 +92,8 @@ def apply_block(p: dict, x: jax.Array, cfg: ModelConfig, *, kind: str,
     h = shard_fn(h, ("batch", "seq_gather", None))   # SP: one AG per block
     aux = jnp.zeros((), jnp.float32)
     if kind == "moe":
-        y, aux = moe_mod.apply_moe(p["moe"], h, cfg, shard_fn)
+        y, aux = moe_mod.apply_moe(p["moe"], h, cfg, shard_fn,
+                                   expert_fn=expert_fn)
     else:
         y = apply_mlp(p["mlp"], h, cfg.mlp_kind, shard_fn)
     x = x + y
@@ -114,7 +116,8 @@ def apply_stack(params: dict, x: jax.Array, cfg: ModelConfig, *, kind: str,
                 mode: str, shard_fn: ShardFn = no_shard,
                 cache: Optional[dict] = None,
                 pos: Optional[jax.Array] = None,
-                q_positions: Optional[jax.Array] = None):
+                q_positions: Optional[jax.Array] = None,
+                expert_fn=None):
     """Scan the block over stacked params.
 
     Returns (x, new_cache, aux_sum). ``cache`` is {"k","v"}: (L,B,S,KV,Dh)
@@ -129,12 +132,13 @@ def apply_stack(params: dict, x: jax.Array, cfg: ModelConfig, *, kind: str,
             x, nk, nv, aux = apply_block(
                 p, x, cfg, kind=kind, mode=mode, shard_fn=shard_fn,
                 window=window, cache_k=ck, cache_v=cv, pos=pos,
-                q_positions=q_positions)
+                q_positions=q_positions, expert_fn=expert_fn)
             return x, (nk, nv, aux)
         p = xs
         x, nk, nv, aux = apply_block(
             p, x, cfg, kind=kind, mode=mode, shard_fn=shard_fn,
-            window=window, pos=pos, q_positions=q_positions)
+            window=window, pos=pos, q_positions=q_positions,
+            expert_fn=expert_fn)
         if mode == "prefill":
             return x, (nk, nv, aux)
         return x, aux

@@ -1,3 +1,4 @@
+from repro.configs.base import TenantConfig
 from repro.serving.engine import (DecodeEngine, Request, Result,
                                   make_engine_group)
 from repro.serving.event_loop import (EventLoop, EventLoopGroup,
@@ -5,10 +6,10 @@ from repro.serving.event_loop import (EventLoop, EventLoopGroup,
                                       channel_affinity)
 from repro.serving.supervisor import (HealAction, Outcome, RetryBudget,
                                       Supervisor, SupervisorConfig)
-from repro.serving import chaos, slo
+from repro.serving import cache_layout, chaos, slo
 
 __all__ = ["DecodeEngine", "Request", "Result", "make_engine_group",
            "EventLoop", "EventLoopGroup", "LoopFailure", "Poller",
            "PollStats", "channel_affinity", "HealAction", "Outcome",
-           "RetryBudget", "Supervisor", "SupervisorConfig", "chaos",
-           "slo"]
+           "RetryBudget", "Supervisor", "SupervisorConfig", "TenantConfig",
+           "cache_layout", "chaos", "slo"]

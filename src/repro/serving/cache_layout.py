@@ -1,0 +1,123 @@
+"""Per-family decode-state layouts — the declarative seam that makes
+every registered config family a first-class citizen of the serving
+gathering write.
+
+The paper's transparency claim is that the transport never special-cases
+the application: hadroNIO slots under the NIO contract and every netty
+app rides InfiniBand unchanged (§II). The serving analogue is the
+prefill gathering write in ``serving/dispatch.py``: each ring peer
+prefills its contiguous run of the request batch, every decode-state
+leaf plus the last-token logits coalesce into ONE flat wire payload, and
+the gathered result is carved back per leaf with the batch dimension
+re-merged peer-major. The ONLY family-specific fact in that pipeline is
+*where each cache leaf carries its batch axis* — so that fact lives
+here, declaratively, instead of as special cases in the dispatch layer
+(arXiv:2001.04206 makes the same argument for keeping model layout
+decisions declarative so the comm layer stays generic).
+
+A family's layout is a resolver ``(path, leaf) -> batch_axis`` mapped
+over the cache pytree (``path`` is the tuple of dict keys from the root,
+``leaf`` the array or ShapeDtypeStruct). Registered layouts:
+
+============  ==============================================  =========
+family        cache leaves                                    batch axis
+============  ==============================================  =========
+dense         KV pages ``{"k","v"}: (L, B, S, KV, Dh)``       1
+moe           same KV pages as dense (expert state is         1
+              per-token, nothing persists across steps)
+ssm           rwkv6 recurrent state ``wkv (L, B, h, hs, hs)``  1
+              / ``tm_x`` / ``cm_x (L, B, 1, d)``
+hybrid        MIXED — ``groups`` subtree (stacked rglru /     1
+              local-attn entries, ``(n_groups, B, ...)``)
+              vs the unstacked ``tail*`` entries whose        0
+              leaves lead with the batch dim ``(B, ...)``
+encdec        whisper ``self`` KV ``(L, B, S, KV, Dh)`` plus  1
+              ``cross_k`` / ``cross_v (L, B, frames, ...)``
+vlm           llava KV pages with the vision prefix folded    1
+              into S — same page shape as dense
+============  ==============================================  =========
+
+The last-token logits ``(B, V)`` always merge at axis 0; that is the
+dispatch layer's own output contract, not a family fact, so it is not
+part of the map. ``docs/FAMILIES.md`` documents the contract a new
+family must implement; ``tests/test_backend_conformance.py`` fails
+collection when a registered family has no layout (the same
+missing-coverage pattern as unregistered comm modes).
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Tuple
+
+import jax
+
+# resolver: (path_keys, leaf) -> batch axis of that cache leaf
+LayoutFn = Callable[[Tuple[str, ...], Any], int]
+
+
+def _stacked_axis1(path: Tuple[str, ...], leaf: Any) -> int:
+    """Layer-stacked state: every leaf leads with the layer (or frame)
+    dim and carries batch at axis 1 — KV pages (L, B, S, KV, Dh),
+    rwkv6 recurrent state (L, B, ...), whisper cross caches."""
+    return 1
+
+
+def _hybrid_mixed(path: Tuple[str, ...], leaf: Any) -> int:
+    """recurrentgemma's cache is the mixed case: the ``groups`` subtree
+    stacks each block-pattern entry over the repeated groups
+    ((n_groups, B, ...) — batch at axis 1) while the unstacked ``tail*``
+    entries keep their per-layer shapes ((B, lw) rglru hidden,
+    (B, conv1d_width-1, lw) conv state, (B, window, KV, Dh) local-attn
+    pages — batch at axis 0)."""
+    return 1 if "groups" in path else 0
+
+
+CACHE_LAYOUTS: dict[str, LayoutFn] = {
+    "dense": _stacked_axis1,
+    "moe": _stacked_axis1,
+    "ssm": _stacked_axis1,
+    "hybrid": _hybrid_mixed,
+    "encdec": _stacked_axis1,
+    "vlm": _stacked_axis1,
+}
+
+
+def _path_keys(path) -> Tuple[str, ...]:
+    keys = []
+    for k in path:
+        if hasattr(k, "key"):
+            keys.append(str(k.key))
+        elif hasattr(k, "idx"):
+            keys.append(str(k.idx))
+        else:
+            keys.append(str(k))
+    return tuple(keys)
+
+
+def layout_for(family: str) -> LayoutFn:
+    """The family's layout resolver — the error names the missing layout
+    and where to declare it, so a NEW family fails loudly at step-build
+    time instead of silently mis-merging its cache."""
+    try:
+        return CACHE_LAYOUTS[family]
+    except KeyError:
+        raise ValueError(
+            f"family {family!r} declares no cache layout: sharded prefill "
+            "re-merges every decode-state leaf after the gathering write "
+            "and needs each leaf's batch axis — register a resolver in "
+            "repro.serving.cache_layout.CACHE_LAYOUTS (see "
+            "docs/FAMILIES.md, §The cache-layout contract)") from None
+
+
+def batch_axes(family: str, cache: Any) -> list:
+    """Per-leaf batch axes of ``cache``, in ``jax.tree.flatten`` leaf
+    order (what the dispatch merge loop consumes). Works on arrays and
+    on ShapeDtypeStruct spec trees alike."""
+    fn = layout_for(family)
+    flat = jax.tree_util.tree_flatten_with_path(cache)[0]
+    axes = []
+    for path, leaf in flat:
+        ba = fn(_path_keys(path), leaf)
+        assert 0 <= ba < max(1, leaf.ndim), \
+            (family, _path_keys(path), ba, getattr(leaf, "shape", None))
+        axes.append(ba)
+    return axes

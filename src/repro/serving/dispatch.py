@@ -7,12 +7,16 @@ call signatures — ``prefill(params, batch)`` / ``decode(params, cache,
 dec)`` — that run inside a fully-manual ``shard_map`` over the mesh and
 emit their collectives via ``CommBackend.serve_emit``:
 
-* **prefill** — batch-sharded: each ring peer prefills its contiguous
-  run of the request batch locally, then every KV-cache leaf plus the
-  last-token logits are coalesced into ONE flat wire payload and
-  all-gathered — the serving gathering write (paper §III-C applied to
-  inference: many small cache buffers become one large request), carved
-  back per leaf with the batch dimension re-merged peer-major.
+* **prefill** — batch-sharded for EVERY registered family: each ring
+  peer prefills its contiguous run of the request batch locally, then
+  every decode-state leaf plus the last-token logits are coalesced into
+  ONE flat wire payload and all-gathered — the serving gathering write
+  (paper §III-C applied to inference: many small cache buffers become
+  one large request), carved back per leaf with the batch dimension
+  re-merged peer-major. WHERE each leaf carries its batch axis is the
+  family's declared cache layout (``serving/cache_layout.py``) — the
+  one family-specific fact, kept declarative so this layer stays
+  generic (docs/FAMILIES.md).
 * **decode** — tensor-parallel LM head: every peer runs the (replicated)
   trunk, computes partial logits from its contiguous ``d_model`` shard,
   and the partial-logit sum is all-reduced — the serving logit
@@ -22,6 +26,14 @@ emit their collectives via ``CommBackend.serve_emit``:
   ``channels`` / ``slice_bytes`` / ``aggregate`` / ``flush`` all shape
   serving traffic, and an event loop's channel affinity
   (``ctx.channel_indices``) bounds which connections it may emit on.
+* **MoE expert parallelism** — when the ring divides the expert count,
+  the expert-compute stage runs expert-parallel: the dispatched
+  ``(B, E, C, D)`` buffer rides an ``all_to_all`` exchange through the
+  same staged emission API (each peer receives every batch row's slice
+  of the expert axis, runs its local expert slice, and the reverse
+  exchange brings the outputs home). Pure data movement + identical
+  per-expert einsums, so tokens stay bit-identical to the local expert
+  stage; a non-dividing expert count falls back to local compute.
 
 All registered modes return bit-identical logits (per-element sums and
 peer-major gathers commute with slicing — conformance-tested in
@@ -44,7 +56,9 @@ from repro.core.backends import get_backend
 from repro.core.backends.base import SyncContext
 from repro.launch.mesh import make_mesh
 from repro.models import api
+from repro.models import moe as moe_mod
 from repro.models.layers import no_shard
+from repro.serving import cache_layout
 
 PyTree = Any
 
@@ -121,11 +135,11 @@ def make_serve_step(cfg: ModelConfig, comm: CommConfig, mesh=None, *,
         return _STEP_CACHE[key]
     axes = tuple(mesh.axis_names)
     n_shards = int(np.prod([mesh.shape[a] for a in axes]))
-    if n_shards > 1 and cfg.family in ("ssm", "hybrid"):
-        raise ValueError(
-            f"{cfg.family} serving is single-shard only: recurrent state "
-            "caches carry no uniform batch axis to re-merge after the "
-            "gathering write (attention-family KV caches do)")
+    # every family is batch-shardable — its declared cache layout tells
+    # the gathering write where each decode-state leaf carries batch; a
+    # family with NO layout fails here, at build time, with an error
+    # naming what to declare (serving/cache_layout.py)
+    cache_layout.layout_for(cfg.family)
     chans = tuple(channel_indices) if channel_indices is not None else None
     pod = pod_axis if pod_axis is not None else \
         ("pod" if "pod" in axes else None)
@@ -137,6 +151,39 @@ def make_serve_step(cfg: ModelConfig, comm: CommConfig, mesh=None, *,
             f"mesh {axes} has only the pod axis; the two-level fabric "
             "needs an in-pod data axis (make_serve_mesh builds one)")
     ctx = SyncContext.resolve(comm, data, pod, channel_indices=chans)
+    # the pure-local reference path: nothing to wire (same gate for the
+    # TP head, the gathering write and the expert exchange)
+    pure_local = n_shards == 1 and not chans and comm.mode == "gspmd"
+
+    # -- MoE expert-parallel dispatch/combine (the expert exchange) -----
+
+    ep = cfg.moe.num_experts // n_shards if cfg.family == "moe" else 0
+    use_ep = (cfg.family == "moe" and not pure_local
+              and cfg.moe.num_experts % n_shards == 0)
+
+    def ep_experts(mp, buf, _cfg, _shard_fn):
+        """Expert-parallel expert stage: all_to_all the dispatched
+        buffer peer-major (each peer gets EVERY batch row's slice of the
+        expert axis), run the local ``ep``-expert slice, reverse the
+        exchange. Data movement + identical per-expert einsums — tokens
+        are bit-identical to the local expert stage."""
+        b, e, cap, d = buf.shape
+        dt = buf.dtype
+        p_idx = jax.lax.axis_index(ctx.flat_axes)
+        snd = buf.astype(jnp.float32).reshape(b, n_shards, ep, cap, d)
+        snd = jnp.moveaxis(snd, 1, 0)                # (n, b, ep, c, d)
+        got = backend.serve_emit(snd.reshape(-1), ctx, "all_to_all")
+        got = got.reshape(n_shards * b, ep, cap, d)  # all rows, my slice
+        wslice = {w: jax.lax.dynamic_slice_in_dim(
+                      mp[w].astype(jnp.float32), p_idx * ep, ep, axis=0)
+                  for w in ("wi", "wg", "wo")}
+        out = moe_mod.apply_experts(wslice, got, cfg)
+        back = backend.serve_emit(out.reshape(-1), ctx, "all_to_all")
+        back = back.reshape(n_shards, b, ep, cap, d)
+        back = jnp.moveaxis(back, 0, 1).reshape(b, e, cap, d)
+        return back.astype(dt)
+
+    expert_fn = ep_experts if use_ep else None
 
     # -- tensor-parallel LM head (the serving logit reduction) ----------
 
@@ -168,8 +215,9 @@ def make_serve_step(cfg: ModelConfig, comm: CommConfig, mesh=None, *,
         local = jax.tree.map(
             lambda t: jax.lax.dynamic_slice_in_dim(t, p * bs, bs, axis=0),
             batch)
-        logits, cache = api.prefill(params, local, cfg, no_shard)
-        if n_shards == 1 and not chans and comm.mode == "gspmd":
+        logits, cache = api.prefill(params, local, cfg, no_shard,
+                                    expert_fn=expert_fn)
+        if pure_local:
             return logits, cache       # pure local reference, nothing to wire
 
         # ONE gathering write for the whole prefill result: every cache
@@ -184,11 +232,15 @@ def make_serve_step(cfg: ModelConfig, comm: CommConfig, mesh=None, *,
         g = backend.serve_emit(wire, ctx, "all_gather").reshape(n_shards, -1)
 
         outs, off = [], 0
-        n_cache = len(leaves) - 1      # flatten order: cache leaves, logits
-        for j, (leaf, n) in enumerate(zip(leaves, sizes)):
+        # flatten order: cache leaves then logits. Each cache leaf's
+        # batch axis is the family's DECLARED layout (cache_layout.py);
+        # the logits row always merges at axis 0 (this layer's own
+        # output contract, not a family fact).
+        bas = cache_layout.batch_axes(cfg.family, cache) + [0]
+        assert len(bas) == len(leaves), (len(bas), len(leaves))
+        for leaf, n, ba in zip(leaves, sizes, bas):
             seg = g[:, off:off + n].reshape((n_shards,) + leaf.shape)
             off += n
-            ba = 0 if j == n_cache else min(1, leaf.ndim - 1)
             m = jnp.moveaxis(seg, 0, ba)
             shape = leaf.shape
             merged = m.reshape(shape[:ba] + (n_shards * shape[ba],)
@@ -200,10 +252,9 @@ def make_serve_step(cfg: ModelConfig, comm: CommConfig, mesh=None, *,
     # -- replicated decode + TP logit reduction -------------------------
 
     def decode_body(params: PyTree, cache: PyTree, dec: dict):
-        head = None if (n_shards == 1 and not chans
-                        and comm.mode == "gspmd") else tp_head
+        head = None if pure_local else tp_head
         return api.decode_step(params, cache, dec, cfg, no_shard,
-                               logits_fn=head)
+                               logits_fn=head, expert_fn=expert_fn)
 
     prefill = jax.jit(compat.shard_map(
         prefill_body, mesh=mesh, in_specs=(P(), P()),

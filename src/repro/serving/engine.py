@@ -60,6 +60,10 @@ class Request:
     temperature: float = 0.0      # 0 -> greedy
     priority: int = 0             # admission-control rank: LOWER sheds
     #                               first under backpressure (supervisor)
+    tenant: str = ""              # multi-tenant routing key: names a
+    #                               ServeConfig.tenants entry ("" rides
+    #                               the first tenant; single-tenant
+    #                               groups ignore it)
 
     def __post_init__(self):
         self.prompt = np.asarray(self.prompt, np.int32)
@@ -416,7 +420,18 @@ def make_engine_group(cfg: ModelConfig, params: PyTree, serve: ServeConfig,
     reshard path (``launch/elastic.reshard_affinity`` keeps migrations
     minimal, so the resharded partition is deliberately NOT what
     ``channel_affinity`` would recompute) and the supervisor's rebuilds
-    both use it."""
+    both use it.
+
+    MULTI-TENANT form: with ``serve.tenants`` set, the loops are carved
+    into contiguous per-tenant ranges in declaration order (tenant 0
+    owns loops ``0..e0-1``, tenant 1 the next ``e1``, …) so channel
+    ownership stays disjoint per tenant, and ``cfg`` / ``params`` may
+    EACH be either a single value (every tenant serves the same model)
+    or a dict keyed by tenant name (heterogeneous families side by
+    side — one group, one channel pool, different engines per range).
+    The group then routes ``Request.tenant`` to the owning range with
+    deterministic weighted-fair scheduling (``EventLoopGroup``
+    docstring; docs/FAMILIES.md §Tenants and fairness)."""
     if serve.pods > 1 and mesh is None:
         from repro.launch.mesh import make_serve_mesh
         mesh = make_serve_mesh(serve.pods, serve.pod_axis)
@@ -438,11 +453,44 @@ def make_engine_group(cfg: ModelConfig, params: PyTree, serve: ServeConfig,
             leader_loops=serve.leader_loops)
     else:
         affinity = channel_affinity(serve.comm.channels, serve.event_loops)
+    bindings = []
+    loop_tenant = {}
+    start = 0
+    for t in serve.tenants:
+        ix = tuple(range(start, start + t.event_loops))
+        bindings.append((t.name, t.weight, ix))
+        for i in ix:
+            loop_tenant[i] = t.name
+        start += t.event_loops
+
+    names = {t.name for t in serve.tenants}
+
+    def resolve(v, what, always_dict=False):
+        # params is a pytree that is ITSELF a dict, so a dict is treated
+        # as per-tenant only when its keys touch the tenant names
+        per_tenant = isinstance(v, dict) and (
+            always_dict or (names and set(v) & names))
+        if not per_tenant:
+            return (lambda _name: v)
+        if not names:
+            raise ValueError(
+                f"{what} is a per-tenant dict but serve.tenants is empty: "
+                "heterogeneous groups need named tenants to route by")
+        if set(v) != names:
+            raise ValueError(
+                f"{what} keys {sorted(v)} must match the tenant names "
+                f"{sorted(names)} exactly (one model binding per tenant)")
+        return v.__getitem__
+
+    cfg_of = resolve(cfg, "cfg", always_dict=True)
+    params_of = resolve(params, "params")
     loops = []
     for i, chans in enumerate(affinity):
+        name = loop_tenant.get(i, "")
         loop = EventLoop(i, channels=chans, poll=serve.poll,
                          spin_s=serve.spin_us * 1e-6)
-        eng = DecodeEngine(cfg, params, max_batch=serve.max_batch,
+        eng = DecodeEngine(cfg_of(name), params_of(name),
+                           max_batch=serve.max_batch,
                            max_len=serve.max_len, eos_id=eos_id,
                            rng=jax.random.PRNGKey(seed + i), serve=serve,
                            mesh=mesh, channel_indices=chans,
@@ -450,4 +498,4 @@ def make_engine_group(cfg: ModelConfig, params: PyTree, serve: ServeConfig,
         loop.engine = eng
         loop.runner = lambda _loop, items, eng=eng: eng.generate(items)
         loops.append(loop)
-    return EventLoopGroup(loops)
+    return EventLoopGroup(loops, tenants=bindings or None)

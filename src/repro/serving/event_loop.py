@@ -270,15 +270,42 @@ class EventLoopGroup:
     """N event loops over one disjoint channel partition. ``submit``
     assigns items round-robin (paper §IV-C); ``run`` drains every loop —
     one OS thread per loop under ``threads=True`` (the multi-threaded
-    benchmark topology), in-line otherwise (deterministic debugging)."""
+    benchmark topology), in-line otherwise (deterministic debugging).
 
-    def __init__(self, loops: Sequence[EventLoop]):
+    MULTI-TENANT form: ``tenants`` is a sequence of ``(name, weight,
+    loop_indices)`` bindings that partition the loops (contiguous ranges
+    built by ``engine.make_engine_group`` from ``ServeConfig.tenants``).
+    ``submit`` then routes each item to ITS tenant's loops (round-robin
+    within the tenant) and orders a mixed batch with a deterministic
+    weighted-fair stride scheduler: the next dispatched item belongs to
+    the tenant minimizing ``(dispatched[t] + 1) / weight[t]``, ties
+    broken in declaration order — weights 2:1 yield the exact sequence
+    A A B A A B. The cumulative per-tenant counters persist on
+    ``fairness_counters`` and the per-item routing trace on
+    ``dispatch_log`` (both are what the fairness tests and the
+    family-matrix smoke assert on). Untagged items (``tenant`` empty or
+    absent) ride the first tenant; an unknown tenant name raises."""
+
+    def __init__(self, loops: Sequence[EventLoop],
+                 tenants: Optional[Sequence] = None):
         assert loops, "an EventLoopGroup needs at least one loop"
         owned = [c for l in loops for c in l.channels]
         assert len(owned) == len(set(owned)), \
             f"channel ownership must be disjoint: {[l.channels for l in loops]}"
         self.loops = list(loops)
         self._rr = 0
+        self.tenants = tuple(tenants) if tenants else ()
+        self._torder = [t[0] for t in self.tenants]
+        self._tweight = {n: w for n, w, _ in self.tenants}
+        self._tloops = {n: tuple(ix) for n, _, ix in self.tenants}
+        self._trr = {n: 0 for n in self._torder}
+        self.fairness_counters = {n: 0 for n in self._torder}
+        self.dispatch_log: list = []   # tenant name per routed item
+        if self.tenants:
+            allix = sorted(i for _, _, ix in self.tenants for i in ix)
+            assert allix == list(range(self.n_loops)), \
+                (f"tenant loop ranges must partition the group's "
+                 f"{self.n_loops} loops: {self._tloops}")
         self.loop_failures = 0    # loops whose drain raised, across runs —
         #                           the failure-propagation counter the
         #                           chaos harness and the threaded-run
@@ -294,12 +321,36 @@ class EventLoopGroup:
 
     def submit(self, items: Any) -> None:
         """Round-robin connection→loop assignment; accepts one item or a
-        sequence."""
+        sequence. With tenants, routes per tenant in weighted-fair
+        stride order (see the class docstring)."""
         if not isinstance(items, (list, tuple)):
             items = [items]
+        if not self.tenants:
+            for it in items:
+                self.loops[self._rr % self.n_loops].submit(it)
+                self._rr += 1
+            return
+        pending = {n: deque() for n in self._torder}
         for it in items:
-            self.loops[self._rr % self.n_loops].submit(it)
-            self._rr += 1
+            name = getattr(it, "tenant", "") or self._torder[0]
+            if name not in pending:
+                raise ValueError(
+                    f"unknown tenant {name!r}: this group serves "
+                    f"{self._torder} (Request.tenant must name one, or be "
+                    "empty to ride the first tenant)")
+            pending[name].append(it)
+        remaining = sum(len(q) for q in pending.values())
+        while remaining:
+            name = min((n for n in self._torder if pending[n]),
+                       key=lambda n: ((self.fairness_counters[n] + 1)
+                                      / self._tweight[n]))
+            it = pending[name].popleft()
+            ix = self._tloops[name]
+            self.loops[ix[self._trr[name] % len(ix)]].submit(it)
+            self._trr[name] += 1
+            self.fairness_counters[name] += 1
+            self.dispatch_log.append(name)
+            remaining -= 1
 
     def _record_failure(self, loop: EventLoop) -> None:
         self.loop_failures += 1

@@ -735,3 +735,138 @@ def test_bucket_collectives_depend_only_on_own_leaves(mode, compress, pack):
              f"buckets {sorted(ef_deps)}")
         buckets_hit.add(owners[0])
     assert buckets_hit == set(range(plan.n_buckets))
+
+
+# ---------------------------------------------------------------------------
+# Model-family serving conformance (docs/FAMILIES.md §The support matrix).
+# FAMILY_ARCH is indexed with EVERY family in the arch registry at
+# collection time (KeyError => a family shipped without a serving
+# conformance row) — the SUPPORTED_COMPRESS pattern applied to model
+# families. Each matrix row below is the named test a FAMILIES.md row
+# points at.
+# ---------------------------------------------------------------------------
+
+from repro.configs.registry import ARCH_IDS  # noqa: E402
+
+FAMILY_ARCH = {
+    "dense": "qwen2-0.5b-reduced",
+    "moe": "mixtral-8x7b-reduced",
+    "ssm": "rwkv6-7b-reduced",
+    "hybrid": "recurrentgemma-9b-reduced",
+    "encdec": "whisper-tiny-reduced",
+    "vlm": "llava-next-mistral-7b-reduced",
+}
+REGISTERED_FAMILIES = sorted({get_config(a).family for a in ARCH_IDS})
+FAMILY_CASES = [(f, FAMILY_ARCH[f])            # KeyError => no coverage
+                for f in REGISTERED_FAMILIES]
+
+
+def test_family_matrix_covers_registry_exactly():
+    """No registered family without a serving row, no stale rows."""
+    assert set(FAMILY_ARCH) == set(REGISTERED_FAMILIES)
+
+
+def test_every_family_declares_a_cache_layout():
+    """The gathering write is family-agnostic BECAUSE every family
+    declares its decode-state batch layout (the cache-layout contract,
+    docs/FAMILIES.md); an undeclared family must fail at build time
+    with an error naming the missing declaration."""
+    from repro.serving import cache_layout
+    for fam in REGISTERED_FAMILIES:
+        assert cache_layout.layout_for(fam) is not None
+    with pytest.raises(ValueError, match="declares no cache layout"):
+        cache_layout.layout_for("made-up-family")
+
+
+@functools.lru_cache(maxsize=None)
+def _family_model(family):
+    from repro.models import api
+    cfg = get_config(FAMILY_ARCH[family])
+    params = api.init(jax.random.PRNGKey(0), cfg)
+    return cfg, params
+
+
+def _family_batch(cfg, b=2, s=8):
+    rng = np.random.default_rng(0)
+    batch = {"tokens": jnp.asarray(
+        rng.integers(0, cfg.vocab_size, size=(b, s)), jnp.int32)}
+    if cfg.family not in ("ssm", "hybrid"):
+        batch["last_pos"] = jnp.asarray([s - 3, s - 1], jnp.int32)
+    if cfg.family == "vlm":
+        batch["patches"] = jnp.zeros((b, cfg.num_patches, cfg.d_model),
+                                     jnp.dtype(cfg.compute_dtype))
+    if cfg.family == "encdec":
+        batch["frames"] = jnp.zeros((b, cfg.num_frames, cfg.d_model),
+                                    jnp.dtype(cfg.compute_dtype))
+    return batch
+
+
+@functools.lru_cache(maxsize=None)
+def _family_outputs(family, mode):
+    """(prefill logits, grown-cache leaves, one-step decode logits) of
+    the dispatch-built serve step for (family, mode) on fixed inputs."""
+    from repro.models import api
+    from repro.serving import dispatch as serve_dispatch
+    cfg, params = _family_model(family)
+    step = serve_dispatch.make_serve_step(cfg, _serve_comm(mode))
+    batch = _family_batch(cfg)
+    lg, cache = step.prefill(params, batch)
+    cache = api.grow_cache(cfg, cache, 16)
+    tok = jnp.argmax(lg, -1).astype(jnp.int32)
+    pos = (jnp.asarray([6, 8], jnp.int32) if "last_pos" in batch
+           else jnp.asarray(8, jnp.int32))
+    dl, _ = step.decode(params, cache, {"token": tok, "pos": pos})
+    return (np.asarray(lg),
+            tuple(np.asarray(l) for l in jax.tree.leaves(cache)),
+            np.asarray(dl))
+
+
+@pytest.mark.parametrize("family", [f for f, _ in FAMILY_CASES])
+@pytest.mark.parametrize("mode", HADRONIO_FAMILY)
+def test_family_serving_bitwise_vs_solo(family, mode):
+    """docs/FAMILIES.md matrix row: EVERY registered family's sharded
+    prefill (per-family cache layout through the one gathering write),
+    decode-state and one-step decode logits are BIT-identical between
+    the pure-local gspmd reference and the mode's wire path — the
+    transparency claim, per family, per hadronio-family mode."""
+    ref = _family_outputs(family, "gspmd")
+    got = _family_outputs(family, mode)
+    np.testing.assert_array_equal(got[0], ref[0])
+    assert len(got[1]) == len(ref[1])
+    for a, b in zip(got[1], ref[1]):
+        np.testing.assert_array_equal(a, b)
+    np.testing.assert_array_equal(got[2], ref[2])
+
+
+def test_moe_expert_exchange_flows_through_staged_alltoall():
+    """docs/FAMILIES.md MoE row evidence: expert-parallel
+    dispatch/combine is the staged emission API's all_to_all kind — the
+    serve step's channels NOTE all_to_all at trace time (the chaos
+    hook), and the traced decode jaxpr carries the all_to_all
+    primitive. At >1 device the lowered module keeps stablehlo
+    all-to-all ops (a size-1 exchange folds away locally, which is the
+    point: same program, the wire appears with the ring)."""
+    from repro.core import channels
+    from repro.models import api
+    from repro.serving import dispatch as serve_dispatch
+    cfg, params = _family_model("moe")
+    comm = _serve_comm("hadronio", slice_bytes=768)   # un-memoized step
+    kinds = []
+    channels.set_collective_hook(lambda idx, kind: kinds.append(kind))
+    try:
+        step = serve_dispatch.make_serve_step(cfg, comm)
+        batch = _family_batch(cfg)
+        lg, cache = step.prefill(params, batch)
+    finally:
+        channels.clear_collective_hook()
+    assert "all_to_all" in kinds, kinds
+    cache = api.grow_cache(cfg, cache, 16)
+    dec = {"token": jnp.argmax(lg, -1).astype(jnp.int32),
+           "pos": jnp.asarray([6, 8], jnp.int32)}
+    txt = str(jax.make_jaxpr(step.decode)(params, cache, dec))
+    assert "all_to_all" in txt
+    if jax.device_count() > 1:
+        from repro.launch import hlo_analysis as hlo
+        low = serve_dispatch.lowered_decode_text(cfg, comm)
+        st = hlo.stablehlo_collective_stats(low)
+        assert st.counts.get("all-to-all", 0) > 0, st.counts

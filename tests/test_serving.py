@@ -253,3 +253,130 @@ def test_serve_config_validation():
         ServeConfig(event_loops=8,
                     comm=CommConfig(mode="hadronio", channels=4,
                                     hierarchical=False))
+
+
+# ---------------------------------------------------------------------------
+# Multi-tenant groups (docs/FAMILIES.md §Tenants and fairness)
+# ---------------------------------------------------------------------------
+
+
+def test_tenant_config_validation():
+    from repro.configs.base import TenantConfig
+    with pytest.raises(ValueError, match="unique"):
+        ServeConfig(event_loops=2,
+                    comm=CommConfig(mode="hadronio", channels=4,
+                                    hierarchical=False),
+                    tenants=(TenantConfig("a"), TenantConfig("a")))
+    with pytest.raises(ValueError, match="weight"):
+        ServeConfig(event_loops=2,
+                    comm=CommConfig(mode="hadronio", channels=4,
+                                    hierarchical=False),
+                    tenants=(TenantConfig("a", weight=0),
+                             TenantConfig("b")))
+    with pytest.raises(ValueError, match="pin the fleet size"):
+        ServeConfig(event_loops=4,
+                    comm=CommConfig(mode="hadronio", channels=4,
+                                    hierarchical=False),
+                    tenants=(TenantConfig("a"), TenantConfig("b")))
+
+
+@pytest.fixture(scope="module")
+def rwkv():
+    cfg = get_config("rwkv6-7b-reduced")
+    params = api.init(jax.random.PRNGKey(1), cfg)
+    return cfg, params
+
+
+def _two_tenant_serve(wa=2, wb=1):
+    from repro.configs.base import TenantConfig
+    return ServeConfig(
+        event_loops=2, poll="busy", max_batch=4, max_len=64,
+        comm=CommConfig(mode="hadronio", channels=4, slice_bytes=1024,
+                        hierarchical=False),
+        tenants=(TenantConfig("qwen", arch="qwen2-0.5b", weight=wa,
+                              event_loops=1),
+                 TenantConfig("rwkv", arch="rwkv6-7b", weight=wb,
+                              event_loops=1)))
+
+
+def test_two_families_one_group_tokens_identical(qwen, rwkv):
+    """The acceptance row: a dense and an ssm model served side by side
+    in ONE EventLoopGroup (per-tenant loop/channel ranges) produce
+    greedy tokens bit-identical to each model's single-tenant run."""
+    cfg_a, p_a = qwen
+    cfg_b, p_b = rwkv
+    rng = np.random.default_rng(3)
+    reqs = []
+    for uid in range(6):
+        t = "qwen" if uid % 2 == 0 else "rwkv"
+        v = (cfg_a if t == "qwen" else cfg_b).vocab_size
+        reqs.append(Request(uid, rng.integers(1, v, size=8), max_new=4,
+                            tenant=t))
+    grp = make_engine_group({"qwen": cfg_a, "rwkv": cfg_b},
+                            {"qwen": p_a, "rwkv": p_b},
+                            _two_tenant_serve())
+    grp.submit(reqs)
+    res = {r.uid: tuple(r.tokens.tolist()) for r in grp.run(threads=False)}
+    assert grp.fairness_counters == {"qwen": 3, "rwkv": 3}
+    for t, (c, p) in (("qwen", qwen), ("rwkv", rwkv)):
+        solo = ServeConfig(event_loops=1, poll="busy", max_batch=4,
+                           max_len=64,
+                           comm=CommConfig(mode="hadronio", channels=2,
+                                           hierarchical=False))
+        g1 = make_engine_group(c, p, solo)
+        mine = [Request(r.uid, r.prompt, max_new=r.max_new)
+                for r in reqs if r.tenant == t]
+        g1.submit(mine)
+        ref = {r.uid: tuple(r.tokens.tolist())
+               for r in g1.run(threads=False)}
+        assert {u: res[u] for u in ref} == ref, t
+
+
+def test_weighted_fair_dispatch_is_deterministic(qwen, rwkv):
+    """The stride scheduler: weights 2:1 dispatch in the exact sequence
+    A A B A A B…, ties broken in declaration order, and the per-tenant
+    counters plus the routing trace are reproducible run to run."""
+    cfg_a, p_a = qwen
+    cfg_b, p_b = rwkv
+    logs = []
+    for _ in range(2):
+        grp = make_engine_group({"qwen": cfg_a, "rwkv": cfg_b},
+                                {"qwen": p_a, "rwkv": p_b},
+                                _two_tenant_serve(wa=2, wb=1))
+        reqs = [Request(u, np.arange(6) % cfg_a.vocab_size, max_new=0,
+                        tenant="qwen") for u in range(6)]
+        reqs += [Request(6 + u, np.arange(6) % cfg_b.vocab_size,
+                         max_new=0, tenant="rwkv") for u in range(3)]
+        grp.submit(reqs)
+        logs.append(list(grp.dispatch_log))
+        assert grp.dispatch_log == ["qwen", "qwen", "rwkv"] * 3
+        assert grp.fairness_counters == {"qwen": 6, "rwkv": 3}
+    assert logs[0] == logs[1]
+
+
+def test_tenant_routing_rules(qwen):
+    """Untagged requests ride the FIRST tenant; an unknown tenant name
+    is rejected at submit (never silently misrouted)."""
+    cfg, params = qwen
+    grp = make_engine_group(cfg, params, _two_tenant_serve())
+    grp.submit(Request(0, np.arange(4) % cfg.vocab_size, max_new=0))
+    assert grp.dispatch_log == ["qwen"]
+    with pytest.raises(ValueError, match="unknown tenant"):
+        grp.submit(Request(1, np.arange(4) % cfg.vocab_size, max_new=0,
+                           tenant="nobody"))
+
+
+def test_heterogeneous_bindings_validated(qwen):
+    """A per-tenant cfg/params dict must key exactly the tenant names;
+    per-tenant dicts without tenants are rejected."""
+    cfg, params = qwen
+    with pytest.raises(ValueError, match="tenant names"):
+        make_engine_group({"qwen": cfg, "other": cfg},
+                          {"qwen": params, "other": params},
+                          _two_tenant_serve())
+    with pytest.raises(ValueError, match="serve.tenants is empty"):
+        make_engine_group(
+            {"qwen": cfg}, {"qwen": params},
+            ServeConfig(event_loops=1,
+                        comm=CommConfig(mode="hadronio", channels=2,
+                                        hierarchical=False)))
