@@ -1,0 +1,84 @@
+"""Perf-regression gate CLI: diff two BENCH_*.json artifacts.
+
+    python benchmarks/bench_diff.py BENCH_baseline.json BENCH_candidate.json
+
+Exits 0 when every shared row is within its tolerance band, 1 on any
+regression (and, with --strict-missing, on rows the candidate dropped).
+Policy and band semantics live in repro.obs.baseline; per-row overrides:
+
+    --tol 'rtt_*=0.25'            custom rel band (glob on metric or
+                                  benchmark:metric; first match wins)
+    --tol 'serving_rtt:p99*=0.5'
+    --ignore 'obs:*'              force-ignore matching rows
+    --tol-measured 1.0            default band for measured time rows
+    --tol-derived-time 0.05       default band for derived time rows
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.obs import baseline as bl
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        description="Compare two BENCH_*.json artifacts with tolerance "
+                    "bands; exit non-zero on regression.")
+    ap.add_argument("baseline", help="baseline BENCH_*.json")
+    ap.add_argument("candidate", help="candidate BENCH_*.json")
+    ap.add_argument("--tol-measured", type=float, default=1.0,
+                    help="rel band for measured time rows (default 1.0 "
+                         "= 2x; CI wall-clock is noisy)")
+    ap.add_argument("--tol-derived-time", type=float, default=0.05,
+                    help="rel band for derived/model time rows")
+    ap.add_argument("--tol", action="append", default=[],
+                    metavar="GLOB=REL",
+                    help="override: metric glob -> rel band "
+                         "(lower-is-better); repeatable, first match "
+                         "wins")
+    ap.add_argument("--ignore", action="append", default=[],
+                    metavar="GLOB", help="force-ignore matching rows")
+    ap.add_argument("--strict-missing", action="store_true",
+                    help="fail when the candidate drops baseline rows")
+    ap.add_argument("--verbose", action="store_true",
+                    help="print every delta, not just the notable ones")
+    args = ap.parse_args(argv)
+
+    overrides = []
+    for spec in args.tol:
+        if "=" not in spec:
+            ap.error(f"--tol expects GLOB=REL, got {spec!r}")
+        pat, rel = spec.rsplit("=", 1)
+        overrides.append((pat, bl.Tolerance(rel=float(rel),
+                                            direction="lower_is_better")))
+
+    rep = bl.diff_files(args.baseline, args.candidate,
+                        tol_measured=args.tol_measured,
+                        tol_derived_time=args.tol_derived_time,
+                        overrides=overrides, ignore=args.ignore)
+
+    notable = ("regression", "improved", "missing", "added")
+    for d in rep.deltas:
+        if args.verbose or d.status in notable:
+            print(d.describe())
+    print(f"bench_diff: {rep.summary() or 'no comparable rows'}  "
+          f"({args.baseline} -> {args.candidate})")
+
+    if rep.regressions:
+        print(f"bench_diff: FAIL — {len(rep.regressions)} regression(s) "
+              "outside tolerance", file=sys.stderr)
+        return 1
+    if args.strict_missing and rep.of("missing"):
+        print(f"bench_diff: FAIL — {len(rep.of('missing'))} baseline "
+              "row(s) missing from candidate", file=sys.stderr)
+        return 1
+    print("bench_diff: OK")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -196,3 +196,19 @@ def derived_collective_time(stats: hlo.CollectiveStats, n_ops_latency_us:
     """v5e analytic time: per-op fixed cost + bytes over ICI bandwidth."""
     return (stats.total_ops * n_ops_latency_us * 1e-6
             + stats.total_bytes / hlo.ICI_BW)
+
+
+def metrics_rows(benchmark: str, snapshot: dict, *,
+                 mode: str = "obs") -> list:
+    """Flatten an obs registry snapshot's DETERMINISTIC half (counters +
+    gauges — repro/obs/metrics.py) into derived Rows, metric-named
+    ``obs:<key>``. Unit is ``count``, which the bench_diff default
+    policy ignores — these rows ride the artifact for inspection and
+    are gated by the telemetry determinism tests, not tolerance bands."""
+    rows = []
+    for section in ("counters", "gauges"):
+        for key, value in sorted(snapshot.get(section, {}).items()):
+            rows.append(Row(benchmark, "obs-snapshot", mode, 0, 0,
+                            f"obs:{key}", float(value), "count",
+                            "derived"))
+    return rows

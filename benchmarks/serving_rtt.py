@@ -293,15 +293,45 @@ def main() -> int:
                         "percentiles x pod count x emission "
                         "{flat, hierarchical} + cross-pod collective "
                         "evidence rows)")
+    p.add_argument("--trace-out", default="",
+                   help="write a Chrome-trace JSON of the bench's spans "
+                        "(drains, staged emissions from the dispatch-"
+                        "evidence lowering) here")
+    p.add_argument("--metrics-out", default="",
+                   help="write the obs registry snapshot (poll/emission "
+                        "counters of the bench run) here")
     args = p.parse_args()
     common.set_run_seed(args.seed)
+    if args.trace_out:
+        from repro import obs
+        obs.enable()
+        # the dispatch-evidence lowering must trace FRESH programs or a
+        # warm serve-step cache yields an emission-span-free trace
+        from repro.serving import dispatch
+        dispatch.clear_serve_step_cache()
     if args.topo:
         rows = run_topo(iters=args.iters, smoke=args.smoke)
     else:
         rows = run(iters=args.iters, poll=args.poll, smoke=args.smoke)
+    if args.metrics_out:
+        from repro import obs
+        reg = obs.collect(mode="bench")
+        with open(args.metrics_out, "w") as f:
+            f.write(reg.to_json())
+        # the deterministic half also rides the row artifact (unit
+        # "count": inspectable in BENCH_*.json, ignored by bench_diff)
+        rows.extend(common.metrics_rows("serving_rtt", reg.snapshot(),
+                                        mode="bench"))
+        print(f"[serving_rtt] metrics snapshot -> {args.metrics_out}")
     text = write_rows(rows, args.csv or None)
     if args.json:
         write_json(rows, args.json)
+    if args.trace_out:
+        from repro import obs
+        rec = obs.disable()
+        doc = rec.write(args.trace_out)
+        print(f"[serving_rtt] span trace -> {args.trace_out} "
+              f"({len(doc['traceEvents'])} spans, kinds={rec.kinds()})")
     print(text)
     return 0
 

@@ -73,7 +73,10 @@ Backends compose these; none of them re-implements a stage.
 """
 from __future__ import annotations
 
+import contextlib
+import contextvars
 from dataclasses import dataclass, field
+from typing import Any
 
 import jax
 import jax.numpy as jnp
@@ -86,6 +89,7 @@ from repro.core.flush_scheduler import (FlushPlan, make_flush_plan,
                                         make_leader_plan)
 from repro.core.hierarchical import in_group_size
 from repro.core.selector import barrier
+from repro.obs import trace as obs_trace
 
 from repro.core.backends.base import SyncContext
 
@@ -154,6 +158,36 @@ class EmissionStats:
 
 EMISSION_STATS = EmissionStats()
 
+# Scoped emission stats: mutation sites write to the ACTIVE scope — the
+# module global unless a stats_scope() is armed on this context. Scopes
+# are contextvars, so parallel tests and the supervisor's worker threads
+# stop racing on global resets; code that never arms a scope (and the
+# default scope itself) sees the historical module-global behavior
+# unchanged.
+_STATS_SCOPE: contextvars.ContextVar = contextvars.ContextVar(
+    "emission_stats", default=None)
+
+
+def current_stats() -> EmissionStats:
+    """The EmissionStats all mutation sites write to: the innermost
+    armed :func:`stats_scope`, else the module-global ``EMISSION_STATS``."""
+    st = _STATS_SCOPE.get()
+    return EMISSION_STATS if st is None else st
+
+
+@contextlib.contextmanager
+def stats_scope(stats: EmissionStats = None):
+    """Arm a private EmissionStats for the duration of the block (and
+    any jit TRACING it triggers — the counters are trace-time). Yields
+    the scoped stats; nested scopes shadow, the module global is the
+    default scope when none is armed."""
+    st = EmissionStats() if stats is None else stats
+    tok = _STATS_SCOPE.set(st)
+    try:
+        yield st
+    finally:
+        _STATS_SCOPE.reset(tok)
+
 
 def set_alloc_hook(hook) -> None:
     """Install ``hook(channel_index, nbytes)`` on every staged wire-buffer
@@ -178,7 +212,7 @@ def fault_active() -> bool:
 
 
 def _consult_alloc(channel_index: int, flats: list) -> None:
-    EMISSION_STATS.allocs += 1
+    current_stats().allocs += 1
     if _ALLOC_HOOK is not None:
         nbytes = sum(int(f.size) * f.dtype.itemsize for f in flats)
         _ALLOC_HOOK(channel_index, nbytes)
@@ -326,6 +360,7 @@ class EmitState:
     #                               in-pod intermediate (awaiting leader)
     lpad: dict = field(default_factory=dict)     # local lane id -> zero
     #                               pad added for in-pod divisibility
+    span: Any = None              # open obs emission-span token (or None)
 
 
 def _unpack_flush(buf: jax.Array, comm: CommConfig) -> jax.Array:
@@ -414,6 +449,15 @@ def _stage_local(st: EmitState, c: int, flats: list) -> None:
 
 
 def _flush_leader(st: EmitState, l: int) -> None:
+    if not obs_trace.enabled():
+        return _flush_leader_impl(st, l)
+    with obs_trace.span("leader_flush", f"lead{st.leads[l].index}",
+                        channel=st.leads[l].index,
+                        lanes=len(st.lplan.groups[l])):
+        return _flush_leader_impl(st, l)
+
+
+def _flush_leader_impl(st: EmitState, l: int) -> None:
     """The CROSS-POD stage: ONE coalesced leader-lane collective carrying
     every parked in-pod intermediate of the local lanes assigned to
     leader ``l``, carved back per lane, then the in-pod return stage
@@ -454,6 +498,15 @@ def _flush_leader(st: EmitState, l: int) -> None:
 
 
 def _flush_channel(st: EmitState, c: int) -> None:
+    if not obs_trace.enabled():
+        return _flush_channel_impl(st, c)
+    with obs_trace.span("flush", f"ch{st.chans[c].index}",
+                        channel=st.chans[c].index,
+                        items=len(st.plan.groups[c])):
+        return _flush_channel_impl(st, c)
+
+
+def _flush_channel_impl(st: EmitState, c: int) -> None:
     """One coalesced wire flush: concatenate the channel's staged items
     into a single contiguous buffer, issue ONE collective, optionally run
     the unpack stage on the flushed buffer, carve the results back out
@@ -527,10 +580,22 @@ def begin_emission(ctx: SyncContext, n_items: int, kind: str, *,
         st.lplan = make_leader_plan(plan.n_channels, len(leads),
                                     ctx.comm.flush)
         st.lfills = [ChannelFill(frozenset(g)) for g in st.lplan.groups]
+    if obs_trace.enabled():
+        st.span = obs_trace.begin(
+            "emission", kind, items=n_items, channels=len(local),
+            leaders=len(leads), aggregate=ctx.comm.aggregate,
+            flush=ctx.comm.flush)
     return st
 
 
 def stage_slices(st: EmitState, i: int, wire: jax.Array) -> list:
+    if not obs_trace.enabled():
+        return _stage_slices_impl(st, i, wire)
+    with obs_trace.span("stage", f"item{i}", item=i):
+        return _stage_slices_impl(st, i, wire)
+
+
+def _stage_slices_impl(st: EmitState, i: int, wire: jax.Array) -> list:
     """Stage item ``i``'s wire bytes (items MUST be staged in production
     order, 0..n-1) and emit whatever that makes ready:
 
@@ -585,10 +650,10 @@ def flush_ready(st: EmitState) -> list:
                     # flush_ready retries it and finish_emission's step
                     # barrier flushes it unconditionally — the recovery
                     # invariant the chaos harness asserts
-                    EMISSION_STATS.drops += 1
+                    current_stats().drops += 1
                     continue
                 if act == "dup" and not st.leads:
-                    EMISSION_STATS.dups += 1
+                    current_stats().dups += 1
                     _flush_channel(st, c)   # shadow flush: idempotent —
                     #                         outs re-carved from an equal
                     #                         collective result below
@@ -617,6 +682,9 @@ def finish_emission(st: EmitState) -> list:
                     (l, fill.watermark)
                 _flush_leader(st, l)
     assert all(o is not None for o in st.outs), "emission incomplete"
+    if st.span is not None:
+        obs_trace.end(st.span)
+        st.span = None
     return st.outs
 
 

@@ -38,6 +38,7 @@ import time
 import jax
 import numpy as np
 
+from repro import obs
 from repro.configs.registry import get_config
 from repro.configs.base import CommConfig, ServeConfig, TenantConfig
 from repro.checkpoint import CheckpointStore
@@ -156,7 +157,19 @@ def main() -> int:
     p.add_argument("--scale-down-depth", type=float, default=-1.0,
                    help="backlog per loop that votes to shrink "
                         "(negative disables shrinking)")
+    # the Observatory telemetry plane (repro/obs, docs/OBSERVABILITY.md)
+    p.add_argument("--trace-out", default="",
+                   help="write a Chrome-trace/Perfetto JSON of the run's "
+                        "spans here (enables tracing; tokens stay "
+                        "bit-identical to an untraced run)")
+    p.add_argument("--metrics-out", default="",
+                   help="write the unified metrics snapshot (obs "
+                        "registry JSON: poll/emission/loop/tenant/"
+                        "supervisor counters) here")
     args = p.parse_args()
+
+    if args.trace_out:
+        obs.enable()
 
     tenants = parse_tenant_specs(args.tenant)
     if not tenants and not args.arch:
@@ -263,6 +276,20 @@ def main() -> int:
     for r in results[:4]:
         print(f"  uid={r.uid} prompt_len={r.prompt_len} -> "
               f"{r.tokens[:12].tolist()}")
+    if args.metrics_out:
+        reg = obs.collect(group=group, supervisor=sup,
+                          mode=args.comm_mode)
+        with open(args.metrics_out, "w") as f:
+            f.write(reg.to_json())
+        snap = reg.snapshot()
+        print(f"[serve] metrics snapshot -> {args.metrics_out} "
+              f"({len(snap['counters']) + len(snap['gauges'])} "
+              f"deterministic metrics)")
+    if args.trace_out:
+        rec = obs.disable()
+        doc = rec.write(args.trace_out)
+        print(f"[serve] span trace -> {args.trace_out} "
+              f"({len(doc['traceEvents'])} spans, kinds={rec.kinds()})")
     return 0
 
 

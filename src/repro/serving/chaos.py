@@ -61,6 +61,7 @@ from repro.core import channels as channels_mod
 from repro.core.backends import pipeline
 from repro.launch.elastic import reshard_affinity, reshard_event_loops
 from repro.serving import slo
+from repro.obs.metrics import RingLog
 from repro.serving.engine import Request, make_engine_group
 from repro.serving.event_loop import EventLoopGroup
 
@@ -176,14 +177,19 @@ class _Injector:
     actually fired — the runtime half of the replay evidence (inline
     drains make the fire order deterministic)."""
 
-    def __init__(self, plan: ChaosPlan, vocab_size: int, max_new: int = 1):
+    def __init__(self, plan: ChaosPlan, vocab_size: int, max_new: int = 1,
+                 evidence_capacity: int = 65536):
         self.plan = plan
         self.vocab_size = vocab_size
         self.max_new = max_new
         self.by_step = {e.step: e for e in plan.events}
-        self.fired: list = []
+        # bounded evidence rings (long supervised soaks must not grow
+        # memory; evictions count in .dropped) — drains stays a plain
+        # list: its length is the round-count invariant the harness
+        # asserts exactly
+        self.fired = RingLog(evidence_capacity)
         self.drains: list = []
-        self.emissions: list = []
+        self.emissions = RingLog(evidence_capacity)
         self._wait_counts: dict = {}
         self._flush_calls = 0
         self._storm_uids = 0

@@ -56,6 +56,7 @@ from repro.core.backends import get_backend
 from repro.core.backends.base import SyncContext
 from repro.launch.mesh import make_mesh
 from repro.models import api
+from repro.obs import trace as obs_trace
 from repro.models import moe as moe_mod
 from repro.models.layers import no_shard
 from repro.serving import cache_layout
@@ -101,6 +102,20 @@ def clear_serve_step_cache() -> None:
 def make_serve_step(cfg: ModelConfig, comm: CommConfig, mesh=None, *,
                     channel_indices: Optional[tuple] = None,
                     pod_axis: Optional[str] = None) -> ServeStep:
+    if not obs_trace.enabled():
+        return _make_serve_step(cfg, comm, mesh,
+                                channel_indices=channel_indices,
+                                pod_axis=pod_axis)
+    with obs_trace.span("build", f"serve_step:{cfg.name}",
+                        mode=comm.mode, channels=comm.channels):
+        return _make_serve_step(cfg, comm, mesh,
+                                channel_indices=channel_indices,
+                                pod_axis=pod_axis)
+
+
+def _make_serve_step(cfg: ModelConfig, comm: CommConfig, mesh=None, *,
+                     channel_indices: Optional[tuple] = None,
+                     pod_axis: Optional[str] = None) -> ServeStep:
     """Build the TAC serve step for one (model, comm, mesh, affinity)
     combination. ``channel_indices`` is the emitting event loop's owned
     run of the global channel pool (None = the full pool).

@@ -41,6 +41,7 @@ import numpy as np
 
 from repro.configs.base import ModelConfig, ServeConfig
 from repro.models import api
+from repro.obs import trace as obs_trace
 from repro.models.layers import no_shard
 from repro.serving import dispatch
 from repro.serving.event_loop import (EventLoop, EventLoopGroup, Poller,
@@ -219,9 +220,16 @@ class DecodeEngine:
         for i, r in enumerate(initial):
             toks[i, : lens[i]] = r.prompt
 
-        logits, cache = self._prefill(self.params,
-                                      self._prefill_batch(toks, lens))
-        self.poller.wait(logits)
+        if obs_trace.enabled():
+            with obs_trace.span("prefill", f"wave_b{b}", batch=b,
+                                pad_to=pad_to):
+                logits, cache = self._prefill(
+                    self.params, self._prefill_batch(toks, lens))
+                self.poller.wait(logits)
+        else:
+            logits, cache = self._prefill(self.params,
+                                          self._prefill_batch(toks, lens))
+            self.poller.wait(logits)
         cache = api.grow_cache(self.cfg, cache, self.max_len)
 
         slots: list = [_Slot(r, 0, []) for r in initial] \
@@ -285,7 +293,12 @@ class DecodeEngine:
                 break
             active = np.array([s is not None for s in slots])
             dec = {"token": tok, "pos": pos}
-            logits, cache = self._decode(self.params, cache, dec)
+            if obs_trace.enabled():
+                with obs_trace.span("decode", f"step{steps}", step=steps,
+                                    active=int(active.sum())):
+                    logits, cache = self._decode(self.params, cache, dec)
+            else:
+                logits, cache = self._decode(self.params, cache, dec)
             tok = self._sample(logits, temps)
             pos = jnp.where(jnp.asarray(active), pos + 1, pos)
         return results
@@ -307,9 +320,16 @@ class DecodeEngine:
                 break
             take = min(len(free), len(pending))
             batch = [pending.popleft() for _ in range(take)]
-            tok, cache, pos = self._admit_batch(
-                free[:take], batch, cache, pos, temps, tok, steps, slots,
-                results)
+            if obs_trace.enabled():
+                with obs_trace.span("admission", f"admit{take}", n=take,
+                                    step=steps):
+                    tok, cache, pos = self._admit_batch(
+                        free[:take], batch, cache, pos, temps, tok,
+                        steps, slots, results)
+            else:
+                tok, cache, pos = self._admit_batch(
+                    free[:take], batch, cache, pos, temps, tok, steps,
+                    slots, results)
         return tok, cache, pos
 
     def _admit_batch(self, free: list, reqs: list, cache: PyTree,

@@ -43,6 +43,8 @@ from typing import Any, Callable, Optional, Sequence
 import jax
 
 from repro.core import selector
+from repro.obs import trace as obs_trace
+from repro.obs.metrics import RingLog
 
 POLLS = ("busy", "park", "adaptive")
 
@@ -211,6 +213,8 @@ class EventLoop:
         self.failed_items: list = []      # in-flight batch of a failed drain
         self.heartbeats = 0               # drained batches, ever — liveness
         self.restarts = 0
+        self.lifetime_stats = PollStats()  # folded stats of RETIRED pollers
+        #                                    (restart() accumulates here)
         # chaos seam: called with (loop, items) per drained batch, BEFORE
         # the runner — the injection point for queue-level faults and the
         # deterministic drain trace (serving/chaos.py)
@@ -238,7 +242,13 @@ class EventLoop:
                 assert self.runner is not None, "event loop has no runner"
                 if self.drain_hook is not None:
                     self.drain_hook(self, items)
-                out.extend(self.runner(self, items))
+                if obs_trace.enabled():
+                    with obs_trace.span("drain", f"loop{self.index}",
+                                        loop=self.index,
+                                        items=len(items)):
+                        out.extend(self.runner(self, items))
+                else:
+                    out.extend(self.runner(self, items))
                 self.heartbeats += 1    # one beat per drained batch
         except BaseException as e:
             self.error = e
@@ -255,7 +265,11 @@ class EventLoop:
         cleared), forget the failure state, and re-point an attached
         engine at the new poller. The caller owns re-admitting
         ``failed_items``/queue contents; ``restarts`` counts how often
-        this loop needed healing."""
+        this loop needed healing. The retiring poller's counters fold
+        into ``lifetime_stats`` FIRST — a restart heals the loop, it
+        must not erase its history (supervisor EWMAs and the group's
+        merged ``poll_stats`` stay monotone across heals)."""
+        self.lifetime_stats = self.lifetime_stats.merge(self.poller.stats)
         self.poller = Poller(self.poller.poll, self.poller.spin_s)
         self.error = None
         self.failed_items = []
@@ -264,6 +278,11 @@ class EventLoop:
         if eng is not None:
             eng.poller = self.poller
         return self.poller
+
+    def poll_stats(self) -> PollStats:
+        """Lifetime poll counters: every retired poller's stats (folded
+        at each :meth:`restart`) merged with the live poller's."""
+        return self.lifetime_stats.merge(self.poller.stats)
 
 
 class EventLoopGroup:
@@ -287,7 +306,8 @@ class EventLoopGroup:
     absent) ride the first tenant; an unknown tenant name raises."""
 
     def __init__(self, loops: Sequence[EventLoop],
-                 tenants: Optional[Sequence] = None):
+                 tenants: Optional[Sequence] = None, *,
+                 dispatch_log_capacity: int = 65536):
         assert loops, "an EventLoopGroup needs at least one loop"
         owned = [c for l in loops for c in l.channels]
         assert len(owned) == len(set(owned)), \
@@ -300,7 +320,10 @@ class EventLoopGroup:
         self._tloops = {n: tuple(ix) for n, _, ix in self.tenants}
         self._trr = {n: 0 for n in self._torder}
         self.fairness_counters = {n: 0 for n in self._torder}
-        self.dispatch_log: list = []   # tenant name per routed item
+        # tenant name per routed item — a bounded ring (long-running
+        # serves must not grow memory; evictions count in .dropped and
+        # surface through the obs registry as group.dispatch_log_dropped)
+        self.dispatch_log = RingLog(dispatch_log_capacity)
         if self.tenants:
             allix = sorted(i for _, _, ix in self.tenants for i in ix)
             assert allix == list(range(self.n_loops)), \
@@ -400,5 +423,5 @@ class EventLoopGroup:
     def poll_stats(self) -> PollStats:
         st = PollStats()
         for l in self.loops:
-            st = st.merge(l.poller.stats)
+            st = st.merge(l.poll_stats())   # lifetime: survives restarts
         return st

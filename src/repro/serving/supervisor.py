@@ -17,8 +17,9 @@ admission queue, drain the fleet, then close the loop:
   EWMA per signal;
 * structured ``EventLoopGroup.failures`` records (loop index, exception
   repr, pending count) from non-raising drains;
-* ``pipeline.EMISSION_STATS.drops`` deltas — dropped flushes counted at
-  trace time;
+* ``pipeline.current_stats().drops`` deltas — dropped flushes counted at
+  trace time (the active :func:`pipeline.stats_scope`, module-global by
+  default);
 * a heartbeat deadline per loop (``EventLoop.heartbeats`` must advance
   whenever the loop had work) measured in ROUNDS, not seconds;
 * run-queue depth (admission backlog per loop) for autoscaling;
@@ -70,6 +71,7 @@ from repro.configs.base import ModelConfig, ServeConfig
 from repro.core import channels as channels_mod
 from repro.core.backends import pipeline
 from repro.launch.elastic import reshard_affinity, reshard_event_loops
+from repro.obs import trace as obs_trace
 from repro.serving import slo
 from repro.serving.engine import Request, make_engine_group
 from repro.serving.event_loop import EventLoop, PollStats
@@ -344,7 +346,7 @@ class Supervisor:
             "delays": {l.index: l.poller.stats.delays for l in g.loops},
             "beats": {l.index: l.heartbeats for l in g.loops},
             "dispatched": {l.index for l in g.loops if l.queue},
-            "drops": pipeline.EMISSION_STATS.drops,
+            "drops": pipeline.current_stats().drops,
             "failures": len(g.failures),
         }
 
@@ -362,6 +364,8 @@ class Supervisor:
         a = HealAction(self.rounds, kind, int(target), tuple(detail),
                        t_detect, time.perf_counter())
         self.trace.append(a)
+        obs_trace.complete("heal", kind, a.t_detect, a.t_heal,
+                           round=self.rounds, target=int(target))
         return a
 
     def _heal_failures(self, snap: dict, results: list) -> None:
@@ -422,7 +426,7 @@ class Supervisor:
                      (budget.limit, uids, repr(last)), t0)
 
     def _detect_reflush(self, snap: dict) -> None:
-        drops = pipeline.EMISSION_STATS.drops - snap["drops"]
+        drops = pipeline.current_stats().drops - snap["drops"]
         if drops > 0:
             t0 = time.perf_counter()
             # the staged-emission completeness contract already

@@ -446,6 +446,28 @@ def test_restart_replaces_poller_and_repoints_engine():
     assert eng.poller is fresh         # the engine polls the new one
 
 
+def test_restart_folds_poll_stats_into_lifetime():
+    """A restart must not LOSE the retired poller's counters: they fold
+    into ``lifetime_stats`` and keep surfacing through ``poll_stats()``
+    (the lifetime view) while the live poller starts from zero."""
+    loop = EventLoop(0, channels=(0,), runner=lambda l, items: items)
+    loop.poller.stats.waits = 5
+    loop.poller.stats.stalls = 2
+    loop.poller.stats.spins = 11
+    loop.restart()
+    assert loop.poller.stats.waits == 0            # fresh poller
+    assert loop.lifetime_stats.waits == 5
+    st = loop.poll_stats()
+    assert (st.waits, st.stalls, st.spins) == (5, 2, 11)
+    loop.poller.stats.waits = 3                    # second generation
+    loop.restart()
+    loop.poller.stats.waits = 1                    # third generation
+    assert loop.poll_stats().waits == 9            # 5 + 3 + 1
+    # and the group view aggregates lifetime, not just live pollers
+    grp = EventLoopGroup([loop])
+    assert grp.poll_stats().waits == 9
+
+
 # ---------------------------------------------------------------------------
 # Elastic reshard properties (launch/elastic.reshard_affinity): resize
 # sequences preserve the ownership invariants with MINIMAL migration
